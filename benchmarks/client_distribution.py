@@ -1,0 +1,22 @@
+"""Paper Figure 10: final per-client accuracy distribution."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SOLUTIONS, run_solution, write_csv
+
+
+def run(dataset="extrasensory"):
+    header = ["client"] + list(SOLUTIONS)
+    hists = {n: run_solution(dataset, n, spec) for n, spec in SOLUTIONS.items()}
+    c = next(iter(hists.values())).accuracy_per_client.shape[1]
+    rows = [[i] + [f"{hists[n].accuracy_per_client[-1][i]:.4f}" for n in SOLUTIONS] for i in range(c)]
+    for n in SOLUTIONS:
+        acc = hists[n].accuracy_per_client[-1]
+        print(f"  {n:12s} mean={acc.mean():.3f} min={acc.min():.3f} p10={np.percentile(acc,10):.3f}")
+    return write_csv("fig10_client_distribution", header, rows)
+
+
+if __name__ == "__main__":
+    run()

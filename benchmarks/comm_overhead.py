@@ -1,0 +1,26 @@
+"""Paper Figure 7: per-round transmitted data — decay + PMS effect."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import VARIANTS, run_solution, write_csv
+
+
+def run(dataset="uci-har"):
+    header = ["round"] + list(VARIANTS)
+    hists = {n: run_solution(dataset, n, spec) for n, spec in VARIANTS.items()}
+    rounds = len(next(iter(hists.values())).tx_params)
+    rows = []
+    for t in range(rounds):
+        rows.append([t] + [f"{hists[n].tx_params[t] * 4 / 1e6:.4f}" for n in VARIANTS])
+    # decay check: ACSP-FL variants must trend down; ND must stay flat
+    nd = hists["acsp-fl-nd"].tx_params
+    dld = hists["acsp-fl-dld"].tx_params
+    print(f"  ND first/last round MB: {nd[0]*4/1e6:.2f} / {nd[-1]*4/1e6:.2f} (flat)")
+    print(f"  DLD first/last round MB: {dld[0]*4/1e6:.2f} / {dld[-1]*4/1e6:.2f} (decaying)")
+    return write_csv("fig7_comm_per_round", header, rows)
+
+
+if __name__ == "__main__":
+    run()

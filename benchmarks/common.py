@@ -1,0 +1,76 @@
+"""Shared benchmark plumbing: experiment runner + CSV emission.
+
+Benchmarks mirror the paper's tables/figures on the synthetic HAR stand-ins
+(DESIGN.md §5 deviation 1): absolute accuracies differ from the paper's real
+datasets; the reproduction targets are the *relative* orderings and the
+communication-reduction percentages.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core.metrics import efficiency, overhead_reduction
+from repro.data import make_har_dataset
+from repro.fl import FLConfig, FLHistory, run_federated
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+# CPU-friendly scales (MotionSense's 47k samples/client would dominate runtime)
+DATASET_SCALE = {"uci-har": 1.0, "motionsense": 0.01, "extrasensory": 0.05}
+ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "40"))
+
+SOLUTIONS = {
+    "fedavg": dict(strategy="fedavg", personalization="none", fraction=1.0),
+    "poc": dict(strategy="poc", personalization="none", fraction=0.5),
+    "oort": dict(strategy="oort", personalization="none", fraction=0.5),
+    "deev": dict(strategy="deev", personalization="none", decay=0.005),
+    "acsp-fl-dld": dict(strategy="acsp-fl", personalization="dld", decay=0.005),
+}
+
+VARIANTS = {
+    "acsp-fl-nd": dict(strategy="acsp-fl", personalization="none", decay=0.0),
+    "acsp-fl-ft": dict(strategy="acsp-fl", personalization="ft", decay=0.005),
+    "acsp-fl-pms3": dict(strategy="acsp-fl", personalization="pms", pms_layers=3, decay=0.005),
+    "acsp-fl-pms2": dict(strategy="acsp-fl", personalization="pms", pms_layers=2, decay=0.005),
+    "acsp-fl-pms1": dict(strategy="acsp-fl", personalization="pms", pms_layers=1, decay=0.005),
+    "acsp-fl-dld": dict(strategy="acsp-fl", personalization="dld", decay=0.005),
+}
+
+_CACHE: dict = {}
+
+
+def run_solution(dataset: str, name: str, spec: dict, rounds: int = ROUNDS, seed: int = 0) -> FLHistory:
+    key = (dataset, name, rounds, seed)
+    if key not in _CACHE:
+        ds = make_har_dataset(dataset, seed=seed, scale=DATASET_SCALE[dataset])
+        cfg = FLConfig(rounds=rounds, epochs=2, seed=seed, **spec)
+        _CACHE[key] = run_federated(ds, cfg)
+    return _CACHE[key]
+
+
+def summarize(h: FLHistory, baseline: FLHistory | None = None) -> dict:
+    base_cost = baseline.round_time.sum() if baseline is not None else h.round_time.sum()
+    red = overhead_reduction(float(h.round_time.sum()), float(base_cost))
+    return {
+        "accuracy": float(h.accuracy_mean[-1]),
+        "tx_mb": float(h.tx_bytes_cum[-1] / 1e6),
+        "tx_mb_per_client": float(h.tx_bytes_cum[-1] / 1e6 / h.selected.shape[1]),
+        "convergence_time_s": float(h.round_time.sum()),
+        "efficiency": efficiency(float(h.accuracy_mean[-1]), red),
+        "selection_freq": float(h.selected.mean()),
+        "worst_client_acc": float(h.accuracy_per_client[-1].min()),
+    }
+
+
+def write_csv(name: str, header: list[str], rows: list[list]):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path

@@ -1,0 +1,78 @@
+"""Kernel microbenchmarks: wall time of the jnp reference paths on CPU
+(interpret-mode Pallas is a correctness harness, not a perf path — TPU is
+the target; see EXPERIMENTS.md §Roofline for the structural perf numbers).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import write_csv
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.masked_aggregate.ref import masked_aggregate_ref
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+from repro.models.layers import chunked_attention
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run():
+    rows = []
+    rng = jax.random.PRNGKey(0)
+
+    # attention: ref vs chunked (the lowering path)
+    b, s, h, d = 1, 512, 8, 64
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    pos = jnp.arange(s)
+    ref = jax.jit(lambda q, k, v: flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)))
+    chk = jax.jit(lambda q, k, v: chunked_attention(q, k, v, pos, pos, chunk=128))
+    us_ref = _time(ref, q, k, v)
+    us_chk = _time(chk, q, k, v)
+    rows.append(["attention_naive_512", f"{us_ref:.0f}", "materialises SxS"])
+    rows.append(["attention_chunked_512", f"{us_chk:.0f}", f"{us_ref/us_chk:.2f}x vs naive"])
+    print(f"  attention 512: naive {us_ref:.0f}us chunked {us_chk:.0f}us")
+
+    # masked aggregate (paper Eq. 1 server hot spot), 30 clients x MLP params
+    c, p = 30, 276_742
+    x = jax.random.normal(rng, (c, p))
+    w = jnp.ones((c,))
+    fb = jnp.zeros((p,))
+    agg = jax.jit(masked_aggregate_ref)
+    us_agg = _time(agg, x, w, fb)
+    rows.append(["masked_aggregate_30x277k", f"{us_agg:.0f}", "per-round server cost"])
+    print(f"  masked_aggregate 30x277k: {us_agg:.0f}us")
+
+    # ssm scan
+    bb, ss, di, ds_ = 1, 512, 128, 16
+    ks = jax.random.split(rng, 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (bb, ss, di))) * 0.1
+    a = -jnp.exp(jax.random.normal(ks[1], (di, ds_)) * 0.3)
+    bm = jax.random.normal(ks[2], (bb, ss, ds_))
+    cm = jax.random.normal(ks[3], (bb, ss, ds_))
+    xx = jax.random.normal(ks[4], (bb, ss, di))
+    dd = jnp.ones((di,))
+    scan = jax.jit(lambda *a_: ssm_scan_ref(*a_)[0])
+    us_ssm = _time(scan, dt, a, bm, cm, xx, dd)
+    rows.append(["ssm_scan_512x128", f"{us_ssm:.0f}", "sequential reference"])
+    print(f"  ssm_scan 512x128: {us_ssm:.0f}us")
+
+    return write_csv("kernel_bench", ["name", "us_per_call", "derived"], rows)
+
+
+if __name__ == "__main__":
+    run()

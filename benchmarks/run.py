@@ -1,0 +1,58 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+Emits CSVs to experiments/bench/ and prints name,us_per_call,derived lines.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer rounds / datasets")
+    args = ap.parse_args()
+    if args.quick:
+        os.environ["REPRO_BENCH_ROUNDS"] = "10"
+
+    from benchmarks import (
+        client_distribution,
+        comm_overhead,
+        kernel_bench,
+        roofline,
+        selection_frequency,
+        table3_variants,
+        table4_literature,
+    )
+
+    suites = [
+        ("table3_variants (paper Table 3 / Fig 6)", table3_variants.run),
+        ("table4_literature (paper Table 4 / Fig 8)", table4_literature.run),
+        ("comm_overhead (paper Fig 7)", comm_overhead.run),
+        ("client_distribution (paper Fig 10)", client_distribution.run),
+        ("selection_frequency (paper Fig 11)", selection_frequency.run),
+        ("kernel_bench", kernel_bench.run),
+        ("roofline (deliverable g)", roofline.run),
+    ]
+    t00 = time.time()
+    for name, fn in suites:
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        try:
+            path = fn()
+            print(f"-> {path} ({time.time()-t0:.0f}s)")
+        except Exception as e:  # keep the harness going; report at the end
+            import traceback
+
+            traceback.print_exc()
+            print(f"!! {name} FAILED: {e}")
+            sys.exit(1)
+    print(f"\nall benchmarks done in {time.time()-t00:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Paper Figure 11: how many times each client is selected per solution."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SOLUTIONS, run_solution, write_csv
+
+
+def run(dataset="uci-har"):
+    header = ["client"] + list(SOLUTIONS)
+    hists = {n: run_solution(dataset, n, spec) for n, spec in SOLUTIONS.items()}
+    c = next(iter(hists.values())).selected.shape[1]
+    rows = [[i] + [int(hists[n].selected[:, i].sum()) for n in SOLUTIONS] for i in range(c)]
+    for n in SOLUTIONS:
+        sel = hists[n].selected.sum(axis=0)
+        print(f"  {n:12s} mean_selections={sel.mean():.1f} max={sel.max()}")
+    return write_csv("fig11_selection_frequency", header, rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Paper Table 3 / Figure 6: ACSP-FL variants (ND, FT, PMS 1-3, DLD) —
+accuracy, TX bytes, convergence time, efficiency — per dataset."""
+
+from __future__ import annotations
+
+from benchmarks.common import VARIANTS, run_solution, summarize, write_csv
+
+DATASETS = ["uci-har", "motionsense", "extrasensory"]
+
+
+def run(rounds=None, datasets=DATASETS):
+    header = ["dataset", "solution", "accuracy", "tx_mb", "tx_mb_per_client",
+              "convergence_time_s", "efficiency", "selection_freq", "worst_client_acc"]
+    rows = []
+    for ds in datasets:
+        base = run_solution(ds, "acsp-fl-nd", VARIANTS["acsp-fl-nd"])
+        for name, spec in VARIANTS.items():
+            h = run_solution(ds, name, spec)
+            s = summarize(h, base)
+            rows.append([ds, name] + [f"{s[k]:.4g}" for k in header[2:]])
+            print(f"  {ds:13s} {name:13s} acc={s['accuracy']:.3f} tx={s['tx_mb']:9.2f}MB eff={s['efficiency']:.2f}")
+    return write_csv("table3_variants", header, rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Paper Table 4 / Figure 8: ACSP-FL DLD vs FedAvg, POC, Oort, DEEV."""
+
+from __future__ import annotations
+
+from benchmarks.common import SOLUTIONS, run_solution, summarize, write_csv
+
+DATASETS = ["uci-har", "motionsense", "extrasensory"]
+
+
+def run(datasets=DATASETS):
+    header = ["dataset", "solution", "accuracy", "tx_mb", "tx_mb_per_client",
+              "convergence_time_s", "efficiency", "selection_freq", "worst_client_acc",
+              "comm_reduction_vs_fedavg"]
+    rows = []
+    for ds in datasets:
+        base = run_solution(ds, "fedavg", SOLUTIONS["fedavg"])
+        for name, spec in SOLUTIONS.items():
+            h = run_solution(ds, name, spec)
+            s = summarize(h, base)
+            red = 1.0 - h.tx_bytes_cum[-1] / base.tx_bytes_cum[-1]
+            rows.append([ds, name] + [f"{s[k]:.4g}" for k in header[2:-1]] + [f"{red:.3f}"])
+            print(f"  {ds:13s} {name:12s} acc={s['accuracy']:.3f} tx={s['tx_mb']:9.2f}MB "
+                  f"eff={s['efficiency']:.2f} comm_red={red:.1%}")
+    return write_csv("table4_literature", header, rows)
+
+
+if __name__ == "__main__":
+    run()

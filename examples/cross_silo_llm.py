@@ -1,0 +1,108 @@
+"""End-to-end driver: federated pretraining of a ~100M-param transformer
+across 4 silos with ACSP-FL partial model sharing (DESIGN.md §2.2).
+
+    PYTHONPATH=src python examples/cross_silo_llm.py --steps 200          # ~100M
+    PYTHONPATH=src python examples/cross_silo_llm.py --small --steps 40   # CI-sized
+
+Each silo's token stream has a different distribution (silo-specific token
+bias — the LM analogue of the paper's non-IID clients). Rounds alternate
+local steps with masked partial aggregation of the first `--shared` layer
+periods; upper layers stay silo-personal. Reports per-silo loss and the
+analytic communication ledger.
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.fl.cross_silo import make_fl_round_step, partial_aggregate_silo_params
+from repro.models.api import get_model
+from repro.optim import adamw
+
+
+def make_cfg(small: bool) -> ModelConfig:
+    if small:
+        return ModelConfig(
+            name="fl-llm-8m", family="dense", n_layers=4, d_model=128,
+            n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=2048, head_dim=32,
+        )
+    # ~100M params: 12L x 512 wide, 8k vocab
+    return ModelConfig(
+        name="fl-llm-100m", family="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=8192, head_dim=64,
+    )
+
+
+def silo_batches(rng, n_silos, batch, seq, vocab, step):
+    """Non-IID synthetic LM data: silo i's tokens are biased Zipf over a
+    silo-specific permutation of the vocab (structural heterogeneity)."""
+    toks = []
+    for i in range(n_silos):
+        r = jax.random.fold_in(jax.random.fold_in(rng, i), step)
+        # zipf-ish via clipped exponential of uniform
+        u = jax.random.uniform(r, (batch, seq + 1))
+        z = jnp.minimum((-(jnp.log1p(-u)) * vocab / (6 + 2 * i)).astype(jnp.int32), vocab - 1)
+        perm_r = jax.random.fold_in(jax.random.PRNGKey(777), i)
+        perm = jax.random.permutation(perm_r, vocab)
+        toks.append(perm[z])
+    t = jnp.stack(toks)  # (silos, batch, seq+1)
+    return {"tokens": t[:, :, :-1], "labels": t[:, :, 1:]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200, help="total local steps (rounds x 1)")
+    ap.add_argument("--silos", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2, help="per-silo batch")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--shared", type=int, default=None, help="layer periods aggregated (default: half)")
+    ap.add_argument("--small", action="store_true")
+    args = ap.parse_args()
+
+    cfg = make_cfg(args.small)
+    bundle = get_model(cfg)
+    shared = args.shared if args.shared is not None else cfg.n_layers // 2
+
+    rng = jax.random.PRNGKey(0)
+    base = bundle.init(rng)
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(base))
+    print(f"model {cfg.name}: {n_params/1e6:.1f}M params, {args.silos} silos, sharing {shared}/{cfg.n_layers} layer periods")
+
+    silo_params = jax.tree.map(lambda l: jnp.broadcast_to(l, (args.silos,) + l.shape).copy(), base)
+    opt = adamw(3e-4)
+    silo_opt = jax.vmap(opt.init)(silo_params)
+    round_step = jax.jit(make_fl_round_step(cfg, bundle, opt, shared))
+
+    # analytic comm ledger: bytes all-reduced per round = shared param bytes
+    stack_sizes = [sum(int(np.prod(l.shape[1:])) for l in jax.tree.leaves(tree)) for tree in base["stack"]]
+    n_periods = jax.tree.leaves(base["stack"][0])[0].shape[0]
+    per_period = sum(stack_sizes)
+    fixed_shared = int(np.prod(base["embed"].shape))
+    shared_params = fixed_shared + min(shared, n_periods) * per_period
+    full_params = n_params
+    print(f"aggregated/round: {shared_params/1e6:.1f}M of {full_params/1e6:.1f}M params "
+          f"({shared_params/full_params:.0%}) -> comm reduction {1-shared_params/full_params:.0%} vs full FedAvg")
+
+    weights = jnp.ones((args.silos,))
+    t0 = time.time()
+    losses = []
+    for step in range(args.steps):
+        batch = silo_batches(rng, args.silos, args.batch, args.seq, cfg.vocab_padded, step)
+        silo_params, silo_opt, loss = round_step(silo_params, silo_opt, batch, weights)
+        losses.append(float(loss))
+        if step % max(1, args.steps // 20) == 0 or step == args.steps - 1:
+            print(f"  round {step:4d} mean-loss {losses[-1]:.4f} ({(time.time()-t0)/(step+1):.2f}s/round)")
+
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0], "no learning?"
+    print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f} over {args.steps} federated rounds")
+    print(f"total uplink saved vs full sharing: {(1-shared_params/full_params)*100:.0f}% x {args.steps} rounds")
+
+
+if __name__ == "__main__":
+    main()

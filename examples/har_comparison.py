@@ -1,0 +1,54 @@
+"""Full literature comparison on one dataset (paper §4.5, Table 4):
+FedAvg vs POC vs Oort vs DEEV vs ACSP-FL variants.
+
+    PYTHONPATH=src python examples/har_comparison.py [--dataset extrasensory]
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.core.metrics import efficiency, overhead_reduction
+from repro.data import make_har_dataset
+from repro.fl import FLConfig, run_federated
+
+SOLUTIONS = {
+    "FedAvg": FLConfig(strategy="fedavg", personalization="none", fraction=1.0),
+    "POC": FLConfig(strategy="poc", personalization="none", fraction=0.5),
+    "Oort": FLConfig(strategy="oort", personalization="none", fraction=0.5),
+    "DEEV": FLConfig(strategy="deev", personalization="none", decay=0.005),
+    "ACSP-FL FT": FLConfig(strategy="acsp-fl", personalization="ft", decay=0.005),
+    "ACSP-FL PMS2": FLConfig(strategy="acsp-fl", personalization="pms", pms_layers=2, decay=0.005),
+    "ACSP-FL DLD": FLConfig(strategy="acsp-fl", personalization="dld", decay=0.005),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="extrasensory", choices=["uci-har", "motionsense", "extrasensory"])
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--scale", type=float, default=0.05)
+    args = ap.parse_args()
+
+    ds = make_har_dataset(args.dataset, seed=0, scale=args.scale if args.dataset != "uci-har" else 1.0)
+    results = {}
+    for name, cfg in SOLUTIONS.items():
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, rounds=args.rounds, epochs=2)
+        results[name] = run_federated(ds, cfg)
+        h = results[name]
+        print(f"{name:14s} acc={h.accuracy_mean[-1]:.3f} tx={h.tx_bytes_cum[-1]/1e6:9.2f}MB "
+              f"sel={h.selected.mean():.2f} worst={h.accuracy_per_client[-1].min():.3f}")
+
+    base = results["FedAvg"]
+    print(f"\n{'solution':14s} {'acc':>6s} {'tx_red':>7s} {'time_red':>8s} {'efficiency':>10s}")
+    for name, h in results.items():
+        tx_red = overhead_reduction(h.tx_bytes_cum[-1], base.tx_bytes_cum[-1])
+        t_red = overhead_reduction(h.round_time.sum(), base.round_time.sum())
+        eff = efficiency(float(h.accuracy_mean[-1]), t_red)
+        print(f"{name:14s} {h.accuracy_mean[-1]:6.3f} {tx_red:7.1%} {t_red:8.1%} {eff:10.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: ACSP-FL on the UCI-HAR stand-in, 30 clients, 30 rounds.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Reproduces the paper's headline behaviour in ~a minute on CPU: adaptive
+selection shrinks the cohort, DLD shrinks the shared piece, accuracy stays
+on par with full FedAvg at a fraction of the bytes.
+"""
+
+import numpy as np
+
+from repro.core.metrics import overhead_reduction
+from repro.data import make_har_dataset
+from repro.fl import FLConfig, run_federated
+
+
+def main():
+    ds = make_har_dataset("uci-har", seed=0)
+    print(f"dataset: {ds.name} — {ds.n_clients} clients, {ds.n_features} features, {ds.n_classes} classes")
+
+    print("\n[1/2] FedAvg baseline (100% participation, full model)")
+    fedavg = run_federated(
+        ds, FLConfig(strategy="fedavg", personalization="none", fraction=1.0, rounds=30, epochs=2),
+        progress=True,
+    )
+
+    print("\n[2/2] ACSP-FL (adaptive selection + decay + DLD partial sharing + personalization)")
+    acsp = run_federated(
+        ds, FLConfig(strategy="acsp-fl", personalization="dld", decay=0.01, rounds=30, epochs=2),
+        progress=True,
+    )
+
+    red = overhead_reduction(acsp.tx_bytes_cum[-1], fedavg.tx_bytes_cum[-1])
+    print("\n=== summary ===")
+    print(f"accuracy      : FedAvg {fedavg.accuracy_mean[-1]:.3f} | ACSP-FL {acsp.accuracy_mean[-1]:.3f}")
+    print(f"worst client  : FedAvg {fedavg.accuracy_per_client[-1].min():.3f} | ACSP-FL {acsp.accuracy_per_client[-1].min():.3f}")
+    print(f"uplink bytes  : FedAvg {fedavg.tx_bytes_cum[-1]/1e6:.1f}MB | ACSP-FL {acsp.tx_bytes_cum[-1]/1e6:.1f}MB")
+    print(f"communication reduction: {red:.1%} (paper reports up to 95% at 100 rounds)")
+    print(f"avg clients/round: FedAvg {fedavg.selected.sum(1).mean():.1f} | ACSP-FL {acsp.selected.sum(1).mean():.1f}")
+    assert acsp.tx_bytes_cum[-1] < fedavg.tx_bytes_cum[-1]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Serving example: batched prefill + autoregressive decode on any assigned
+architecture (reduced config on CPU).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch jamba-v0.1-52b --tokens 16
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.api import get_model, make_concrete_batch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="falcon-mamba-7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--window", type=int, default=0, help=">0: sliding-window decode")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    bundle = get_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+
+    batch = make_concrete_batch(cfg, "prefill", args.batch, args.prompt_len, jax.random.PRNGKey(1))
+    prefill = jax.jit(bundle.make_prefill_step(window=args.window))
+    decode = jax.jit(bundle.make_decode_step(window=args.window))
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    print(f"{args.arch} (reduced): prefill {args.batch}x{args.prompt_len} in {t_prefill*1e3:.0f}ms")
+
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    generated = [tok]
+    t0 = time.time()
+    for _ in range(args.tokens):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    seqs = jnp.concatenate(generated, axis=1)
+    print(f"decoded {args.tokens} tokens/seq x {args.batch} seqs in {dt*1e3:.0f}ms "
+          f"({args.tokens*args.batch/dt:.1f} tok/s on CPU interpret path)")
+    print("first sequence token ids:", seqs[0].tolist())
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+if __name__ == "__main__":
+    main()

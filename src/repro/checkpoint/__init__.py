@@ -1,0 +1,5 @@
+"""Checkpointing for pytrees + FL server state (numpy .npz + JSON manifest)."""
+
+from repro.checkpoint.checkpoint import save_pytree, load_pytree, save_fl_state, load_fl_state
+
+__all__ = ["save_pytree", "load_pytree", "save_fl_state", "load_fl_state"]

@@ -1,0 +1,101 @@
+"""Dependency-free checkpointing.
+
+Pytrees are flattened with ``jax.tree_util.tree_flatten_with_path``; leaves
+go into one ``.npz`` keyed by the path string, structure + dtypes into a JSON
+manifest next to it. Works for the layered MLP models, stacked client
+params, optimizer states, and the LLM param trees alike.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(tree, directory: str, name: str = "ckpt") -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    keys = []
+    orig_dtypes = {}
+    for path, leaf in flat:
+        k = _path_str(path) or f"leaf{len(keys)}"
+        # npz keys must be unique; path strings are by construction
+        arr = np.asarray(jax.device_get(leaf))
+        orig_dtypes[k] = str(arr.dtype)
+        if arr.dtype.kind not in "fiub":  # bf16 (kind 'V') etc: npz-unsafe
+            arr = arr.astype(np.float32)
+        arrays[k] = arr
+        keys.append(k)
+    npz_path = os.path.join(directory, f"{name}.npz")
+    np.savez(npz_path, **arrays)
+    manifest = {
+        "treedef": str(treedef),
+        "keys": keys,
+        "dtypes": orig_dtypes,
+        "shapes": {k: list(arrays[k].shape) for k in keys},
+    }
+    with open(os.path.join(directory, f"{name}.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return npz_path
+
+
+def load_pytree(template, directory: str, name: str = "ckpt"):
+    """Load into the structure of ``template`` (same treedef as saved)."""
+    import jax.numpy as jnp
+
+    with np.load(os.path.join(directory, f"{name}.npz")) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for i, (path, leaf) in enumerate(flat):
+            k = _path_str(path) or f"leaf{i}"
+            arr = data[k]
+            want = getattr(leaf, "dtype", None)
+            if want is not None and str(arr.dtype) != str(want):
+                arr = jnp.asarray(arr).astype(want)  # bf16 round-trip via f32
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(template), leaves)
+
+
+def save_fl_state(state_dict: dict, directory: str, round_idx: int) -> str:
+    """Save a server-state dict (params trees + scalars) for round ``t``."""
+    name = f"round_{round_idx:05d}"
+    scalars = {k: v for k, v in state_dict.items() if isinstance(v, (int, float, str))}
+    trees = {k: v for k, v in state_dict.items() if k not in scalars}
+    path = save_pytree(trees, directory, name)
+    with open(os.path.join(directory, f"{name}_meta.json"), "w") as f:
+        json.dump({"round": round_idx, **scalars}, f)
+    return path
+
+
+def load_fl_state(template_trees: dict, directory: str, round_idx: int | None = None):
+    if round_idx is None:  # latest
+        rounds = [
+            int(m.group(1))
+            for fn in os.listdir(directory)
+            if (m := re.match(r"round_(\d+)\.npz", fn))
+        ]
+        if not rounds:
+            raise FileNotFoundError(f"no FL checkpoints in {directory}")
+        round_idx = max(rounds)
+    name = f"round_{round_idx:05d}"
+    trees = load_pytree(template_trees, directory, name)
+    with open(os.path.join(directory, f"{name}_meta.json")) as f:
+        meta = json.load(f)
+    return trees, meta

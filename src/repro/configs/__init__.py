@@ -1,0 +1,36 @@
+"""Architecture registry: ``get_config(arch_id)`` and input-shape registry.
+
+One module per assigned architecture; every config cites its source in the
+module docstring. ``list_archs()`` enumerates the pool.
+"""
+
+from repro.configs.base import ModelConfig, InputShape, SHAPES, get_shape
+
+_ARCH_MODULES = {
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "har-mlp": "repro.configs.har_mlp",
+}
+
+
+def list_archs() -> list[str]:
+    return [k for k in _ARCH_MODULES if k != "har-mlp"]
+
+
+def get_config(arch: str) -> ModelConfig:
+    import importlib
+
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; have {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).config
+
+
+__all__ = ["ModelConfig", "InputShape", "SHAPES", "get_shape", "get_config", "list_archs"]

@@ -1,0 +1,218 @@
+"""ModelConfig (covers all six assigned arch families) and input shapes.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct —
+never allocated); ``reduced()`` yields the smoke-test variant (<=2 layers,
+d_model<=512, <=4 experts) that runs a real forward/train step on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                     # 0 for attention-free archs
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+
+    # --- MoE ---
+    moe: bool = False
+    n_experts: int = 0               # routed experts
+    n_shared_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0             # per-expert FFN width (fine-grained MoE)
+    moe_every: int = 1               # MoE at layer indices where idx % moe_every == moe_offset
+    moe_offset: int = 0
+    first_dense: int = 0             # deepseek: leading dense layers
+
+    # --- attention ---
+    attn_type: str = "gqa"           # gqa | mla | none
+    kv_lora_rank: int = 0            # MLA compressed KV dim
+    qk_rope_dim: int = 64            # MLA decoupled-RoPE dim
+    qk_nope_dim: int = 128           # MLA content dim per head
+    v_head_dim: int = 128            # MLA value dim per head
+    rope_variant: str = "full"       # full | half (chatglm 2d) | mrope
+    mrope_sections: tuple = (16, 24, 24)  # qwen2-vl: t/h/w of head_dim//2
+    sliding_window: int = 0          # >0: sliding-window attention (long_500k variant)
+
+    # --- SSM (mamba-1) ---
+    ssm: bool = False
+    attn_period: int = 0             # hybrid: 1 attn layer per `attn_period` (jamba=8)
+    attn_offset: int = 4             # position of the attn layer inside the period
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0                 # 0 -> ceil(d_model/16)
+
+    # --- encoder-decoder / modality frontends (STUBS per assignment) ---
+    encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500          # whisper 30 s of 10 ms frames / 2 (conv stride)
+    frontend: str = "none"           # none | audio_stub | vision_stub
+    n_vision_tokens: int = 0         # qwen2-vl: patch embeds prepended
+    max_decoder_seq: int = 0         # cap decoder seq (whisper 448)
+
+    # --- misc ---
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    capacity_factor: float = 1.25    # MoE token-dropping capacity
+    source: str = ""                 # citation
+
+    @property
+    def head_dim_(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded to x256 so the vocab dim shards over any mesh axis
+        (whisper 51865 -> 51968, granite 49155 -> 49408; noted in DESIGN.md)."""
+        return round_up(self.vocab_size, 256)
+
+    @property
+    def dt_rank_(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    def is_moe_layer(self, idx: int) -> bool:
+        if not self.moe or idx < self.first_dense:
+            return False
+        return (idx % self.moe_every) == self.moe_offset
+
+    def is_attn_layer(self, idx: int) -> bool:
+        """For hybrid archs: which layers are attention (vs SSM)."""
+        if self.attn_type == "none":
+            return False
+        if not self.ssm:
+            return True
+        if self.attn_period <= 0:
+            return False
+        return (idx % self.attn_period) == self.attn_offset
+
+    def param_count(self) -> int:
+        """Analytic parameter count N (total, incl. all experts)."""
+        d, v = self.d_model, self.vocab_padded
+        total = v * d + (0 if self.tie_embeddings else v * d) + d
+        hd = self.head_dim_
+        for i in range(self.n_layers):
+            total += 2 * d  # norms
+            if self.ssm and not self.is_attn_layer(i):
+                # mamba mixer (MoE/FFN may still follow — jamba interleaves both)
+                di, ds_, dtr = self.d_inner, self.d_state, self.dt_rank_
+                total += d * 2 * di + self.d_conv * di + di * (dtr + 2 * ds_)
+                total += dtr * di + di * ds_ + di + di * d  # dt_proj, A, D, out
+            elif self.attn_type == "mla":
+                r = self.kv_lora_rank
+                qd = self.qk_nope_dim + self.qk_rope_dim
+                total += d * self.n_heads * qd          # W_q
+                total += d * (r + self.qk_rope_dim)     # W_dkv + rope
+                total += r * self.n_heads * (self.qk_nope_dim + self.v_head_dim)
+                total += self.n_heads * self.v_head_dim * d  # W_o
+            elif self.attn_type == "gqa":
+                total += d * self.n_heads * hd          # W_q
+                total += 2 * d * self.n_kv_heads * hd   # W_k, W_v
+                total += self.n_heads * hd * d          # W_o
+            if self.is_moe_layer(i):
+                dff = self.d_ff_expert or self.d_ff
+                total += d * self.n_experts  # router
+                total += self.n_experts * 3 * d * dff
+                total += self.n_shared_experts * 3 * d * dff
+            elif self.d_ff:
+                total += 3 * d * self.d_ff  # SwiGLU
+        if self.encoder_decoder:
+            # encoder: self-attn + FFN per layer; decoder adds cross-attn
+            enc = self.n_encoder_layers * (
+                2 * d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+                + 3 * d * self.d_ff + 2 * d
+            )
+            cross = self.n_layers * (
+                2 * d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + d
+            )
+            total += enc + cross + self.encoder_seq * d
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if not self.moe:
+            return self.param_count()
+        d = self.d_model
+        dff = self.d_ff_expert or self.d_ff
+        inactive_per_moe_layer = (self.n_experts - self.top_k) * 3 * d * dff
+        n_moe = sum(self.is_moe_layer(i) for i in range(self.n_layers))
+        return int(self.param_count() - n_moe * inactive_per_moe_layer)
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: <=2 layers (one full hybrid period for jamba),
+        d_model<=256, <=4 experts, small vocab."""
+        n_layers = 2
+        attn_period = self.attn_period
+        if self.ssm and self.attn_period:
+            n_layers = self.attn_period  # keep one full mamba+attn period
+        d_model = min(self.d_model, 256)
+        n_heads = min(self.n_heads, 4) if self.n_heads else 0
+        return dataclasses.replace(
+            self,
+            n_layers=n_layers,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=min(self.n_kv_heads, max(1, n_heads // 2)) if n_heads else 0,
+            d_ff=min(self.d_ff, 512),
+            d_ff_expert=min(self.d_ff_expert, 128) if self.d_ff_expert else 0,
+            vocab_size=512,
+            n_experts=min(self.n_experts, 4) if self.moe else 0,
+            n_shared_experts=min(self.n_shared_experts, 1),
+            top_k=min(self.top_k, 2) if self.moe else 0,
+            head_dim=min(self.head_dim_, 64) if self.n_heads else 0,
+            mrope_sections=(8, 12, 12) if self.rope_variant == "mrope" else self.mrope_sections,
+            kv_lora_rank=min(self.kv_lora_rank, 32) if self.kv_lora_rank else 0,
+            qk_rope_dim=16 if self.attn_type == "mla" else self.qk_rope_dim,
+            qk_nope_dim=32 if self.attn_type == "mla" else self.qk_nope_dim,
+            v_head_dim=32 if self.attn_type == "mla" else self.v_head_dim,
+            n_encoder_layers=min(self.n_encoder_layers, 2),
+            encoder_seq=min(self.encoder_seq, 64),
+            n_vision_tokens=min(self.n_vision_tokens, 16) if self.n_vision_tokens else 0,
+            first_dense=min(self.first_dense, 1),
+            d_state=min(self.d_state, 8),
+            dt_rank=8 if self.ssm else 0,
+            max_decoder_seq=min(self.max_decoder_seq, 64) if self.max_decoder_seq else 0,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    needs_subquadratic: bool = False  # long_500k
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524_288, 1, needs_subquadratic=True),
+}
+
+
+def get_shape(name: str) -> InputShape:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; have {sorted(SHAPES)}")
+    return SHAPES[name]

@@ -1,0 +1,23 @@
+"""har-mlp — the paper's own model (§4.2): MLP, 3 hidden layers x 256 units,
+SGD + sparse categorical cross-entropy, for the HAR datasets.
+[10.1016/j.adhoc.2024.103462]
+
+Not part of the assigned-architecture pool; used by the FL reproduction and
+examples. Kept in the registry so `--arch har-mlp` selects the paper's own
+experiment configuration.
+"""
+
+from repro.configs.base import ModelConfig
+
+config = ModelConfig(
+    name="har-mlp",
+    family="mlp",
+    n_layers=4,       # 3 hidden + softmax head — the paper's Eq. 9 total
+    d_model=256,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=0,
+    attn_type="none",
+    source="10.1016/j.adhoc.2024.103462",
+)

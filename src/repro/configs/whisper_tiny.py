@@ -1,0 +1,30 @@
+"""whisper-tiny [audio] — 4L enc + 4L dec, d_model=384 6H (kv=6) d_ff=1536
+vocab=51865 (padded 51968). [arXiv:2212.04356]
+
+Mel-spectrogram + conv frontend is a STUB per the assignment: input_specs
+provides precomputed frame embeddings (B, 1500, 384) — 30 s of audio after
+the stride-2 conv. The transformer backbone (encoder + causal decoder with
+cross-attention) is fully implemented. Decoder context 448 tokens (paper).
+"""
+
+from repro.configs.base import ModelConfig
+
+config = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,              # decoder layers
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    attn_type="gqa",
+    rope_variant="full",     # whisper uses learned abs pos; we add RoPE-free learned emb
+    head_dim=64,
+    encoder_decoder=True,
+    n_encoder_layers=4,
+    encoder_seq=1500,
+    frontend="audio_stub",
+    max_decoder_seq=448,
+    source="arXiv:2212.04356",
+)

@@ -1,0 +1,52 @@
+"""repro.core — the paper's contribution (ACSP-FL) as composable JAX modules.
+
+Implements, faithfully to de Souza et al. 2024 (Ad Hoc Networks,
+10.1016/j.adhoc.2024.103462):
+
+- performance-based client selection with the pi filter (Eq. 4-5)
+- the decay function phi (Eq. 6) and ordered truncation (Eq. 7)
+- partial model sharing K(w, L) and dynamic layer definition (Eq. 9)
+- personalization P(w_l, w_g) (Eq. 8) and [w^g, w^l] composition
+- weighted federated aggregation (Eq. 1) with selection/layer masks
+
+plus the literature baselines the paper compares against:
+FedAvg (random), POC, Oort, DEEV.
+"""
+
+from repro.core.selection import (
+    SelectionStrategy,
+    FedAvgRandom,
+    PowerOfChoice,
+    Oort,
+    DEEV,
+    ACSPFL,
+    get_strategy,
+)
+from repro.core.decay import phi_decay
+from repro.core.layersharing import (
+    dynamic_layer_definition,
+    layer_share_mask,
+    cut_model,
+    num_layers,
+)
+from repro.core.personalization import personalize_ft, compose_model
+from repro.core.aggregation import fedavg_aggregate, masked_partial_aggregate
+
+__all__ = [
+    "SelectionStrategy",
+    "FedAvgRandom",
+    "PowerOfChoice",
+    "Oort",
+    "DEEV",
+    "ACSPFL",
+    "get_strategy",
+    "phi_decay",
+    "dynamic_layer_definition",
+    "layer_share_mask",
+    "cut_model",
+    "num_layers",
+    "personalize_ft",
+    "compose_model",
+    "fedavg_aggregate",
+    "masked_partial_aggregate",
+]

@@ -1,0 +1,100 @@
+"""Federated aggregation (paper Eq. 1) with selection and layer masks.
+
+Two implementations of the weighted average are provided:
+
+- a pure-jnp reference (this module), used everywhere by default;
+- a fused Pallas kernel (repro.kernels.masked_aggregate) for the server
+  hot spot, validated against this reference.
+
+Stacked-client convention: client parameters are pytrees whose leaves carry
+a leading client axis (C, ...). A *layered* model is a list of such trees.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _weighted_mean(stacked: jnp.ndarray, weights: jnp.ndarray, fallback: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Weighted mean over the leading client axis.
+
+    If all weights are zero (no client contributed — e.g. a layer nobody
+    shared this round), returns ``fallback`` (the previous global value) or
+    zeros.
+    """
+    w = weights.reshape((-1,) + (1,) * (stacked.ndim - 1)).astype(stacked.dtype)
+    total = jnp.sum(weights).astype(stacked.dtype)
+    mean = jnp.sum(stacked * w, axis=0) / jnp.maximum(total, 1e-12)
+    if fallback is None:
+        fallback = jnp.zeros_like(mean)
+    return jnp.where(total > 0, mean, fallback)
+
+
+def fedavg_aggregate(client_params, select_mask: jnp.ndarray, n_samples: jnp.ndarray):
+    """Eq. (1): w <- sum_i (|d_i|/|D|) w_i over *selected* clients.
+
+    Args:
+      client_params: pytree, leaves (C, ...).
+      select_mask: (C,) boolean selection mask.
+      n_samples: (C,) |d_i|.
+
+    Returns the aggregated pytree with the client axis reduced.
+    """
+    weights = select_mask.astype(jnp.float32) * n_samples.astype(jnp.float32)
+    return jax.tree.map(lambda x: _weighted_mean(x, weights), client_params)
+
+
+def masked_partial_aggregate(
+    client_params,
+    prev_global,
+    select_mask: jnp.ndarray,
+    n_samples: jnp.ndarray,
+    share_mask: jnp.ndarray,
+):
+    """ACSP-FL aggregation: per-layer weighted average of the *shared* pieces.
+
+    Layer j of the new global model averages clients with
+    ``select_mask[i] & share_mask[i, j]``; if no client shared layer j this
+    round, the previous global layer is kept (the server has nothing new).
+
+    Args:
+      client_params: layered stacked pytree — list over L of trees (C, ...).
+      prev_global: layered pytree — list over L of trees (...).
+      select_mask: (C,) bool.
+      n_samples: (C,) |d_i|.
+      share_mask: (C, L) or (L,) bool — which layers each client shared
+        (from repro.core.layersharing.layer_share_mask).
+
+    Returns the new layered global model (client axis reduced).
+    """
+    n_layers = len(client_params)
+    share_mask = jnp.asarray(share_mask)
+    if share_mask.ndim == 1:
+        share_mask = jnp.broadcast_to(share_mask[None, :], (select_mask.shape[0], n_layers))
+    base = select_mask.astype(jnp.float32) * n_samples.astype(jnp.float32)  # (C,)
+    out = []
+    for j in range(n_layers):
+        w_j = base * share_mask[:, j].astype(jnp.float32)
+        out.append(
+            jax.tree.map(
+                lambda x, g, w_j=w_j: _weighted_mean(x, w_j, fallback=g),
+                client_params[j],
+                prev_global[j],
+            )
+        )
+    return out
+
+
+def transmitted_parameters(select_mask: jnp.ndarray, share_mask: jnp.ndarray, layer_sizes: jnp.ndarray) -> jnp.ndarray:
+    """Analytic one-way transmitted parameter count for a round.
+
+    sum over selected clients of the sizes of the layers they share —
+    the quantity behind the paper's 'TX bytes' metric (x4 bytes x2
+    directions is applied by the metrics module).
+    """
+    share = jnp.asarray(share_mask)
+    if share.ndim == 1:
+        share = jnp.broadcast_to(share[None, :], (select_mask.shape[0], share.shape[0]))
+    per_client = share.astype(jnp.float32) @ layer_sizes.astype(jnp.float32)  # (C,)
+    return jnp.sum(per_client * select_mask.astype(jnp.float32))

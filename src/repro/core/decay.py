@@ -1,0 +1,30 @@
+"""Decay function phi (paper Eq. 6).
+
+phi(S, t) = ceil(|S| * (1 - decay)^t)
+
+The decay gradually shrinks the selected-client cohort as training
+progresses, on top of the performance filter. It is a pure function of the
+(already filtered) cohort size and the round index, so it jits and can run
+inside a lax.scan round loop.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def phi_decay(cohort_size: jnp.ndarray | int, t: jnp.ndarray | int, decay: float) -> jnp.ndarray:
+    """Number of clients to keep at round ``t`` (Eq. 6).
+
+    Args:
+      cohort_size: |S| — size of the performance-filtered cohort.
+      t: communication round index (0-based; the paper's t starts at 1 with
+         all clients, we apply decay from the first adaptive round).
+      decay: decay rate in [0, 1). 0 disables decay (keeps the full cohort).
+
+    Returns:
+      int32 scalar ceil(|S| * (1-decay)^t), clipped to [0, |S|].
+    """
+    s = jnp.asarray(cohort_size, jnp.float32)
+    kept = jnp.ceil(s * (1.0 - decay) ** jnp.asarray(t, jnp.float32))
+    return jnp.clip(kept.astype(jnp.int32), 0, jnp.asarray(cohort_size, jnp.int32))

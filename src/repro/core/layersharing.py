@@ -1,0 +1,78 @@
+"""Partial model sharing: K(w, L) and dynamic layer definition (paper §3.4).
+
+Convention: a *layered model* is a Python list/tuple of per-layer pytrees,
+``params = [layer_0, layer_1, ..., layer_{m-1}]`` (the paper's MLP has 4:
+three hidden + softmax head). ``K(w, L)`` with ``L = {l_0..l_{n-1}}`` keeps
+the first ``n`` layers — the *global piece* w^g; the remainder is the
+*local piece* w^l, personalized on-device and never transmitted.
+
+For jit-compatibility the selection of shared layers is expressed as a
+boolean/float *share mask* over the layer axis; a traced PMS value (from the
+dynamic layer definition, Eq. 9) then drives aggregation and the analytic
+communication accounting without shape changes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def num_layers(params) -> int:
+    """Number of layers of a layered model (static)."""
+    if not isinstance(params, (list, tuple)):
+        raise TypeError("layered model must be a list/tuple of per-layer pytrees")
+    return len(params)
+
+
+def cut_model(params, n_shared: int):
+    """K(w, L): split into (global piece, local piece) at a *static* cut.
+
+    Returns ``(w_g, w_l)`` where ``w_g = params[:n_shared]``.
+    """
+    m = num_layers(params)
+    n = int(n_shared)
+    if not 0 <= n <= m:
+        raise ValueError(f"n_shared={n} outside [0, {m}]")
+    return list(params[:n]), list(params[n:])
+
+
+def dynamic_layer_definition(accuracy: jnp.ndarray, total_layers: int) -> jnp.ndarray:
+    """DLD (Eq. 9): PMS = total_layers if A^t <= 0.25 else ceil(1 / A^t).
+
+    Works elementwise: pass a per-client accuracy vector to get per-client
+    PMS. Returns int32 in [1, total_layers].
+    """
+    a = jnp.asarray(accuracy, jnp.float32)
+    pms = jnp.where(a <= 0.25, total_layers, jnp.ceil(1.0 / jnp.maximum(a, 1e-6)))
+    return jnp.clip(pms.astype(jnp.int32), 1, total_layers)
+
+
+def layer_share_mask(total_layers: int, pms: jnp.ndarray) -> jnp.ndarray:
+    """Boolean mask over layers: layer j is shared iff j < pms.
+
+    ``pms`` may be a scalar (one mask, shape (L,)) or per-client (C,) giving
+    a (C, L) mask. jit/trace friendly.
+    """
+    layer_idx = jnp.arange(total_layers)
+    pms = jnp.asarray(pms)
+    if pms.ndim == 0:
+        return layer_idx < pms
+    if pms.ndim == 1:
+        return layer_idx[None, :] < pms[:, None]
+    raise ValueError(f"pms must be scalar or (C,), got shape {pms.shape}")
+
+
+def shared_param_count(params, pms: int) -> int:
+    """Parameters transmitted one-way when sharing the first ``pms`` layers
+    (static accounting helper for the communication metrics)."""
+    w_g, _ = cut_model(params, pms)
+    return sum(int(jnp.size(x)) for x in jax.tree.leaves(w_g))
+
+
+def layer_param_sizes(params) -> jnp.ndarray:
+    """(L,) int32 — parameter count of each layer (for analytic TX bytes)."""
+    return jnp.asarray(
+        [sum(int(jnp.size(x)) for x in jax.tree.leaves(layer)) for layer in params],
+        jnp.int32,
+    )

@@ -1,0 +1,57 @@
+"""Assessed metrics (paper §4.3): communication accounting, overhead model,
+efficiency score, selection frequency.
+
+The paper measures TX bytes from the Docker engine; we account analytically
+(mask-exact, matches the paper's semantics where unselected clients are truly
+silent) and — in the cross-silo runtime — structurally from HLO collective
+bytes (see repro.launch.collectives).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+BYTES_PER_PARAM = 4  # float32, as in the paper's Flower/TF setup
+
+
+@dataclasses.dataclass
+class CommModel:
+    """Simple channel/compute model for the simulated-time overhead metric."""
+
+    bandwidth_bytes_per_s: float = 12.5e6   # 100 Mbit/s edge uplink
+    client_flops_per_s: float = 5e9         # edge-device training throughput
+    server_latency_s: float = 0.01
+
+    def round_time(self, tx_bytes_per_client: jnp.ndarray, train_flops_per_client: jnp.ndarray, select_mask: jnp.ndarray) -> jnp.ndarray:
+        """Synchronous round time = slowest selected client (download +
+        train + upload), matching the paper's 'overhead' definition."""
+        per_client = (
+            2.0 * tx_bytes_per_client / self.bandwidth_bytes_per_s
+            + train_flops_per_client / self.client_flops_per_s
+        )
+        per_client = jnp.where(select_mask, per_client, 0.0)
+        return jnp.max(per_client) + self.server_latency_s
+
+
+def tx_bytes(params_transmitted: jnp.ndarray | float, directions: int = 2) -> jnp.ndarray:
+    """Bytes on the wire for a one-way parameter count (x directions)."""
+    return jnp.asarray(params_transmitted, jnp.float64) * BYTES_PER_PARAM * directions
+
+
+def efficiency(mean_accuracy: float, overhead_reduction: float, alpha: float = 0.5, beta: float = 0.5) -> float:
+    """Paper §4.3: efficiency = alpha*A_mean + beta*overhead_reduction."""
+    return float(alpha * mean_accuracy + beta * overhead_reduction)
+
+
+def overhead_reduction(solution_cost: float, baseline_cost: float) -> float:
+    """Fractional reduction vs the FedAvg baseline (paper's convention)."""
+    if baseline_cost <= 0:
+        return 0.0
+    return max(0.0, 1.0 - solution_cost / baseline_cost)
+
+
+def selection_frequency(selection_history: jnp.ndarray) -> jnp.ndarray:
+    """(T, C) boolean history -> (C,) counts (paper Fig. 11)."""
+    return jnp.sum(jnp.asarray(selection_history, jnp.int32), axis=0)

@@ -1,0 +1,63 @@
+"""Personalization (paper §3.4): P(w_l, w_g) fine-tuning choice (Eq. 8) and
+the [w^g, w^l] composition used by ACSP-FL's layer-sharing variants.
+
+All functions operate on *stacked* client parameters: every leaf carries a
+leading client axis (C, ...). This is the array-program analogue of the
+paper's per-device local models (see DESIGN.md §2.1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def personalize_ft(local_params, global_params, local_loss: jnp.ndarray, global_loss: jnp.ndarray):
+    """Eq. (8): each client keeps whichever whole model has lower loss.
+
+    Args:
+      local_params: layered, stacked pytree — leaves (C, ...).
+      global_params: layered pytree — leaves (...) (broadcast to all clients).
+      local_loss / global_loss: (C,) per-client losses of each model.
+
+    Returns stacked params where client i holds w_i^l if
+    L(w_i^l) <= L(w^g) else w^g.
+    """
+    use_local = local_loss <= global_loss  # (C,)
+
+    def pick(lo, gl):
+        mask = use_local.reshape((-1,) + (1,) * (lo.ndim - 1))
+        return jnp.where(mask, lo, jnp.broadcast_to(gl, lo.shape))
+
+    return jax.tree.map(pick, local_params, global_params)
+
+
+def compose_model(global_params, local_params, share_mask: jnp.ndarray):
+    """w_i = [w^g, w_i^l]: per-layer selection of global vs local weights.
+
+    Args:
+      global_params: layered pytree (list over L layers), leaves (...).
+      local_params: layered stacked pytree, leaves (C, ...).
+      share_mask: (C, L) or (L,) boolean — True -> client uses the global
+        (shared) layer, False -> keeps its personalized local layer.
+
+    Returns layered stacked pytree: for each layer j and client i,
+    global layer j where share_mask[i, j] else local layer (i, j).
+    """
+    share_mask = jnp.asarray(share_mask)
+    if share_mask.ndim == 1:
+        share_mask = jnp.broadcast_to(
+            share_mask[None, :],
+            (jax.tree.leaves(local_params[0])[0].shape[0], share_mask.shape[0]),
+        )
+    n_layers = len(local_params)
+    out = []
+    for j in range(n_layers):
+        m_j = share_mask[:, j]  # (C,)
+
+        def pick(gl, lo, m_j=m_j):
+            mask = m_j.reshape((-1,) + (1,) * (lo.ndim - 1))
+            return jnp.where(mask, jnp.broadcast_to(gl, lo.shape), lo)
+
+        out.append(jax.tree.map(pick, global_params[j], local_params[j]))
+    return out

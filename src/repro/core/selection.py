@@ -1,0 +1,185 @@
+"""Client-selection strategies (paper §3.2-3.3 + literature baselines §4).
+
+Every strategy is a pure, jit-compatible function from per-client metrics to
+a boolean selection mask of static shape (C,). Unselected clients are masked
+out of aggregation (and, in the analytic accounting, out of communication) —
+this keeps shapes static so the entire federated round can live inside jit.
+
+Strategies:
+  FedAvgRandom   — uniform random fraction (McMahan et al. 2017)
+  PowerOfChoice  — candidate-sample d, keep k highest-loss (Cho et al. 2020)
+  Oort           — statistical utility x systemic penalty (Lai et al. 2021)
+  DEEV           — accuracy<=mean filter + decay (de Souza et al. 2023)
+  ACSPFL         — the paper: pi filter (Eq. 4-5) + phi decay (Eq. 6) +
+                   ordered truncation (Eq. 7)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decay import phi_decay
+
+
+class ClientMetrics(NamedTuple):
+    """Per-client observations available to the server each round."""
+
+    accuracy: jnp.ndarray  # (C,) float — distributed-eval accuracy A_i
+    loss: jnp.ndarray      # (C,) float — local loss
+    n_samples: jnp.ndarray  # (C,) int/float — |d_i|
+    delay: jnp.ndarray     # (C,) float — systemic training delay (Oort)
+
+
+def _keep_lowest(values: jnp.ndarray, within: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Boolean mask keeping the ``k`` lowest ``values`` among ``within``.
+
+    Static-shape friendly: works for traced ``k``. Clients outside ``within``
+    are pushed to +inf so they never rank.
+    """
+    keyed = jnp.where(within, values, jnp.inf)
+    order = jnp.argsort(keyed)  # ascending
+    ranks = jnp.empty_like(order).at[order].set(jnp.arange(order.shape[0]))
+    return within & (ranks < k)
+
+
+def _keep_highest(values: jnp.ndarray, within: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    return _keep_lowest(-values, within, k)
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionStrategy:
+    """Base class. ``select`` returns a boolean mask of shape (C,)."""
+
+    def select(self, metrics: ClientMetrics, t: jnp.ndarray, rng: jax.Array) -> jnp.ndarray:
+        raise NotImplementedError
+
+    @property
+    def name(self) -> str:
+        return type(self).__name__
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgRandom(SelectionStrategy):
+    """Uniform random selection of ``fraction`` of clients (FedAvg).
+
+    The paper's evaluation runs FedAvg with fraction=1.0 (all clients every
+    round) as the baseline.
+    """
+
+    fraction: float = 1.0
+
+    def select(self, metrics: ClientMetrics, t, rng) -> jnp.ndarray:
+        c = metrics.accuracy.shape[0]
+        k = max(1, int(round(self.fraction * c)))
+        if k >= c:
+            return jnp.ones((c,), bool)
+        scores = jax.random.uniform(rng, (c,))
+        return _keep_lowest(scores, jnp.ones((c,), bool), jnp.asarray(k))
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerOfChoice(SelectionStrategy):
+    """Power-of-Choice (Cho et al.): sample d candidates, keep the k with
+    highest local loss. d defaults to min(C, 2k)."""
+
+    fraction: float = 0.5  # k / C — the paper's exploration found k=50% best
+    candidate_factor: int = 2
+
+    def select(self, metrics: ClientMetrics, t, rng) -> jnp.ndarray:
+        c = metrics.loss.shape[0]
+        k = max(1, int(round(self.fraction * c)))
+        d = min(c, self.candidate_factor * k)
+        # candidate set: d clients sampled proportional to |d_i|
+        p = metrics.n_samples / jnp.sum(metrics.n_samples)
+        noise = jax.random.gumbel(rng, (c,))
+        cand_score = jnp.log(p + 1e-12) + noise  # Gumbel top-d == sample w/o replacement
+        candidates = _keep_highest(cand_score, jnp.ones((c,), bool), jnp.asarray(d))
+        return _keep_highest(metrics.loss, candidates, jnp.asarray(k))
+
+
+@dataclasses.dataclass(frozen=True)
+class Oort(SelectionStrategy):
+    """Oort (Lai et al.): utility = statistical term x systemic penalty,
+    epsilon-greedy exploration, top-k by utility."""
+
+    fraction: float = 0.5
+    alpha: float = 2.0           # systemic penalty exponent
+    preferred_delay: float = 1.0  # T — the developer-preferred round duration
+    epsilon: float = 0.1          # exploration fraction
+
+    def select(self, metrics: ClientMetrics, t, rng) -> jnp.ndarray:
+        c = metrics.loss.shape[0]
+        k = max(1, int(round(self.fraction * c)))
+        stat = metrics.n_samples * jnp.sqrt(jnp.maximum(metrics.loss, 0.0) ** 2 + 1e-12)
+        penalty = jnp.where(
+            metrics.delay > self.preferred_delay,
+            (self.preferred_delay / jnp.maximum(metrics.delay, 1e-6)) ** self.alpha,
+            1.0,
+        )
+        util = stat * penalty
+        k_exploit = max(1, int(round((1.0 - self.epsilon) * k)))
+        k_explore = k - k_exploit
+        exploit = _keep_highest(util, jnp.ones((c,), bool), jnp.asarray(k_exploit))
+        if k_explore > 0:
+            scores = jax.random.uniform(rng, (c,))
+            explore = _keep_lowest(jnp.where(exploit, jnp.inf, scores), ~exploit, jnp.asarray(k_explore))
+            return exploit | explore
+        return exploit
+
+
+@dataclasses.dataclass(frozen=True)
+class DEEV(SelectionStrategy):
+    """DEEV (de Souza et al. 2023): accuracy <= mean filter + decay over
+    rounds. ACSP-FL's selection core; DEEV has no personalization/PMS."""
+
+    decay: float = 0.005
+
+    def select(self, metrics: ClientMetrics, t, rng) -> jnp.ndarray:
+        a = metrics.accuracy
+        filtered = a <= jnp.mean(a)  # pi filter, Eq. (4)-(5)
+        cohort = jnp.sum(filtered)
+        keep = phi_decay(cohort, t, self.decay)  # Eq. (6)
+        # Eq. (7): keep the phi(S,t) *first* clients after ordering by
+        # performance (ascending accuracy = worst first).
+        return _keep_lowest(a, filtered, keep)
+
+
+@dataclasses.dataclass(frozen=True)
+class ACSPFL(SelectionStrategy):
+    """ACSP-FL adaptive selection (paper §3.2-3.3).
+
+    Identical selection law to DEEV (the paper extends DEEV); the ACSP-FL
+    *system* additionally enables personalization and partial model sharing,
+    which live in repro.core.layersharing / personalization and are wired by
+    the FL engine. Kept as a separate type so experiment configs read like
+    the paper.
+    """
+
+    decay: float = 0.005
+
+    def select(self, metrics: ClientMetrics, t, rng) -> jnp.ndarray:
+        a = metrics.accuracy
+        filtered = a <= jnp.mean(a)
+        cohort = jnp.sum(filtered)
+        keep = phi_decay(cohort, t, self.decay)
+        return _keep_lowest(a, filtered, keep)
+
+
+_REGISTRY = {
+    "fedavg": lambda **kw: FedAvgRandom(**{k: v for k, v in kw.items() if k in ("fraction",)}),
+    "poc": lambda **kw: PowerOfChoice(**{k: v for k, v in kw.items() if k in ("fraction", "candidate_factor")}),
+    "oort": lambda **kw: Oort(**{k: v for k, v in kw.items() if k in ("fraction", "alpha", "preferred_delay", "epsilon")}),
+    "deev": lambda **kw: DEEV(**{k: v for k, v in kw.items() if k in ("decay",)}),
+    "acsp-fl": lambda **kw: ACSPFL(**{k: v for k, v in kw.items() if k in ("decay",)}),
+}
+
+
+def get_strategy(name: str, **kwargs) -> SelectionStrategy:
+    key = name.lower()
+    if key not in _REGISTRY:
+        raise KeyError(f"unknown selection strategy {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[key](**kwargs)

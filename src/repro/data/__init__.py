@@ -1,0 +1,14 @@
+"""Federated data pipeline: shape-faithful synthetic HAR dataset family and
+non-IID partitioning (see DESIGN.md §5 deviation 1 — no network access, so
+UCI-HAR / MotionSense / ExtraSensory are reproduced as synthetic generators
+with the paper's client counts, feature/class dimensions and skew)."""
+
+from repro.data.synthetic import FederatedDataset, make_federated_classification
+from repro.data.har import DATASETS, make_har_dataset
+
+__all__ = [
+    "FederatedDataset",
+    "make_federated_classification",
+    "DATASETS",
+    "make_har_dataset",
+]

@@ -1,0 +1,6 @@
+"""FL runtime: single-host vmap'd simulation engine (repro.fl.engine) and
+the cross-silo distributed runtime over a TPU mesh (repro.fl.cross_silo)."""
+
+from repro.fl.engine import FLConfig, FLHistory, run_federated, make_round_step
+
+__all__ = ["FLConfig", "FLHistory", "run_federated", "make_round_step"]

@@ -1,0 +1,153 @@
+"""Cross-silo federated training over the production mesh — the paper's
+technique mapped onto TPU collectives (DESIGN.md §2.2).
+
+Each index along the data axes is one *silo* (client cohort) holding its own
+model replica (leaves carry a leading silo axis, sharded over data). A
+federated round is:
+
+  1. local step: vmap of the ordinary train step over the silo axis —
+     each silo trains on its own shard of the batch (model axis = TP/EP
+     within the silo);
+  2. masked partial aggregation (ACSP-FL Eq. 1 + K(w, L)): a weighted mean
+     over the silo axis of ONLY the shared prefix — embedding, prologue and
+     the first ``shared_periods`` scan periods. The mean over a
+     data-sharded axis lowers to an all-reduce over (pod, data); unshared
+     layers never hit the wire.
+
+PMS therefore divides the round's collective volume by ~(shared/total
+params) — the paper's communication-reduction claim, measurable directly as
+HLO collective bytes in the dry-run. ``shared_periods`` is static per
+compile (the server re-jits when DLD changes the cut; compiles are cached
+per value).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+
+
+import os as _os
+
+
+def _agg_dtype():
+    """§Perf hillclimb-3 lever: REPRO_FL_AGG_DTYPE=bf16 halves the
+    cross-silo all-reduce wire bytes (FL averaging over <=32 silos tolerates
+    bf16 accumulation; fp32 is the paper-faithful default)."""
+    return jnp.bfloat16 if _os.environ.get("REPRO_FL_AGG_DTYPE") == "bf16" else jnp.float32
+
+
+def _agg_over_silo(x: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Weighted mean over the leading silo axis, broadcast back (Eq. 1)."""
+    acc = _agg_dtype()
+    w = weights.reshape((-1,) + (1,) * (x.ndim - 1)).astype(acc)
+    # dtype= pins the reduction (and hence the silo-axis all-reduce wire
+    # format): jnp.sum silently accumulates bf16 in f32 otherwise
+    mean = (x.astype(acc) * w).sum(0, dtype=acc) / jnp.maximum(weights.sum(), 1e-9).astype(acc)
+    return jnp.broadcast_to(mean.astype(x.dtype), x.shape)
+
+
+def partial_aggregate_silo_params(silo_params, weights: jnp.ndarray, shared_periods: int):
+    """ACSP-FL partial aggregation of stacked silo params.
+
+    Shares (aggregates): 'embed', 'vision_proj', every 'prologue' block, and
+    stack periods [0, shared_periods). Keeps local (personalized): the
+    remaining periods, 'final_norm', 'head' — the paper's 'first layers
+    shared, upper layers personal' split (Fig. 3).
+    """
+    out = dict(silo_params)
+    for key in ("embed", "vision_proj"):
+        if key in out:
+            out[key] = _agg_over_silo(out[key], weights)
+    if "prologue" in out:
+        out["prologue"] = jax.tree.map(lambda x: _agg_over_silo(x, weights), out["prologue"])
+    if "stack" in out and shared_periods > 0:
+        def agg_stack(x):  # (silo, n_periods, ...)
+            sp = min(shared_periods, x.shape[1])
+            shared = _agg_over_silo(x[:, :sp], weights)
+            return jnp.concatenate([shared, x[:, sp:]], axis=1)
+
+        out["stack"] = jax.tree.map(agg_stack, out["stack"])
+    # whisper-family: encoder shared, decoder personalized
+    if "encoder" in out:
+        out["encoder"] = jax.tree.map(lambda x: _agg_over_silo(x, weights), out["encoder"])
+    return out
+
+
+def make_fl_round_step(cfg, bundle, optimizer, shared_periods: int, window: int = 0):
+    base_step = bundle.make_train_step(optimizer, window=window)
+
+    def fl_round(silo_params, silo_opt, batch, weights):
+        """silo_params/opt: leaves (n_silos, ...); batch leaves
+        (n_silos, local_batch, ...); weights (n_silos,) = select * |d_i|."""
+        new_p, new_o, losses = jax.vmap(base_step)(silo_params, silo_opt, batch)
+        new_p = partial_aggregate_silo_params(new_p, weights, shared_periods)
+        return new_p, new_o, jnp.mean(losses)
+
+    return fl_round
+
+
+# ---------------------------------------------------------------------------
+# dry-run builder (called by repro.launch.dryrun)
+# ---------------------------------------------------------------------------
+
+
+def build_fl_dryrun(cfg, bundle, shape, mesh, dp, shared_periods: int, meta: dict):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.sharding import tree_pspecs
+    from repro.models.api import make_batch_specs
+
+    n_silos = 1
+    for a in dp:
+        n_silos *= mesh.shape[a]
+    local_batch = max(shape.global_batch // n_silos, 1)
+
+    opt = adamw(3e-4)
+    params_sds = jax.eval_shape(bundle.init, jax.random.key(0))
+    silo_params_sds = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((n_silos,) + l.shape, l.dtype), params_sds
+    )
+    # per-silo optimizer state (vmap'd init gives every silo its own step)
+    silo_opt_sds = jax.eval_shape(jax.vmap(opt.init), silo_params_sds)
+
+    dp_s = dp if len(dp) > 1 else dp[0]
+
+    def siloify(spec_tree, sds_tree):
+        """prepend silo axis -> data axes on stacked leaves; scalars (e.g.
+        the shared optimizer step counter) stay replicated."""
+        flat_spec, treedef = jax.tree_util.tree_flatten(
+            spec_tree, is_leaf=lambda x: isinstance(x, P)
+        )
+        flat_sds = jax.tree_util.tree_leaves(sds_tree)
+        fixed = [
+            P(dp_s, *list(s)) if l.ndim == len(s) + 1 else P(*s)
+            for s, l in zip(flat_spec, flat_sds)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, fixed)
+
+    inner_specs = tree_pspecs(params_sds, mesh, ())  # model-only rules
+    silo_param_specs = siloify(inner_specs, silo_params_sds)
+    inner_opt = tree_pspecs(jax.eval_shape(opt.init, params_sds), mesh, ())
+    silo_opt_specs = siloify(inner_opt, silo_opt_sds)
+
+    bspecs = make_batch_specs(cfg, "train", local_batch, shape.seq_len)
+    batch_sds = {
+        k: jax.ShapeDtypeStruct((n_silos,) + s, d) for k, (s, d) in bspecs.items()
+    }
+    batch_specs = {k: P(dp_s, *([None] * len(s))) for k, (s, d) in bspecs.items()}
+
+    weights_sds = jax.ShapeDtypeStruct((n_silos,), jnp.float32)
+    weights_spec = P(dp_s)
+
+    fn = make_fl_round_step(cfg, bundle, opt, shared_periods, window=meta.get("window", 0))
+    meta = {**meta, "mode": "fl_round", "n_silos": n_silos, "shared_periods": shared_periods}
+    return (
+        fn,
+        (silo_params_sds, silo_opt_sds, batch_sds, weights_sds),
+        (silo_param_specs, silo_opt_specs, batch_specs, weights_spec),
+        (silo_param_specs, silo_opt_specs, P()),
+        meta,
+    )

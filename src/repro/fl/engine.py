@@ -1,0 +1,290 @@
+"""Federated simulation engine — the paper's Algorithms 1 & 2 as one jitted
+array program.
+
+Clients live on a stacked leading axis (C, ...) of every parameter leaf;
+local training is a vmap of (epochs x batches) SGD; selection, decay, DLD,
+partial aggregation and personalization all run inside the round step. A
+Python loop over rounds (server loop, Algorithm 1) collects history.
+
+Variant map (paper §4.4 naming):
+  ND    — strategy selection, NO personalization, NO decay, full model shared
+  FT    — fine-tuning personalization (Eq. 8), full model shared
+  PMS k — first k layers shared, rest personalized locally
+  DLD   — per-client dynamic layer count (Eq. 9)
+Baselines (FedAvg / POC / Oort / DEEV) use personalization='none',
+share all layers, and their own selection strategy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    fedavg_aggregate,
+    masked_partial_aggregate,
+    compose_model,
+    personalize_ft,
+    dynamic_layer_definition,
+    layer_share_mask,
+    get_strategy,
+)
+from repro.core.aggregation import transmitted_parameters
+from repro.core.layersharing import layer_param_sizes
+from repro.core.metrics import BYTES_PER_PARAM, CommModel
+from repro.core.selection import ClientMetrics
+from repro.data.synthetic import FederatedDataset
+from repro.models.mlp import init_mlp, mlp_apply, mlp_loss, mlp_accuracy
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    strategy: str = "acsp-fl"          # fedavg | poc | oort | deev | acsp-fl
+    personalization: str = "dld"       # none | ft | pms | dld
+    pms_layers: int = 2                # used when personalization == 'pms'
+    decay: float = 0.005               # phi decay (Eq. 6); 0 disables
+    fraction: float = 0.5              # k/C for poc/oort; 1.0 for fedavg
+    rounds: int = 100
+    epochs: int = 1                    # tau — local epochs
+    batch_size: int = 32
+    lr: float = 0.1
+    momentum: float = 0.0
+    seed: int = 0
+
+    def strategy_obj(self):
+        if self.strategy in ("deev", "acsp-fl"):
+            return get_strategy(self.strategy, decay=self.decay)
+        if self.strategy == "fedavg":
+            return get_strategy(self.strategy, fraction=self.fraction if self.fraction else 1.0)
+        return get_strategy(self.strategy, fraction=self.fraction)
+
+
+class FLHistory(NamedTuple):
+    """Per-round records (numpy, host-side)."""
+
+    accuracy_mean: np.ndarray      # (T,)
+    accuracy_per_client: np.ndarray  # (T, C)
+    selected: np.ndarray           # (T, C) bool
+    tx_params: np.ndarray          # (T,) uplink parameter count
+    tx_bytes_cum: np.ndarray       # (T,) cumulative uplink bytes
+    round_time: np.ndarray         # (T,) simulated seconds
+    pms: np.ndarray                # (T, C) layers shared per client
+
+
+class _RoundState(NamedTuple):
+    global_params: Any            # layered list, leaves (...)
+    local_params: Any             # layered list, leaves (C, ...)
+    accuracy: jnp.ndarray         # (C,)
+    select: jnp.ndarray           # (C,) bool
+    pms: jnp.ndarray              # (C,) int32 — layers each client will share
+    rng: jax.Array
+
+
+def _batched(x, y, m, batch_size: int):
+    """Trim to a whole number of batches and reshape to (nb, B, ...)."""
+    n = x.shape[0]
+    nb = max(1, n // batch_size)
+    take = nb * batch_size
+    if take > n:  # dataset smaller than one batch: single ragged batch
+        nb, take, batch_size = 1, n, n
+    return (
+        x[:take].reshape(nb, batch_size, *x.shape[1:]),
+        y[:take].reshape(nb, batch_size),
+        m[:take].reshape(nb, batch_size),
+    )
+
+
+def make_round_step(
+    data: FederatedDataset,
+    cfg: FLConfig,
+    apply_fn: Callable = mlp_apply,
+    loss_fn: Callable = mlp_loss,
+    acc_fn: Callable = mlp_accuracy,
+):
+    """Build the jitted round step closure over static data/config."""
+    strategy = cfg.strategy_obj()
+    n_layers_holder = {}
+
+    x_tr = jnp.asarray(data.x_train)
+    y_tr = jnp.asarray(data.y_train)
+    m_tr = jnp.asarray(data.m_train)
+    x_te = jnp.asarray(data.x_test)
+    y_te = jnp.asarray(data.y_test)
+    m_te = jnp.asarray(data.m_test)
+    n_samples = jnp.asarray(data.n_samples, jnp.float32)
+    # Oort's systemic term: per-client delay, fixed per experiment
+    delay = jax.random.uniform(jax.random.PRNGKey(cfg.seed + 99), (data.n_clients,), minval=0.5, maxval=2.0)
+
+    def local_fit(params, x, y, m, rng):
+        """Algorithm 2 LocalTrain: tau epochs of minibatch SGD."""
+        xb, yb, mb = _batched(x, y, m, cfg.batch_size)
+
+        def epoch(params, _):
+            def step(params, batch):
+                bx, by, bm = batch
+                grads = jax.grad(loss_fn)(params, bx, by, bm)
+                new = jax.tree.map(lambda p, g: p - cfg.lr * g, params, grads)
+                return new, ()
+
+            params, _ = jax.lax.scan(step, params, (xb, yb, mb))
+            return params, ()
+
+        params, _ = jax.lax.scan(epoch, params, None, length=cfg.epochs)
+        return params
+
+    def round_step(state: _RoundState, t: jnp.ndarray):
+        g, loc = state.global_params, state.local_params
+        n_layers = len(g)
+        n_layers_holder["n"] = n_layers
+        share = layer_share_mask(n_layers, state.pms)  # (C, L)
+
+        rng, r_fit, r_sel = jax.random.split(state.rng, 3)
+
+        # --- personalization phase: build each client's training model ---
+        if cfg.personalization == "ft":
+            loss_loc = jax.vmap(lambda p, x, y, m: loss_fn(p, x, y, m))(loc, x_te, y_te, m_te)
+            loss_glob = jax.vmap(lambda x, y, m: loss_fn(g, x, y, m))(x_te, y_te, m_te)
+            train_model = personalize_ft(loc, g, loss_loc, loss_glob)
+        elif cfg.personalization == "none":
+            train_model = jax.tree.map(
+                lambda gl: jnp.broadcast_to(gl, (data.n_clients,) + gl.shape), g
+            )
+        else:  # pms / dld — compose shared global layers with local ones
+            train_model = compose_model(g, loc, share)
+
+        # --- local training (all lanes compute; unselected discarded) ---
+        fit_rngs = jax.random.split(r_fit, data.n_clients)
+        trained = jax.vmap(local_fit)(train_model, x_tr, y_tr, m_tr, fit_rngs)
+
+        sel_f = state.select
+        new_local = jax.tree.map(
+            lambda new, old: jnp.where(
+                sel_f.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
+            ),
+            trained,
+            loc if cfg.personalization != "none" else train_model,
+        )
+
+        # --- aggregation of shared pieces (Eq. 1, masked/partial) ---
+        if cfg.personalization in ("pms", "dld"):
+            new_global = masked_partial_aggregate(trained, g, state.select, n_samples, share)
+        else:
+            new_global = fedavg_aggregate(trained, state.select, n_samples)
+
+        # --- evaluation phase: distributed accuracy on composed models ---
+        if cfg.personalization in ("pms", "dld"):
+            eval_model = compose_model(new_global, new_local, share)
+        elif cfg.personalization == "ft":
+            loss_loc2 = jax.vmap(lambda p, x, y, m: loss_fn(p, x, y, m))(new_local, x_te, y_te, m_te)
+            loss_glob2 = jax.vmap(lambda x, y, m: loss_fn(new_global, x, y, m))(x_te, y_te, m_te)
+            eval_model = personalize_ft(new_local, new_global, loss_loc2, loss_glob2)
+        else:
+            eval_model = jax.tree.map(
+                lambda gl: jnp.broadcast_to(gl, (data.n_clients,) + gl.shape), new_global
+            )
+        acc = jax.vmap(lambda p, x, y, m: acc_fn(p, x, y, m))(eval_model, x_te, y_te, m_te)
+        loss_now = jax.vmap(lambda p, x, y, m: loss_fn(p, x, y, m))(eval_model, x_te, y_te, m_te)
+
+        # --- communication accounting for THIS round (uplink) ---
+        sizes = layer_param_sizes(g)
+        tx = transmitted_parameters(state.select, share, sizes)
+
+        # --- client selection for next round (Algorithm 1 l.12) ---
+        metrics = ClientMetrics(accuracy=acc, loss=loss_now, n_samples=n_samples, delay=delay)
+        next_select = strategy.select(metrics, t, r_sel)
+
+        # --- next round's PMS (layers to share) ---
+        if cfg.personalization == "dld":
+            next_pms = dynamic_layer_definition(acc, n_layers)
+        elif cfg.personalization == "pms":
+            next_pms = jnp.full((data.n_clients,), cfg.pms_layers, jnp.int32)
+        else:
+            next_pms = jnp.full((data.n_clients,), n_layers, jnp.int32)
+
+        new_state = _RoundState(new_global, new_local, acc, next_select, next_pms, rng)
+        out = {
+            "acc": acc,
+            "selected": state.select,
+            "tx_params": tx,
+            "pms": state.pms,
+        }
+        return new_state, out
+
+    return round_step
+
+
+def run_federated(
+    data: FederatedDataset,
+    cfg: FLConfig,
+    init_fn: Callable | None = None,
+    apply_fn: Callable = mlp_apply,
+    loss_fn: Callable = mlp_loss,
+    acc_fn: Callable = mlp_accuracy,
+    comm: CommModel | None = None,
+    progress: bool = False,
+) -> FLHistory:
+    """Run ``cfg.rounds`` federated rounds; returns host-side history."""
+    rng = jax.random.PRNGKey(cfg.seed)
+    r_init, r_loop = jax.random.split(rng)
+    if init_fn is None:
+        init_fn = lambda r: init_mlp(r, data.n_features, data.n_classes)
+    g0 = init_fn(r_init)
+    n_layers = len(g0)
+    # every client starts from the same init (paper: server broadcasts w(0))
+    loc0 = jax.tree.map(lambda gl: jnp.broadcast_to(gl, (data.n_clients,) + gl.shape), g0)
+
+    # Algorithm 1: round 1 selects ALL clients; the shared piece is cut from
+    # the first round in PMS mode (DLD starts full: A=0 <= 0.25 -> all layers)
+    pms0 = cfg.pms_layers if cfg.personalization == "pms" else n_layers
+    state = _RoundState(
+        global_params=g0,
+        local_params=loc0,
+        accuracy=jnp.zeros((data.n_clients,)),
+        select=jnp.ones((data.n_clients,), bool),
+        pms=jnp.full((data.n_clients,), pms0, jnp.int32),
+        rng=r_loop,
+    )
+    round_step = jax.jit(make_round_step(data, cfg, apply_fn, loss_fn, acc_fn))
+
+    comm = comm or CommModel()
+    sizes_np = None
+    accs, sel_hist, tx_hist, pms_hist, times = [], [], [], [], []
+    for t in range(cfg.rounds):
+        state, out = round_step(state, jnp.asarray(t))
+        out = jax.device_get(out)
+        if sizes_np is None:
+            sizes_np = np.asarray(jax.device_get(layer_param_sizes(state.global_params)))
+        accs.append(out["acc"])
+        sel_hist.append(out["selected"])
+        tx_hist.append(float(out["tx_params"]))
+        pms_hist.append(out["pms"])
+        # simulated round time: slowest selected client
+        per_client_params = (np.asarray(out["pms"])[:, None] > np.arange(len(sizes_np))[None, :]) @ sizes_np
+        flops = 6.0 * per_client_params * np.asarray(data.n_samples) * cfg.epochs
+        times.append(
+            float(
+                comm.round_time(
+                    jnp.asarray(per_client_params * BYTES_PER_PARAM, jnp.float32),
+                    jnp.asarray(flops, jnp.float32),
+                    jnp.asarray(out["selected"]),
+                )
+            )
+        )
+        if progress and (t % 10 == 0 or t == cfg.rounds - 1):
+            print(f"  round {t:3d}  acc={np.mean(out['acc']):.4f}  |S|={int(np.sum(out['selected']))}")
+
+    acc_pc = np.stack(accs)
+    tx = np.asarray(tx_hist)
+    return FLHistory(
+        accuracy_mean=acc_pc.mean(axis=1),
+        accuracy_per_client=acc_pc,
+        selected=np.stack(sel_hist),
+        tx_params=tx,
+        tx_bytes_cum=np.cumsum(tx * BYTES_PER_PARAM),
+        round_time=np.asarray(times),
+        pms=np.stack(pms_hist),
+    )

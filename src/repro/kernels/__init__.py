@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel subpackage has:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, reshape, interpret switch)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels:
+  flash_attention  — causal GQA attention, online softmax (train/prefill hot spot)
+  masked_aggregate — ACSP-FL Eq. (1): fused masked weighted client average
+                     (the server hot spot of the paper)
+  ssm_scan         — Mamba-1 selective scan, chunked (falcon-mamba / jamba)
+
+This container is CPU-only: kernels are validated with interpret=True; on a
+real TPU set interpret=False (the default chooses by backend).
+"""
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.masked_aggregate.ops import masked_aggregate
+from repro.kernels.ssm_scan.ops import ssm_scan
+
+__all__ = ["flash_attention", "masked_aggregate", "ssm_scan"]

@@ -1,0 +1,114 @@
+"""Flash attention Pallas TPU kernel (causal GQA, online softmax).
+
+Grid: (B, H, n_q_blocks, n_kv_blocks) — the last axis is innermost and
+sequential on TPU, so the (m, l, acc) running-softmax state lives in VMEM
+scratch and persists across kv iterations for a fixed q block.
+
+BlockSpecs (VMEM tiles):
+  q   (B, H,   S, D) -> (1, 1, BQ, D)   index (b, h, iq, ik) -> (b, h,      iq)
+  k   (B, Hkv, T, D) -> (1, 1, BK, D)   index                -> (b, h // G, ik)
+  v   same as k
+  out (B, H,   S, D) -> (1, 1, BQ, D)   index                -> (b, h,      iq)
+
+GQA is expressed purely through the k/v index_map (h -> h // G): kv tiles
+are fetched per kv-head, never materialised per q-head. BQ/BK default 128 —
+MXU-aligned (the contraction dims are D and BK, both multiples of 128 for
+the assigned archs; D=160 stablelm still lane-aligns at 8x128 tiling).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, causal, window, bq, bk, n_kv, t_real):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (BQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)            # (BK, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (BQ, BK)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < t_real  # padded kv tail is never attended
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                             # (BQ,)
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        o_ref[0, 0, ...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jnp.ndarray,  # (B, H, S, D)
+    k: jnp.ndarray,  # (B, Hkv, T, D)
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+    t_real: int | None = None,
+) -> jnp.ndarray:
+    b, h, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    assert s % bq == 0 and t % bk == 0, "ops.py pads to block multiples"
+    n_q, n_kv = s // bq, t // bk
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window, bq=bq, bk=bk,
+        n_kv=n_kv, t_real=t_real if t_real is not None else t,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, iq, ik, g=g: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, iq, ik, g=g: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),   # m — running max
+            pltpu.VMEM((bq,), jnp.float32),   # l — running denom
+            pltpu.VMEM((bq, d), jnp.float32), # acc — running numerator
+        ],
+        interpret=interpret,
+    )(q, k, v)

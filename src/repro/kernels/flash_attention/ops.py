@@ -1,0 +1,57 @@
+"""jit'd public wrapper for the flash attention kernel.
+
+Handles padding to block multiples, backend selection (interpret on CPU),
+and the (B, S, H, D) <-> (B, H, S, D) layout used by the model code.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,  # (B, S, H, D) — model layout
+    k: jnp.ndarray,  # (B, T, Hkv, D)
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = _default_interpret()
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    bq = min(block_q, max(8, s))
+    bk = min(block_k, max(8, t))
+    pad_q = (-s) % bq
+    pad_k = (-t) % bk
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # padded kv positions are masked out by causality only if they come
+        # after every real query -> they do (appended at the end)
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    out = flash_attention_kernel(
+        qt, kt, vt, causal=causal, window=window,
+        block_q=bq, block_k=bk, interpret=interpret, t_real=t,
+    )
+    if pad_q:
+        out = out[:, :, :s]
+    return out.transpose(0, 2, 1, 3)

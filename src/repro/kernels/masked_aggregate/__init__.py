@@ -1,0 +1,3 @@
+from repro.kernels.masked_aggregate.ops import masked_aggregate
+
+__all__ = ["masked_aggregate"]

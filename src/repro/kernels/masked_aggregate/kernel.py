@@ -1,0 +1,58 @@
+"""masked_aggregate Pallas TPU kernel — ACSP-FL's server aggregation (Eq. 1).
+
+out[p] = sum_c w_c * x[c, p] / sum_c w_c      (fallback[p] if sum w == 0)
+
+This fuses the selection mask, |d_i| weighting and the division in one pass
+over the stacked client parameters — the per-round server hot spot (runs
+over the full parameter set every communication round).
+
+Grid: (n_param_blocks,). BlockSpecs:
+  x        (C, P) -> (C, BP)  — all clients of one param tile in VMEM
+  weights  (C,)   -> (C,)     — broadcast to every tile (index_map -> 0)
+  fallback (P,)   -> (BP,)
+  out      (P,)   -> (BP,)
+
+The client axis C (30-120 in the paper) fits VMEM alongside a BP=512 tile:
+C x BP x 4B ~ 240 KiB at C=120 — well inside the ~16 MiB VMEM budget; BP
+can grow to 8192 before tiling pressure.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _agg_kernel(x_ref, w_ref, fb_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)        # (C, BP)
+    w = w_ref[...].astype(jnp.float32)        # (C,)
+    total = jnp.sum(w)
+    mean = jnp.sum(x * w[:, None], axis=0) / jnp.maximum(total, 1e-12)
+    o_ref[...] = jnp.where(total > 0, mean, fb_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def masked_aggregate_kernel(
+    x: jnp.ndarray,         # (C, P)
+    weights: jnp.ndarray,   # (C,)
+    fallback: jnp.ndarray,  # (P,)
+    block_p: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    c, p = x.shape
+    bp = min(block_p, p)
+    assert p % bp == 0, "ops.py pads the param axis"
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=(p // bp,),
+        in_specs=[
+            pl.BlockSpec((c, bp), lambda i: (0, i)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), x.dtype),
+        interpret=interpret,
+    )(x, weights, fallback)

@@ -1,0 +1,46 @@
+"""jit'd wrapper: flatten a stacked client pytree, pad, run the kernel,
+unflatten. Drop-in accelerated replacement for
+repro.core.aggregation.fedavg_aggregate on one layer's leaves.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_aggregate.kernel import masked_aggregate_kernel
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_p", "interpret"))
+def masked_aggregate(
+    x: jnp.ndarray,          # (C, ...) one stacked leaf
+    weights: jnp.ndarray,    # (C,)
+    fallback: jnp.ndarray,   # (...) same shape as x[0]
+    block_p: int = 512,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = _default_interpret()
+    c = x.shape[0]
+    shape = x.shape[1:]
+    xf = x.reshape(c, -1)
+    fb = fallback.reshape(-1)
+    p = xf.shape[1]
+    bp = min(block_p, max(p, 8))
+    pad = (-p) % bp
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad)))
+        fb = jnp.pad(fb, (0, pad))
+    out = masked_aggregate_kernel(xf, weights, fb, block_p=bp, interpret=interpret)
+    return out[:p].reshape(shape)
+
+
+def aggregate_tree(client_params, weights, fallback_tree, **kw):
+    """Apply the kernel leaf-wise over a stacked pytree."""
+    return jax.tree.map(lambda x, f: masked_aggregate(x, weights, f, **kw), client_params, fallback_tree)

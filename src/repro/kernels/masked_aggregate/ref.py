@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for masked_aggregate (paper Eq. 1 hot loop)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_aggregate_ref(
+    x: jnp.ndarray,         # (C, P) stacked client parameter block
+    weights: jnp.ndarray,   # (C,) select_mask * n_samples (already fused)
+    fallback: jnp.ndarray,  # (P,) previous global value (used if sum w == 0)
+) -> jnp.ndarray:
+    w = weights.astype(jnp.float32)
+    total = w.sum()
+    mean = (x.astype(jnp.float32) * w[:, None]).sum(axis=0) / jnp.maximum(total, 1e-12)
+    return jnp.where(total > 0, mean, fallback.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.ssm_scan.ops import ssm_scan
+
+__all__ = ["ssm_scan"]

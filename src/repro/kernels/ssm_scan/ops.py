@@ -1,0 +1,43 @@
+"""jit'd wrapper for the ssm_scan kernel (padding + backend select)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import ssm_scan_kernel
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(
+    dt: jnp.ndarray,    # (B, S, di)
+    a: jnp.ndarray,     # (di, ds)
+    bmat: jnp.ndarray,  # (B, S, ds)
+    cmat: jnp.ndarray,  # (B, S, ds)
+    x: jnp.ndarray,     # (B, S, di)
+    d: jnp.ndarray,     # (di,)
+    chunk: int = 256,
+    interpret: bool | None = None,
+):
+    """Returns (y (B,S,di), h_final (B,di,ds))."""
+    if interpret is None:
+        interpret = _default_interpret()
+    b, s, di = x.shape
+    cs = min(chunk, s)
+    pad = (-s) % cs
+    if pad:
+        z3 = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        dt, bmat, cmat, x = z3(dt), z3(bmat), z3(cmat), z3(x)
+        # padded steps have dt=0 -> exp(0)=1, dB=0: state unchanged; y tail dropped
+    y, h = ssm_scan_kernel(
+        dt.astype(jnp.float32), a.astype(jnp.float32),
+        bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+        x, d.astype(jnp.float32), chunk=cs, interpret=interpret,
+    )
+    return y[:, :s], h

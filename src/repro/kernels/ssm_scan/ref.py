@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(
+    dt: jnp.ndarray,    # (B, S, di) fp32, post-softplus
+    a: jnp.ndarray,     # (di, ds) fp32, negative
+    bmat: jnp.ndarray,  # (B, S, ds)
+    cmat: jnp.ndarray,  # (B, S, ds)
+    x: jnp.ndarray,     # (B, S, di)
+    d: jnp.ndarray,     # (di,)
+    h0: jnp.ndarray | None = None,  # (B, di, ds)
+):
+    """Returns (y (B,S,di), h_final (B,di,ds))."""
+    b, s, di = x.shape
+    ds = a.shape[1]
+    h = jnp.zeros((b, di, ds), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp
+        da = jnp.exp(dt_t[..., None] * a[None])
+        h = da * h + dt_t[..., None] * b_t[:, None, :] * x_t[..., None]
+        y_t = (h * c_t[:, None, :]).sum(-1) + d * x_t
+        return h, y_t
+
+    inps = (
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        bmat.transpose(1, 0, 2).astype(jnp.float32),
+        cmat.transpose(1, 0, 2).astype(jnp.float32),
+        x.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    h, ys = jax.lax.scan(step, h, inps)
+    return ys.transpose(1, 0, 2), h

@@ -1,0 +1,75 @@
+"""Trace-time mesh context: lets model code add sharding constraints (and
+switch the MoE to expert-parallel shard_map) only when lowering for a mesh.
+
+On CPU smoke tests no mesh is set and every hook is a no-op, so the model
+code stays backend-agnostic.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+_DP_AXES: tuple[str, ...] = ("data",)
+_MOE_EP: bool = True
+_SEQ_PARALLEL: bool = False
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, dp_axes=("data",), moe_ep: bool = True, seq_parallel: bool = False):
+    global _MESH, _DP_AXES, _MOE_EP, _SEQ_PARALLEL
+    prev = (_MESH, _DP_AXES, _MOE_EP, _SEQ_PARALLEL)
+    _MESH, _DP_AXES, _MOE_EP, _SEQ_PARALLEL = mesh, tuple(dp_axes), moe_ep, seq_parallel
+    try:
+        with jax.set_mesh(mesh):
+            yield
+    finally:
+        _MESH, _DP_AXES, _MOE_EP, _SEQ_PARALLEL = prev
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def dp_axes() -> tuple[str, ...]:
+    return _DP_AXES
+
+
+def dp_spec():
+    return _DP_AXES if len(_DP_AXES) > 1 else _DP_AXES[0]
+
+
+def moe_ep_enabled() -> bool:
+    return _MESH is not None and _MOE_EP
+
+
+def seq_parallel_enabled() -> bool:
+    return _MESH is not None and _SEQ_PARALLEL
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint iff a mesh context is active.
+
+    spec entries: 'dp' expands to the data axes tuple, 'model' stays, None
+    stays. Dims whose size doesn't divide the axis product are left None.
+    """
+    if _MESH is None:
+        return x
+    resolved = []
+    for dim, s in zip(x.shape, spec):
+        if s == "dp":
+            axes = _DP_AXES if len(_DP_AXES) > 1 else _DP_AXES[0]
+            n = 1
+            for a in _DP_AXES:
+                n *= _MESH.shape[a]
+            resolved.append(axes if dim % n == 0 and dim >= n else None)
+        elif s == "model":
+            n = _MESH.shape["model"]
+            resolved.append("model" if dim % n == 0 and dim >= n else None)
+        else:
+            resolved.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, P(*resolved)))

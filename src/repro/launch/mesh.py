@@ -1,0 +1,35 @@
+"""Production mesh definition (TPU v5e pods; 256 chips/pod).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before first init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod, or 2x16x16 across two pods.
+
+    Axes:
+      pod   — inter-pod data parallelism (DCN-ish; FL silo groups span it)
+      data  — intra-pod data parallel / ZeRO / FL silo axis
+      model — tensor/expert parallel
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(multi_pod: bool = False):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+HW = {
+    # TPU v5e per-chip constants (assignment-specified)
+    "peak_flops_bf16": 197e12,   # FLOP/s
+    "hbm_bw": 819e9,             # B/s
+    "ici_bw": 50e9,              # B/s per link
+    "chips_per_pod": 256,
+}

@@ -1,0 +1,180 @@
+"""Path-based sharding rules for parameters, optimizer states, batches and
+caches over the production mesh.
+
+Baseline policy (recorded per-pair in EXPERIMENTS.md; hillclimbs adjust it):
+  - params / optimizer moments: 2-D sharded — one dim over the data axes
+    (ZeRO/FSDP), one over `model` (TP/EP). Expert axes always go to `model`
+    (expert parallelism). A dim is sharded only if divisible.
+  - activations: batch over data axes.
+  - decode KV caches: batch over data (when divisible), seq over model.
+  - norms / biases / scalars: replicated.
+
+The rule is *path-aware* (expert weights, embeddings) and works unchanged
+for optimizer-state trees because their paths embed the parameter paths.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def param_spec(path: str, shape: tuple[int, ...], mesh: Mesh, dp_axes) -> P:
+    """PartitionSpec for one parameter (or optimizer-moment) leaf."""
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    dp = (dp_axes if len(dp_axes) > 1 else dp_axes[0]) if dp_axes else None
+    n_dp = _axis_size(mesh, dp_axes) if dp_axes else 0
+    n_mp = mesh.shape["model"]
+
+    stacked = "/stack/" in f"/{path}/"  # leading period axis — never sharded
+    lead = 1 if stacked else 0
+    spec: list[Any] = [None] * nd
+
+    leaf_name = path.rsplit("/", 1)[-1]
+    # mamba mixer params: the CONTRACTION/feature dim is d_inner, which must
+    # align with the activations' model sharding (generic last-dim rules
+    # would shard x_proj's tiny output dim / A_log's d_state instead,
+    # forcing XLA to gather the di-sharded activations every layer).
+    mamba_rules = {
+        "x_proj": ("model", None),        # (di, dtr+2ds)
+        "out_proj": ("model", dp),        # (di, d)
+        "A_log": ("model", None),         # (di, ds)
+        "D": ("model",),                  # (di,)
+        "dt_bias": ("model",),            # (di,)
+        "conv_w": (None, "model"),        # (dc, di)
+        "conv_b": ("model",),             # (di,)
+    }
+    if leaf_name in mamba_rules and "mixer" in path:
+        rule = mamba_rules[leaf_name]
+        if nd - lead == len(rule):
+            full = [None] * lead + list(rule)
+            out = []
+            for dim, s in zip(shape, full):
+                if s == "model":
+                    out.append("model" if dim % n_mp == 0 and dim >= n_mp else None)
+                elif s is not None and dp:
+                    out.append(dp if dim % n_dp == 0 and dim >= n_dp else None)
+                else:
+                    out.append(None)
+            return P(*out)
+
+    is_expert = any(f"/{k}/" in f"/{path}/" for k in ("moe",)) and leaf_name in ("wg", "wu", "wd")
+    if is_expert and nd - lead == 3:
+        # (E, d_in, d_out): experts -> model (EP), d_in -> data (ZeRO)
+        if shape[lead] % n_mp == 0:
+            spec[lead] = "model"
+        if dp and shape[lead + 1] % n_dp == 0:
+            spec[lead + 1] = dp
+        return P(*spec)
+
+    # generic: last dim -> model, first non-layer dim -> data
+    if nd - lead >= 1 and shape[-1] % n_mp == 0 and shape[-1] >= n_mp:
+        spec[-1] = "model"
+    if dp and nd - lead >= 2 and shape[lead] % n_dp == 0 and shape[lead] >= n_dp and spec[lead] is None:
+        spec[lead] = dp
+    return P(*spec)
+
+
+def tree_pspecs(tree, mesh: Mesh, dp_axes) -> Any:
+    """PartitionSpec tree mirroring ``tree`` (works on eval_shape outputs)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = [param_spec(_path_str(p), l.shape, mesh, dp_axes) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def tree_shardings(tree, mesh: Mesh, dp_axes):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_pspecs(tree, mesh, dp_axes),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# batches & caches
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(name: str, shape: tuple[int, ...], mesh: Mesh, dp_axes) -> P:
+    n_dp = _axis_size(mesh, dp_axes)
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    if len(shape) == 0:
+        return P()
+    if shape[0] % n_dp == 0 and shape[0] >= n_dp:
+        return P(*([dp] + [None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def cache_spec(path: str, shape: tuple[int, ...], mesh: Mesh, dp_axes) -> P:
+    """Decode caches: batch -> data, seq -> model (flash-decode layout);
+    SSM state: batch -> data, d_inner -> model."""
+    n_dp = _axis_size(mesh, dp_axes)
+    n_mp = mesh.shape["model"]
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    leaf = path.rsplit("/", 1)[-1]
+    stacked = "/stack/" in f"/{path}/"
+    lead = 1 if stacked else 0
+    spec: list[Any] = [None] * len(shape)
+    if len(shape) == 0:
+        return P()
+
+    if leaf in ("k", "v", "c_kv", "k_rope"):
+        # (B, T, ...) [+ leading period axis]
+        if shape[lead] % n_dp == 0 and shape[lead] >= n_dp:
+            spec[lead] = dp
+        if shape[lead + 1] % n_mp == 0 and shape[lead + 1] >= n_mp:
+            spec[lead + 1] = "model"
+        return P(*spec)
+    if leaf == "kv_pos":
+        if shape[lead] % n_mp == 0 and shape[lead] >= n_mp:
+            spec[lead] = "model"
+        return P(*spec)
+    if leaf in ("conv", "ssm"):
+        # (B, dc-1, di) / (B, di, ds)
+        if shape[lead] % n_dp == 0 and shape[lead] >= n_dp:
+            spec[lead] = dp
+        di_dim = lead + 2 if leaf == "conv" else lead + 1
+        if di_dim < len(shape) and shape[di_dim] % n_mp == 0:
+            spec[di_dim] = "model"
+        return P(*spec)
+    if leaf == "enc_out":
+        if shape[0] % n_dp == 0 and shape[0] >= n_dp:
+            spec[0] = dp
+        if shape[-1] % n_mp == 0:
+            spec[-1] = "model"
+        return P(*spec)
+    return P(*spec)  # pos scalar etc: replicated
+
+
+def cache_pspecs(cache_tree, mesh: Mesh, dp_axes):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    specs = [cache_spec(_path_str(p), l.shape, mesh, dp_axes) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)

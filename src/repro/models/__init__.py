@@ -1,0 +1,5 @@
+"""Model zoo: the paper's MLP plus the ten assigned LLM architectures."""
+
+from repro.models.mlp import init_mlp, mlp_apply, mlp_loss, mlp_accuracy, MLP_HIDDEN
+
+__all__ = ["init_mlp", "mlp_apply", "mlp_loss", "mlp_accuracy", "MLP_HIDDEN"]

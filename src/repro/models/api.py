@@ -1,0 +1,104 @@
+"""Uniform model API over decoder-only and encoder-decoder families.
+
+    bundle = get_model(cfg)
+    params = bundle.init(rng)
+    step   = bundle.make_train_step(optimizer, window=0)
+    ...
+
+Every assigned architecture is selectable via ``get_config(arch)`` +
+``get_model``; the launcher and smoke tests only touch this facade.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.models import whisper as W
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    loss_fn: Callable
+    make_train_step: Callable
+    make_prefill_step: Callable
+    make_decode_step: Callable
+    init_cache: Callable  # (batch, seq, window) -> cache
+
+
+def get_model(cfg: ModelConfig) -> ModelBundle:
+    if cfg.encoder_decoder:
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda rng: W.init_whisper(rng, cfg),
+            loss_fn=lambda p, batch, window=0: W.whisper_loss(p, cfg, batch, window),
+            make_train_step=lambda opt, window=0: W.make_train_step(cfg, opt, window),
+            make_prefill_step=lambda window=0: W.make_prefill_step(cfg, window),
+            make_decode_step=lambda window=0: W.make_decode_step(cfg, window),
+            init_cache=lambda batch, seq, window=0: W.init_whisper_cache(cfg, batch, seq, window),
+        )
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda rng: T.init_params(rng, cfg),
+        loss_fn=lambda p, batch, window=0: T.lm_loss(p, cfg, batch, window=window),
+        make_train_step=lambda opt, window=0: T.make_train_step(cfg, opt, window),
+        make_prefill_step=lambda window=0: T.make_prefill_step(cfg, window),
+        make_decode_step=lambda window=0: T.make_decode_step(cfg, window),
+        init_cache=lambda batch, seq, window=0: T.init_cache(cfg, batch, seq, window),
+    )
+
+
+def make_batch_specs(cfg: ModelConfig, kind: str, batch: int, seq: int):
+    """Concrete *shapes* (not arrays) for each input kind — single source of
+    truth shared by input_specs (dry-run) and the smoke tests."""
+    specs: dict[str, tuple[tuple[int, ...], Any]] = {}
+    if cfg.encoder_decoder:
+        dec_seq = min(seq, cfg.max_decoder_seq or seq)
+        if kind == "train":
+            specs["frames"] = ((batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+            specs["tokens"] = ((batch, dec_seq), jnp.int32)
+            specs["labels"] = ((batch, dec_seq), jnp.int32)
+        elif kind == "prefill":
+            specs["frames"] = ((batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+            specs["tokens"] = ((batch, dec_seq), jnp.int32)
+        return specs
+    if cfg.frontend == "vision_stub":
+        nv = cfg.n_vision_tokens
+        txt = max(seq - nv, 1)
+        if kind in ("train", "prefill"):
+            specs["vision_embeds"] = ((batch, nv, cfg.d_model), jnp.bfloat16)
+            specs["tokens"] = ((batch, txt), jnp.int32)
+            specs["positions"] = ((batch, nv + txt, 3), jnp.int32)
+            if kind == "train":
+                specs["labels"] = ((batch, txt), jnp.int32)
+        return specs
+    if kind in ("train", "prefill"):
+        specs["tokens"] = ((batch, seq), jnp.int32)
+        if kind == "train":
+            specs["labels"] = ((batch, seq), jnp.int32)
+    return specs
+
+
+def make_concrete_batch(cfg: ModelConfig, kind: str, batch: int, seq: int, rng: jax.Array):
+    """Random concrete batch matching make_batch_specs (smoke tests/examples)."""
+    specs = make_batch_specs(cfg, kind, batch, seq)
+    out = {}
+    for name, (shape, dtype) in specs.items():
+        rng, sub = jax.random.split(rng)
+        if dtype == jnp.int32:
+            if name == "positions":
+                s = shape[1]
+                lin = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :, None], shape)
+                out[name] = lin
+            else:
+                out[name] = jax.random.randint(sub, shape, 0, max(cfg.vocab_size, 2))
+        else:
+            out[name] = jax.random.normal(sub, shape, jnp.float32).astype(dtype)
+    return out

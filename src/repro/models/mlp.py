@@ -1,0 +1,49 @@
+"""The paper's model (§4.2): MLP with three hidden layers of 256 units,
+SGD + sparse categorical cross-entropy. Represented as a *layered* pytree
+(list of {'w','b'} dicts) so repro.core's layer-sharing machinery applies
+directly — layer 0..2 = hidden, layer 3 = softmax head (total 4, matching
+the paper's Eq. 9 where total layers = 4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MLP_HIDDEN = (256, 256, 256)
+
+
+def init_mlp(rng: jax.Array, n_features: int, n_classes: int, hidden=MLP_HIDDEN):
+    """He-initialized layered MLP params: [{'w','b'}, ...]."""
+    sizes = (n_features, *hidden, n_classes)
+    params = []
+    for i, (fan_in, fan_out) in enumerate(zip(sizes[:-1], sizes[1:])):
+        rng, sub = jax.random.split(rng)
+        w = jax.random.normal(sub, (fan_in, fan_out), jnp.float32) * jnp.sqrt(2.0 / fan_in)
+        params.append({"w": w, "b": jnp.zeros((fan_out,), jnp.float32)})
+    return params
+
+
+def mlp_apply(params, x: jnp.ndarray) -> jnp.ndarray:
+    """Forward pass -> logits. ReLU between layers, linear head."""
+    h = x
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def mlp_loss(params, x, y, mask) -> jnp.ndarray:
+    """Masked sparse categorical cross-entropy (paper's loss)."""
+    logits = mlp_apply(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def mlp_accuracy(params, x, y, mask) -> jnp.ndarray:
+    pred = jnp.argmax(mlp_apply(params, x), axis=-1)
+    m = mask.astype(jnp.float32)
+    return jnp.sum((pred == y).astype(jnp.float32) * m) / jnp.maximum(jnp.sum(m), 1.0)

@@ -1,0 +1,343 @@
+"""Decoder stack assembling the layer zoo into the ten architectures.
+
+Structure (compile-time bounded — scan over layer *periods*):
+
+  params = {
+    'embed':    (V_padded, D)
+    'prologue': [block_params, ...]          # cfg.first_dense unscanned layers
+    'stack':    [stacked_block_params, ...]  # one entry per position in the
+                                             # period; leaves (n_periods, ...)
+    'final_norm': (D,)
+    'head':     (D, V_padded)
+    (+ 'vision_proj' for vlm, 'pos_emb' for whisper-family decoders)
+  }
+
+A *period* is the repeating unit: 1 for uniform archs, cfg.attn_period (8)
+for jamba (7 mamba + 1 attn), lcm with moe_every for MoE interleaves. The
+scan over periods keeps HLO size ~constant in depth (MaxText-style).
+
+Caches mirror 'prologue'/'stack' structure; scan threads the per-period
+cache slices through as scan ys/xs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# layer plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str   # 'attn' (gqa/mla by cfg) | 'mamba'
+    moe: bool
+
+
+def layer_spec(cfg: ModelConfig, idx: int) -> LayerSpec:
+    if cfg.ssm and not cfg.is_attn_layer(idx):
+        return LayerSpec("mamba", cfg.is_moe_layer(idx))
+    return LayerSpec("attn", cfg.is_moe_layer(idx))
+
+
+def period_len(cfg: ModelConfig) -> int:
+    """Repeating unit length after the prologue."""
+    p = 1
+    if cfg.ssm and cfg.attn_period:
+        p = cfg.attn_period
+    if cfg.moe and cfg.moe_every > 1:
+        p = _lcm(p, cfg.moe_every)
+    return p
+
+
+def _lcm(a, b):
+    return a * b // math.gcd(a, b)
+
+
+def layer_plan(cfg: ModelConfig) -> tuple[list[LayerSpec], list[LayerSpec], int]:
+    """(prologue_specs, period_specs, n_periods)."""
+    pro = [layer_spec(cfg, i) for i in range(cfg.first_dense)]
+    body = cfg.n_layers - cfg.first_dense
+    p = period_len(cfg)
+    if body % p:
+        # ragged tail: fold the remainder into the prologue
+        extra = body % p
+        pro += [layer_spec(cfg, cfg.first_dense + i) for i in range(extra)]
+        body -= extra
+        offset = cfg.first_dense + extra
+    else:
+        offset = cfg.first_dense
+    period = [layer_spec(cfg, offset + i) for i in range(p)] if body else []
+    return pro, period, body // p if p else 0
+
+
+# ---------------------------------------------------------------------------
+# block init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_block(rng, cfg: ModelConfig, spec: LayerSpec):
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p: dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), dt)}
+    if spec.kind == "mamba":
+        p["mixer"] = L.init_mamba(k1, cfg)
+        if spec.moe:
+            p["norm2"] = jnp.ones((cfg.d_model,), dt)
+            p["moe"] = L.init_moe(k2, cfg)
+        elif cfg.d_ff:  # jamba: dense FFN on non-MoE layers
+            p["norm2"] = jnp.ones((cfg.d_model,), dt)
+            p["ffn"] = L.init_swiglu(k2, cfg)
+        return p
+    p["mixer"] = L.init_mla(k1, cfg) if cfg.attn_type == "mla" else L.init_gqa(k1, cfg)
+    p["norm2"] = jnp.ones((cfg.d_model,), dt)
+    if spec.moe:
+        p["moe"] = L.init_moe(k3, cfg)
+    else:
+        p["ffn"] = L.init_swiglu(k3, cfg)
+    return p
+
+
+def apply_block(p, x, positions, cfg: ModelConfig, spec: LayerSpec, *, cache=None, window=0, mode="train"):
+    """Pre-norm residual block. Returns (x, new_cache, aux_loss)."""
+    from repro.launch import context as ctx
+
+    if ctx.seq_parallel_enabled() and mode == "train":
+        # §Perf hillclimb-2 (sequence parallelism, Korthikanti et al.): keep
+        # the residual stream sharded over `model` along SEQ between blocks;
+        # norms/residuals run on 1/n_model of the tokens, and the TP
+        # all-reduce decomposes into reduce-scatter + all-gather.
+        x = ctx.constrain(x, "dp", "model", None)
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if spec.kind == "mamba":
+        mixed, new_cache = L.mamba_block(p["mixer"], h, cfg, cache=cache, mode=mode)
+    elif cfg.attn_type == "mla":
+        mixed, new_cache = L.mla_attention(p["mixer"], h, positions, cfg, cache=cache, window=window, mode=mode)
+    else:
+        mixed, new_cache = L.gqa_attention(p["mixer"], h, positions, cfg, cache=cache, window=window, mode=mode)
+    x = x + mixed
+    if "moe" in p:
+        h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        y, aux = L.moe_apply(p["moe"], h2, cfg)
+        x = x + y
+    elif "ffn" in p:
+        h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + L.swiglu(p["ffn"], h2)
+    return x, new_cache, aux
+
+
+def init_block_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, seq: int, window: int):
+    if spec.kind == "mamba":
+        return L.init_mamba_cache(cfg, batch)
+    if cfg.attn_type == "mla":
+        return L.init_mla_cache(cfg, batch, seq, window)
+    return L.init_gqa_cache(cfg, batch, seq, window)
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+
+def init_params(rng, cfg: ModelConfig):
+    pro_specs, period_specs, n_periods = layer_plan(cfg)
+    keys = jax.random.split(rng, 4 + len(pro_specs) + len(period_specs))
+    dt = jnp.dtype(cfg.dtype)
+    v, d = cfg.vocab_padded, cfg.d_model
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (v, d)) * 0.02).astype(dt),
+        "final_norm": jnp.ones((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(keys[1], (d, v)) * 0.02).astype(dt)
+    if cfg.frontend == "vision_stub":
+        params["vision_proj"] = (jax.random.normal(keys[2], (d, d)) * 0.02).astype(dt)
+
+    params["prologue"] = [
+        init_block(keys[4 + i], cfg, s) for i, s in enumerate(pro_specs)
+    ]
+    stack = []
+    base = 4 + len(pro_specs)
+    for j, s in enumerate(period_specs):
+        layer_keys = jax.random.split(keys[base + j], max(n_periods, 1))
+        stack.append(jax.vmap(lambda k: init_block(k, cfg, s))(layer_keys))
+    params["stack"] = stack
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, window: int = 0):
+    pro_specs, period_specs, n_periods = layer_plan(cfg)
+    pro = [init_block_cache(cfg, s, batch, seq, window) for s in pro_specs]
+    stack = []
+    for s in period_specs:
+        one = init_block_cache(cfg, s, batch, seq, window)
+        stack.append(jax.tree.map(lambda x: jnp.broadcast_to(x, (n_periods,) + x.shape).copy(), one))
+    return {"prologue": pro, "stack": stack, "pos": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, vision_embeds=None, encoder_out=None):
+    x = params["embed"][tokens]  # gather (B,S,D)
+    if cfg.frontend == "vision_stub" and vision_embeds is not None:
+        ve = vision_embeds.astype(x.dtype) @ params["vision_proj"]
+        x = jnp.concatenate([ve, x], axis=1)
+    return x
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,          # (B, S) int32
+    *,
+    positions: jnp.ndarray | None = None,   # (B,S,3) mrope / (S,) / scalar decode
+    vision_embeds: jnp.ndarray | None = None,
+    cache=None,
+    window: int = 0,
+    mode: str = "train",          # train | prefill | decode
+    remat: bool = True,
+):
+    """Returns (logits, new_cache, aux_loss_sum)."""
+    x = _embed_inputs(params, cfg, tokens, vision_embeds)
+    b, s, d = x.shape
+
+    if positions is None:
+        if mode == "decode":
+            positions = cache["pos"]
+        else:
+            positions = jnp.arange(s, dtype=jnp.int32)
+
+    pro_specs, period_specs, n_periods = layer_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def run_block(p, xx, c, spec):
+        return apply_block(p, xx, positions, cfg, spec, cache=c, window=window, mode=mode)
+
+    # prologue (unscanned)
+    new_pro_caches = []
+    for i, spec in enumerate(pro_specs):
+        c = cache["prologue"][i] if cache is not None else None
+        blk = partial(run_block, spec=spec)
+        if remat and mode == "train":
+            blk = jax.checkpoint(blk, static_argnums=())
+        x, nc, aux = blk(params["prologue"][i], x, c)
+        new_pro_caches.append(nc)
+        aux_total = aux_total + aux
+
+    # scanned periods
+    new_stack_caches = []
+    if n_periods:
+        def period_fn(carry, xs):
+            xx, aux_acc = carry
+            p_list = xs["params"]
+            c_list = xs.get("cache")
+            out_caches = []
+            for j, spec in enumerate(period_specs):
+                c = c_list[j] if c_list is not None else None
+                blk = partial(run_block, spec=spec)
+                if remat and mode == "train":
+                    blk = jax.checkpoint(blk)
+                xx, nc, aux = blk(p_list[j], xx, c)
+                out_caches.append(nc if nc is not None else 0)
+                aux_acc = aux_acc + aux
+            return (xx, aux_acc), out_caches
+
+        xs = {"params": params["stack"]}
+        if cache is not None:
+            xs["cache"] = cache["stack"]
+        (x, aux_total), stack_caches = jax.lax.scan(period_fn, (x, aux_total), xs)
+        new_stack_caches = stack_caches
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (x @ head).astype(jnp.float32)
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        pos0 = positions if mode == "decode" and positions.ndim == 0 else None
+        next_pos = (cache["pos"] + 1) if (cache is not None and mode == "decode") else jnp.asarray(s, jnp.int32)
+        new_cache = {"prologue": new_pro_caches, "stack": new_stack_caches, "pos": next_pos}
+    return logits, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# losses & steps
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, cfg: ModelConfig, batch, *, window: int = 0, remat: bool = True):
+    """Causal LM loss. batch: {'tokens' (B,S), 'labels' (B,S) with -1 = ignore,
+    optional 'vision_embeds', 'positions'}."""
+    logits, _, aux = forward(
+        params, cfg, batch["tokens"],
+        positions=batch.get("positions"),
+        vision_embeds=batch.get("vision_embeds"),
+        window=window, mode="train", remat=remat,
+    )
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # vlm: vision prefix emits logits too
+        logits = logits[:, -labels.shape[1]:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    safe = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    m = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return loss + 0.01 * aux
+
+
+def make_train_step(cfg: ModelConfig, optimizer, window: int = 0, remat: bool = True):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lambda p: lm_loss(p, cfg, batch, window=window, remat=remat))(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        from repro.optim import apply_updates
+
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, window: int = 0):
+    def prefill_step(params, batch):
+        logits, cache, _ = forward(
+            params, cfg, batch["tokens"],
+            positions=batch.get("positions"),
+            vision_embeds=batch.get("vision_embeds"),
+            window=window, mode="prefill", remat=False,
+        )
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, window: int = 0):
+    def decode_step(params, cache, token):
+        """token (B,1) int32 -> (logits (B,V), new_cache)."""
+        if cfg.rope_variant == "mrope":
+            b = token.shape[0]
+            p = cache["pos"]
+            positions = jnp.broadcast_to(p, (b, 1))[..., None].repeat(3, -1).astype(jnp.int32)
+        else:
+            positions = cache["pos"]
+        logits, new_cache, _ = forward(
+            params, cfg, token, positions=positions, cache=cache,
+            window=window, mode="decode", remat=False,
+        )
+        return logits[:, 0], new_cache
+
+    return decode_step

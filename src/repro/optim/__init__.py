@@ -1,0 +1,31 @@
+"""Pytree-based optimizers built from scratch (no optax in this environment).
+
+API mirrors the (init, update) gradient-transformation pattern:
+
+    opt = sgd(lr=0.01, momentum=0.9)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+
+from repro.optim.optim import (
+    Optimizer,
+    sgd,
+    adamw,
+    clip_by_global_norm,
+    chain,
+    apply_updates,
+    global_norm,
+    cosine_schedule,
+)
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "adamw",
+    "clip_by_global_norm",
+    "chain",
+    "apply_updates",
+    "global_norm",
+    "cosine_schedule",
+]

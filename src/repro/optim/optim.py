@@ -1,0 +1,138 @@
+"""Minimal, production-shaped optimizer library (pytree transformations).
+
+Implements SGD(+momentum), AdamW, global-norm clipping, chaining, and a
+cosine LR schedule — everything the paper's training (plain SGD on an MLP)
+and the assigned-architecture train steps need, without external deps.
+
+Design notes for the distributed runtime: optimizer states mirror the
+parameter pytree leaf-for-leaf, so whatever PartitionSpec shards a param
+shards its momenta too (repro.launch.sharding exploits this for ZeRO).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _as_schedule(lr) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.1):
+    """Linear warmup then cosine decay to ``floor * peak_lr``."""
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor * peak_lr + (1 - floor) * peak_lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    """SGD with optional (Nesterov) momentum — the paper's client optimizer."""
+    sched = _as_schedule(lr)
+
+    class State(NamedTuple):
+        step: jnp.ndarray
+        mu: Any
+
+    def init(params):
+        mu = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params) if momentum else None
+        return State(jnp.zeros((), jnp.int32), mu)
+
+    def update(grads, state, params=None):
+        lr_t = sched(state.step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32), state.mu, grads)
+            if nesterov:
+                upd = jax.tree.map(lambda m, g: -(lr_t * (momentum * m + g.astype(jnp.float32))), mu, grads)
+            else:
+                upd = jax.tree.map(lambda m: -(lr_t * m), mu)
+            return upd, State(state.step + 1, mu)
+        upd = jax.tree.map(lambda g: -(lr_t * g.astype(jnp.float32)), grads)
+        return upd, State(state.step + 1, None)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    """AdamW with fp32 first/second moments (standard LLM pretraining setup)."""
+    sched = _as_schedule(lr)
+
+    class State(NamedTuple):
+        step: jnp.ndarray
+        mu: Any
+        nu: Any
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return State(jnp.zeros((), jnp.int32), jax.tree.map(zeros, params), jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = sched(state.step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def u(m, v, p):
+            upd = -(lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps))
+            if weight_decay:
+                upd = upd - lr_t * weight_decay * p.astype(jnp.float32)
+            return upd
+
+        return jax.tree.map(u, mu, nu, params), State(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        norm = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+        return jax.tree.map(lambda g: g * scale, grads), state
+
+    return Optimizer(init, update)
+
+
+def chain(*transforms: Optimizer) -> Optimizer:
+    """Compose gradient transformations left-to-right (optax semantics)."""
+
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return Optimizer(init, update)

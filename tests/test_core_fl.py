@@ -1,0 +1,137 @@
+"""Unit tests: layer sharing (K, DLD Eq. 9), personalization (Eq. 8),
+aggregation (Eq. 1 + masked partial)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    compose_model,
+    cut_model,
+    dynamic_layer_definition,
+    fedavg_aggregate,
+    layer_share_mask,
+    masked_partial_aggregate,
+    num_layers,
+    personalize_ft,
+)
+from repro.core.aggregation import transmitted_parameters
+from repro.core.layersharing import layer_param_sizes, shared_param_count
+from repro.models.mlp import init_mlp
+
+
+def stacked_params(c=6, rng=jax.random.PRNGKey(0)):
+    base = init_mlp(rng, 10, 4, hidden=(8, 8))
+    return [
+        jax.tree.map(
+            lambda x, i=i: x[None] + jnp.arange(c, dtype=x.dtype).reshape((c,) + (1,) * x.ndim),
+            layer,
+        )
+        for i, layer in enumerate(base)
+    ], base
+
+
+def test_dld_equation9_values():
+    # PMS = 4 if A <= 0.25 else ceil(1/A)
+    acc = jnp.asarray([0.0, 0.1, 0.25, 0.26, 0.5, 0.51, 0.9, 1.0])
+    out = np.asarray(dynamic_layer_definition(acc, 4))
+    assert list(out) == [4, 4, 4, 4, 2, 2, 2, 1]
+
+
+def test_dld_clipped_to_total_layers():
+    out = np.asarray(dynamic_layer_definition(jnp.asarray([0.26]), 3))
+    assert out[0] == 3  # ceil(1/0.26)=4 clipped to 3
+
+
+def test_cut_model_and_sizes():
+    params = init_mlp(jax.random.PRNGKey(0), 561, 6)
+    assert num_layers(params) == 4
+    wg, wl = cut_model(params, 2)
+    assert len(wg) == 2 and len(wl) == 2
+    sizes = np.asarray(layer_param_sizes(params))
+    assert sizes[0] == 561 * 256 + 256
+    assert shared_param_count(params, 2) == int(sizes[:2].sum())
+    with pytest.raises(ValueError):
+        cut_model(params, 9)
+
+
+def test_layer_share_mask_scalar_and_vector():
+    m = np.asarray(layer_share_mask(4, jnp.asarray(2)))
+    assert list(m) == [True, True, False, False]
+    mv = np.asarray(layer_share_mask(3, jnp.asarray([0, 1, 3])))
+    assert mv.shape == (3, 3)
+    assert list(mv[2]) == [True, True, True]
+    assert list(mv[0]) == [False, False, False]
+
+
+def test_fedavg_aggregate_weighted_mean():
+    stacked, base = stacked_params(c=4)
+    sel = jnp.asarray([True, True, False, True])
+    n = jnp.asarray([1.0, 2.0, 100.0, 1.0])
+    agg = fedavg_aggregate(stacked[0], sel, n)
+    # expected: weighted mean of clients 0,1,3 with w 1,2,1
+    w = np.asarray([1, 2, 0, 1], np.float32)
+    for key in ("w", "b"):
+        x = np.asarray(stacked[0][key], np.float32)
+        expect = (x * w.reshape(-1, *([1] * (x.ndim - 1)))).sum(0) / w.sum()
+        np.testing.assert_allclose(np.asarray(agg[key]), expect, rtol=1e-5)
+
+
+def test_masked_partial_aggregate_keeps_unshared():
+    stacked, base = stacked_params(c=4)
+    prev = jax.tree.map(lambda x: x * 0 - 7.0, base)
+    sel = jnp.ones((4,), bool)
+    n = jnp.ones((4,))
+    share = layer_share_mask(3, jnp.asarray(1))  # only layer 0 shared
+    out = masked_partial_aggregate(stacked, prev, sel, n, share)
+    # layer 0 aggregated, layers 1-2 keep prev global (-7)
+    assert not np.allclose(np.asarray(out[0]["w"]), -7.0)
+    np.testing.assert_allclose(np.asarray(out[1]["w"]), -7.0)
+    np.testing.assert_allclose(np.asarray(out[2]["w"]), -7.0)
+
+
+def test_masked_partial_aggregate_ignores_unselected():
+    stacked, base = stacked_params(c=4)
+    prev = base
+    n = jnp.ones((4,))
+    share = layer_share_mask(3, jnp.asarray(3))
+    sel_a = jnp.asarray([True, True, False, False])
+    out_a = masked_partial_aggregate(stacked, prev, sel_a, n, share)
+    # changing an unselected client's params must not change the result
+    stacked_mod = jax.tree.map(lambda x: x.at[3].set(999.0), stacked)
+    out_b = masked_partial_aggregate(stacked_mod, prev, sel_a, n, share)
+    for a, b in zip(jax.tree.leaves(out_a), jax.tree.leaves(out_b)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_personalize_ft_eq8():
+    stacked, base = stacked_params(c=3)
+    loss_local = jnp.asarray([0.1, 5.0, 1.0])
+    loss_global = jnp.asarray([1.0, 1.0, 1.0])
+    out = personalize_ft(stacked, base, loss_local, loss_global)
+    # client 0 keeps local, client 1 takes global, client 2 local (tie-ish <=)
+    np.testing.assert_allclose(np.asarray(out[0]["w"][0]), np.asarray(stacked[0]["w"][0]))
+    np.testing.assert_allclose(np.asarray(out[0]["w"][1]), np.asarray(base[0]["w"]))
+    np.testing.assert_allclose(np.asarray(out[0]["w"][2]), np.asarray(stacked[0]["w"][2]))
+
+
+def test_compose_model_mixes_layers():
+    stacked, base = stacked_params(c=2)
+    glob = jax.tree.map(lambda x: x * 0 + 3.0, base)
+    share = jnp.asarray([[True, False, True], [False, False, False]])
+    out = compose_model(glob, stacked, share)
+    np.testing.assert_allclose(np.asarray(out[0]["w"][0]), 3.0)  # client0 layer0 global
+    np.testing.assert_allclose(np.asarray(out[0]["w"][1]), np.asarray(stacked[0]["w"][1]))
+    np.testing.assert_allclose(np.asarray(out[1]["w"][0]), np.asarray(stacked[1]["w"][0]))
+    np.testing.assert_allclose(np.asarray(out[2]["w"][0]), 3.0)
+
+
+def test_transmitted_parameters_accounting():
+    params = init_mlp(jax.random.PRNGKey(0), 10, 4, hidden=(8, 8))
+    sizes = layer_param_sizes(params)
+    sel = jnp.asarray([True, False, True])
+    share = layer_share_mask(3, jnp.asarray([3, 3, 1]))
+    tx = float(transmitted_parameters(sel, share, sizes))
+    expect = float(sizes[:3].sum()) + float(sizes[0])  # client0 all, client2 first layer
+    assert tx == pytest.approx(expect)

@@ -1,0 +1,80 @@
+"""Integration tests: the full federated loop converges and honours the
+paper's communication semantics."""
+
+import numpy as np
+import pytest
+
+from repro.data import make_har_dataset, make_federated_classification
+from repro.fl import FLConfig, run_federated
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    return make_federated_classification(
+        n_clients=8, n_classes=4, n_features=20,
+        samples_per_client_range=(60, 90), dirichlet_alpha=50.0,
+        client_shift=0.05, class_sep=5.0, seed=1,
+    )
+
+
+def test_fedavg_converges(small_ds):
+    h = run_federated(small_ds, FLConfig(strategy="fedavg", personalization="none", fraction=1.0, rounds=15, epochs=2))
+    assert h.accuracy_mean[-1] > 0.8
+    assert h.accuracy_mean[-1] > h.accuracy_mean[0]
+
+
+def test_acspfl_converges_with_less_communication(small_ds):
+    base = run_federated(small_ds, FLConfig(strategy="fedavg", personalization="none", fraction=1.0, rounds=15, epochs=2))
+    ours = run_federated(small_ds, FLConfig(strategy="acsp-fl", personalization="dld", rounds=15, decay=0.02, epochs=2))
+    assert ours.accuracy_mean[-1] > 0.75
+    assert ours.tx_bytes_cum[-1] < 0.8 * base.tx_bytes_cum[-1]
+
+
+def test_selection_shrinks_over_rounds(small_ds):
+    h = run_federated(small_ds, FLConfig(strategy="acsp-fl", personalization="dld", rounds=12, decay=0.05, epochs=1))
+    first = h.selected[0].sum()
+    last = h.selected[-1].sum()
+    assert first == small_ds.n_clients  # round 1: everyone (Algorithm 1 l.3)
+    assert last < first
+
+
+def test_dld_shares_fewer_layers_as_accuracy_grows(small_ds):
+    h = run_federated(small_ds, FLConfig(strategy="acsp-fl", personalization="dld", rounds=15, decay=0.0, epochs=2))
+    # early rounds share everything (acc <= 0.25 -> 4 layers)
+    assert h.pms[0].mean() == 4
+    if h.accuracy_mean[-1] > 0.5:
+        assert h.pms[-1].mean() < 4
+
+
+def test_tx_accounting_matches_masks(small_ds):
+    cfg = FLConfig(strategy="acsp-fl", personalization="pms", pms_layers=2, rounds=5, decay=0.0, epochs=1)
+    h = run_federated(small_ds, cfg)
+    from repro.models.mlp import init_mlp
+    import jax
+    from repro.core.layersharing import layer_param_sizes
+
+    params = init_mlp(jax.random.PRNGKey(0), small_ds.n_features, small_ds.n_classes)
+    sizes = np.asarray(layer_param_sizes(params))
+    shared = sizes[:2].sum()
+    for t in range(5):
+        expect = h.selected[t].sum() * shared
+        assert h.tx_params[t] == pytest.approx(expect)
+
+
+def test_har_dataset_shapes():
+    for name, (c, k, f) in {
+        "uci-har": (30, 6, 561),
+        "motionsense": (24, 6, 7),
+        "extrasensory": (60, 8, 277),
+    }.items():
+        ds = make_har_dataset(name, scale=0.02 if name != "uci-har" else 1.0)
+        assert ds.n_clients == c and ds.n_classes == k and ds.n_features == f
+        assert ds.m_test.sum(axis=1).min() >= 1  # every client has test data
+
+
+def test_history_shapes(small_ds):
+    h = run_federated(small_ds, FLConfig(rounds=4, epochs=1))
+    assert h.accuracy_per_client.shape == (4, small_ds.n_clients)
+    assert h.selected.shape == (4, small_ds.n_clients)
+    assert h.tx_params.shape == (4,)
+    assert np.all(np.diff(h.tx_bytes_cum) >= 0)

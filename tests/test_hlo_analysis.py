@@ -1,0 +1,70 @@
+"""Unit tests for the loop-aware HLO cost analyzer (the roofline's
+measurement instrument — it deserves its own tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze, parse_hlo, find_entry
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_flat_matmul_flops_exact():
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    txt = _compile(lambda a, b: a @ b, x, w)
+    r = analyze(txt)
+    assert r["flops"] == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+
+
+def test_scan_multiplies_trip_count():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    s = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    r = analyze(_compile(f, s, s))
+    assert r["flops"] == pytest.approx(7 * 2 * 64**3, rel=0.01)
+
+
+def test_nested_scan_composes():
+    def f(x, w):
+        def inner(c, _):
+            return c @ w, None
+
+        def outer(c, _):
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    s = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    r = analyze(_compile(f, s, s))
+    assert r["flops"] == pytest.approx(15 * 2 * 32**3, rel=0.01)
+
+
+def test_entry_detection():
+    txt = _compile(lambda a: a + 1, jax.ShapeDtypeStruct((4,), jnp.float32))
+    comps, _ = parse_hlo(txt)
+    assert find_entry(txt) in comps
+
+
+def test_bytes_positive_and_bounded():
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    r = analyze(_compile(lambda a: jax.nn.relu(a @ a) @ a, x))
+    # at least reads+writes the matrices once; at most ~100x (fusion bound)
+    assert 3 * 256 * 256 * 4 <= r["bytes"] <= 100 * 256 * 256 * 4
+
+
+def test_no_collectives_on_single_device():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    r = analyze(_compile(lambda a: a @ a, x))
+    assert r["collective_bytes"] == 0

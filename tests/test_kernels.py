@@ -1,0 +1,157 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, masked_aggregate, ssm_scan
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.masked_aggregate.ref import masked_aggregate_ref
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FA_SHAPES = [
+    # (b, s, h, hkv, d, causal, window)
+    (2, 128, 4, 2, 64, True, 0),
+    (1, 256, 8, 8, 32, True, 0),
+    (2, 192, 4, 1, 64, True, 64),     # GQA + sliding window, ragged seq
+    (1, 96, 2, 2, 128, False, 0),     # bidirectional (whisper encoder)
+    (1, 64, 6, 3, 64, True, 0),
+]
+
+
+@pytest.mark.parametrize("b,s,h,hkv,d,causal,window", FA_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, s, h, hkv, d, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(hash((b, s, h, d)) % 2**31), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, block_q=64, block_k=64, interpret=True)
+    ref = flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=causal, window=window,
+    ).transpose(0, 2, 1, 3)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_matches_model_attention():
+    """Kernel vs the model's chunked_attention (two independent oracles)."""
+    from repro.models.layers import chunked_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    b, s, h, hkv, d = 2, 160, 4, 2, 32
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    pos = jnp.arange(s)
+    a = chunked_attention(q, k, v, pos, pos, causal=True, chunk=64)
+    bout = flash_attention(q, k, v, causal=True, block_q=64, block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bout), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# masked aggregate
+# ---------------------------------------------------------------------------
+
+AGG_SHAPES = [(1, 7), (30, 1000), (60, 513), (4, 8192)]
+
+
+@pytest.mark.parametrize("c,p", AGG_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_aggregate_matches_ref(c, p, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(c * p), 3)
+    x = jax.random.normal(ks[0], (c, p), jnp.float32).astype(dtype)
+    w = jnp.where(jax.random.uniform(ks[1], (c,)) > 0.4, jax.random.uniform(ks[2], (c,)) * 50, 0.0)
+    fb = jnp.zeros((p,), dtype)
+    out = masked_aggregate(x, w, fb, interpret=True)
+    ref = masked_aggregate_ref(x, w, fb)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_masked_aggregate_zero_weights_falls_back():
+    x = jnp.ones((5, 64))
+    fb = jnp.full((64,), 3.5)
+    out = masked_aggregate(x, jnp.zeros((5,)), fb, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 3.5)
+
+
+def test_masked_aggregate_nd_leaf():
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, 9, 11))
+    w = jnp.asarray([1.0, 0, 2, 0, 3, 0])
+    fb = jnp.zeros((9, 11))
+    out = masked_aggregate(x, w, fb, interpret=True)
+    ref = masked_aggregate_ref(x.reshape(6, -1), w, fb.reshape(-1)).reshape(9, 11)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+
+SSM_SHAPES = [(1, 64, 16, 8), (2, 100, 32, 8), (1, 256, 64, 16), (3, 33, 8, 4)]
+
+
+@pytest.mark.parametrize("b,s,di,ds", SSM_SHAPES)
+def test_ssm_scan_matches_ref(b, s, di, ds):
+    ks = jax.random.split(jax.random.PRNGKey(b * s + di), 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (b, s, di))) * 0.1
+    a = -jnp.exp(jax.random.normal(ks[1], (di, ds)) * 0.3)
+    bm = jax.random.normal(ks[2], (b, s, ds))
+    cm = jax.random.normal(ks[3], (b, s, ds))
+    x = jax.random.normal(ks[4], (b, s, di))
+    d = jnp.ones((di,))
+    y, h = ssm_scan(dt, a, bm, cm, x, d, chunk=32, interpret=True)
+    yr, hr = ssm_scan_ref(dt, a, bm, cm, x, d)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=2e-5, rtol=2e-5)
+
+
+def test_ssm_scan_chunk_invariance():
+    b, s, di, ds = 1, 96, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (b, s, di))) * 0.1
+    a = -jnp.exp(jax.random.normal(ks[1], (di, ds)) * 0.3)
+    bm = jax.random.normal(ks[2], (b, s, ds))
+    cm = jax.random.normal(ks[3], (b, s, ds))
+    x = jax.random.normal(ks[4], (b, s, di))
+    d = jnp.zeros((di,))
+    y32, _ = ssm_scan(dt, a, bm, cm, x, d, chunk=32, interpret=True)
+    y96, _ = ssm_scan(dt, a, bm, cm, x, d, chunk=96, interpret=True)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y96), atol=1e-5, rtol=1e-5)
+
+
+def test_ssm_scan_matches_mamba_block_path():
+    """Kernel vs the mamba_block jnp scan through the model-layer lens."""
+    from repro.configs import get_config
+    from repro.models import layers as L
+
+    cfg = get_config("falcon-mamba-7b").reduced()
+    p = L.init_mamba(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 40, cfg.d_model)).astype(jnp.bfloat16)
+    y_block, _ = L.mamba_block(p, x, cfg, mode="train")
+
+    # re-derive the scan inputs exactly as mamba_block does
+    di, ds, dtr = cfg.d_inner, cfg.d_state, cfg.dt_rank_
+    u = x @ p["in_proj"]
+    xs, z = u[..., :di], u[..., di:]
+    xs, _ = L._causal_conv(xs, p["conv_w"], p["conv_b"])
+    xs = L.silu(xs)
+    xdb = xs @ p["x_proj"]
+    dt_raw, bm, cm = jnp.split(xdb, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    y_k, _ = ssm_scan(dt, a, bm.astype(jnp.float32), cm.astype(jnp.float32), xs.astype(jnp.float32), p["D"], chunk=16, interpret=True)
+    out_k = (y_k.astype(x.dtype) * L.silu(z)) @ p["out_proj"]
+    np.testing.assert_allclose(
+        np.asarray(out_k, np.float32), np.asarray(y_block, np.float32), atol=5e-2, rtol=5e-2
+    )

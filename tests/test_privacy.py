@@ -1,0 +1,73 @@
+"""DP-FedAvg tests (paper §5 future-work feature, implemented)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.privacy import (
+    add_gaussian_noise,
+    clip_client_updates,
+    clip_update,
+    dp_aggregate_deltas,
+    noise_multiplier_for_epsilon,
+)
+
+
+def test_clip_update_bounds_norm():
+    delta = {"w": jnp.full((10,), 10.0)}
+    clipped, norm = clip_update(delta, clip=1.0)
+    assert float(norm) > 1.0
+    total = float(jnp.sqrt(jnp.sum(jnp.square(clipped["w"]))))
+    assert total <= 1.0 + 1e-5
+
+
+def test_clip_noop_inside_ball():
+    delta = {"w": jnp.asarray([0.1, 0.2])}
+    clipped, _ = clip_update(delta, clip=10.0)
+    np.testing.assert_allclose(np.asarray(clipped["w"]), np.asarray(delta["w"]))
+
+
+def test_clip_client_updates_per_client():
+    deltas = {"w": jnp.stack([jnp.full((4,), 100.0), jnp.full((4,), 0.01)])}
+    clipped, norms = clip_client_updates(deltas, clip=1.0)
+    n0 = float(jnp.linalg.norm(clipped["w"][0]))
+    n1 = float(jnp.linalg.norm(clipped["w"][1]))
+    assert n0 <= 1.0 + 1e-5
+    assert abs(n1 - 0.02) < 1e-5  # untouched
+
+
+def test_noise_changes_with_rng_and_scale():
+    x = {"w": jnp.zeros((100,))}
+    a = add_gaussian_noise(x, jax.random.PRNGKey(0), 1.0)
+    b = add_gaussian_noise(x, jax.random.PRNGKey(1), 1.0)
+    assert not np.allclose(np.asarray(a["w"]), np.asarray(b["w"]))
+    c = add_gaussian_noise(x, jax.random.PRNGKey(0), 0.0)
+    np.testing.assert_allclose(np.asarray(c["w"]), 0.0)
+
+
+def test_dp_aggregate_sensitivity():
+    """Swapping one client changes the aggregate by at most 2*clip/n."""
+    c, d = 8, 32
+    rng = np.random.default_rng(0)
+    base = jnp.asarray(rng.normal(size=(c, d)), jnp.float32)
+    deltas_a = {"w": base}
+    deltas_b = {"w": base.at[3].set(jnp.asarray(rng.normal(size=d) * 100, jnp.float32))}
+    sel = jnp.ones((c,), bool)
+    clip = 1.0
+    agg_a = dp_aggregate_deltas(deltas_a, sel, clip, 0.0, jax.random.PRNGKey(0))
+    agg_b = dp_aggregate_deltas(deltas_b, sel, clip, 0.0, jax.random.PRNGKey(0))
+    diff = float(jnp.linalg.norm(agg_a["w"] - agg_b["w"]))
+    assert diff <= 2 * clip / c + 1e-5
+
+
+def test_dp_noise_scales_inversely_with_cohort():
+    x = {"w": jnp.zeros((4, 1000))}
+    small = dp_aggregate_deltas(x, jnp.asarray([True] + [False] * 3), 1.0, 1.0, jax.random.PRNGKey(0))
+    large = dp_aggregate_deltas(x, jnp.ones((4,), bool), 1.0, 1.0, jax.random.PRNGKey(0))
+    assert float(jnp.std(small["w"])) > float(jnp.std(large["w"])) * 2
+
+
+def test_epsilon_calibration_monotone():
+    s1 = noise_multiplier_for_epsilon(1.0, 1e-5, rounds=100)
+    s8 = noise_multiplier_for_epsilon(8.0, 1e-5, rounds=100)
+    assert s1 > s8 > 0

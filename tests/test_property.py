@@ -1,0 +1,107 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    dynamic_layer_definition,
+    fedavg_aggregate,
+    layer_share_mask,
+    masked_partial_aggregate,
+    phi_decay,
+)
+from repro.core.selection import ACSPFL, ClientMetrics
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(
+    s=st.integers(min_value=0, max_value=500),
+    t=st.integers(min_value=0, max_value=200),
+    decay=st.floats(min_value=0.0, max_value=0.99),
+)
+def test_phi_decay_bounds_and_monotone_in_t(s, t, decay):
+    k = int(phi_decay(s, t, decay))
+    assert 0 <= k <= s
+    k_next = int(phi_decay(s, t + 1, decay))
+    assert k_next <= k  # decay never grows the cohort
+
+
+@given(
+    acc=st.lists(st.floats(min_value=0.0, max_value=1.0), min_size=2, max_size=64),
+    t=st.integers(min_value=0, max_value=50),
+    decay=st.floats(min_value=0.0, max_value=0.2),
+)
+def test_acspfl_selection_invariants(acc, t, decay):
+    a = jnp.asarray(acc, jnp.float32)
+    c = a.shape[0]
+    m = ClientMetrics(a, 1 - a, jnp.ones((c,)), jnp.ones((c,)))
+    mask = np.asarray(ACSPFL(decay=decay).select(m, jnp.asarray(t), jax.random.PRNGKey(0)))
+    below = np.asarray(a <= a.mean())
+    # selected is a subset of the pi filter (Eq. 5)
+    assert not np.any(mask & ~below)
+    # cohort size obeys Eq. 6/7
+    assert mask.sum() == int(np.ceil(below.sum() * (1 - decay) ** t))
+
+
+@given(
+    acc=st.lists(st.floats(min_value=0.0, max_value=1.0), min_size=1, max_size=32),
+    total=st.integers(min_value=1, max_value=12),
+)
+def test_dld_range(acc, total):
+    out = np.asarray(dynamic_layer_definition(jnp.asarray(acc, jnp.float32), total))
+    assert np.all(out >= 1) and np.all(out <= total)
+    # low-accuracy clients always share the whole model
+    for a, o in zip(acc, out):
+        if a <= 0.25:
+            assert o == total
+
+
+@given(
+    c=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_aggregate_convex_combination(c, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(c, 5, 3)), jnp.float32)
+    sel = jnp.asarray(rng.random(c) > 0.3)
+    n = jnp.asarray(rng.integers(1, 100, c), jnp.float32)
+    agg = np.asarray(fedavg_aggregate({"w": x}, sel, n)["w"])
+    if bool(sel.sum() > 0):
+        lo = np.asarray(x).min(axis=0) - 1e-5
+        hi = np.asarray(x).max(axis=0) + 1e-5
+        assert np.all(agg >= lo) and np.all(agg <= hi)  # convexity
+    else:
+        np.testing.assert_allclose(agg, 0.0)  # zero fallback
+
+
+@given(
+    pms=st.integers(min_value=0, max_value=6),
+    n_layers=st.integers(min_value=1, max_value=6),
+)
+def test_share_mask_prefix_structure(pms, n_layers):
+    m = np.asarray(layer_share_mask(n_layers, jnp.asarray(pms)))
+    # mask must be a prefix: never True after a False
+    seen_false = False
+    for v in m:
+        if seen_false:
+            assert not v
+        if not v:
+            seen_false = True
+    assert m.sum() == min(pms, n_layers)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**16))
+def test_partial_aggregate_idempotent_on_identical_clients(seed):
+    rng = np.random.default_rng(seed)
+    base = jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)
+    c = 5
+    stacked = [{"w": jnp.broadcast_to(base, (c, 4, 3))}]
+    prev = [{"w": base}]
+    out = masked_partial_aggregate(
+        stacked, prev, jnp.ones((c,), bool), jnp.ones((c,)), layer_share_mask(1, jnp.asarray(1))
+    )
+    np.testing.assert_allclose(np.asarray(out[0]["w"]), np.asarray(base), rtol=1e-6)

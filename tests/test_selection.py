@@ -1,0 +1,114 @@
+"""Unit tests for the paper's selection machinery (Eq. 4-7) + baselines."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import get_strategy, phi_decay
+from repro.core.selection import ClientMetrics, ACSPFL, DEEV, FedAvgRandom, Oort, PowerOfChoice
+
+
+def metrics(acc, loss=None, n=None, delay=None):
+    acc = jnp.asarray(acc, jnp.float32)
+    c = acc.shape[0]
+    return ClientMetrics(
+        accuracy=acc,
+        loss=jnp.asarray(loss, jnp.float32) if loss is not None else 1.0 - acc,
+        n_samples=jnp.asarray(n, jnp.float32) if n is not None else jnp.ones((c,)),
+        delay=jnp.asarray(delay, jnp.float32) if delay is not None else jnp.ones((c,)),
+    )
+
+
+def test_phi_decay_matches_equation6():
+    # phi(S,t) = ceil(|S| * (1-decay)^t)
+    assert int(phi_decay(30, 0, 0.1)) == 30
+    assert int(phi_decay(30, 1, 0.1)) == int(np.ceil(30 * 0.9))
+    assert int(phi_decay(20, 10, 0.05)) == int(np.ceil(20 * 0.95**10))
+    assert int(phi_decay(5, 1000, 0.5)) >= 0
+
+
+def test_phi_decay_zero_disables():
+    for t in [0, 10, 1000]:
+        assert int(phi_decay(17, t, 0.0)) == 17
+
+
+def test_acspfl_filters_below_mean():
+    acc = jnp.asarray([0.1, 0.2, 0.9, 0.95, 0.99])
+    mask = ACSPFL(decay=0.0).select(metrics(acc), jnp.asarray(0), jax.random.PRNGKey(0))
+    mask = np.asarray(mask)
+    mean = float(acc.mean())
+    for i, a in enumerate(np.asarray(acc)):
+        assert mask[i] == (a <= mean)
+
+
+def test_acspfl_decay_keeps_worst():
+    # 10 clients below mean; decay keeps the phi worst ones
+    acc = jnp.asarray([0.1 * i for i in range(1, 11)] + [0.99] * 10)
+    t = 5
+    strat = ACSPFL(decay=0.1)
+    mask = np.asarray(strat.select(metrics(acc), jnp.asarray(t), jax.random.PRNGKey(0)))
+    below = acc <= acc.mean()
+    expect_k = int(np.ceil(int(below.sum()) * 0.9**t))
+    assert mask.sum() == expect_k
+    # the selected must be the worst performers
+    selected_acc = np.asarray(acc)[mask]
+    unselected_below = np.asarray(acc)[np.asarray(below) & ~mask]
+    if len(unselected_below):
+        assert selected_acc.max() <= unselected_below.min() + 1e-6
+
+
+def test_deev_equals_acspfl_selection():
+    acc = jax.random.uniform(jax.random.PRNGKey(1), (40,))
+    m = metrics(acc)
+    a = ACSPFL(decay=0.01).select(m, jnp.asarray(3), jax.random.PRNGKey(2))
+    d = DEEV(decay=0.01).select(m, jnp.asarray(3), jax.random.PRNGKey(2))
+    assert bool(jnp.all(a == d))
+
+
+def test_fedavg_full_participation():
+    mask = FedAvgRandom(fraction=1.0).select(metrics(jnp.zeros(25)), 0, jax.random.PRNGKey(0))
+    assert int(mask.sum()) == 25
+
+
+def test_fedavg_fraction():
+    mask = FedAvgRandom(fraction=0.4).select(metrics(jnp.zeros(30)), 0, jax.random.PRNGKey(0))
+    assert int(mask.sum()) == 12
+
+
+def test_poc_selects_high_loss():
+    loss = jnp.asarray([0.1] * 10 + [5.0] * 10)
+    mask = np.asarray(
+        PowerOfChoice(fraction=0.5, candidate_factor=2).select(
+            metrics(1.0 - loss / 5, loss=loss), 0, jax.random.PRNGKey(0)
+        )
+    )
+    assert mask.sum() == 10
+    assert mask[10:].sum() >= 8  # top-loss clients dominate the selection
+
+
+def test_oort_penalizes_slow_clients():
+    c = 20
+    loss = jnp.ones((c,))
+    delay = jnp.asarray([0.5] * 10 + [10.0] * 10)
+    sel = np.zeros(c)
+    for s in range(5):
+        mask = Oort(fraction=0.5, epsilon=0.0, preferred_delay=1.0).select(
+            metrics(jnp.zeros(c), loss=loss, delay=delay), 0, jax.random.PRNGKey(s)
+        )
+        sel += np.asarray(mask)
+    assert sel[:10].sum() > sel[10:].sum()
+
+
+def test_selection_jits():
+    strat = ACSPFL(decay=0.01)
+    f = jax.jit(lambda m, t, r: strat.select(m, t, r))
+    out = f(metrics(jax.random.uniform(jax.random.PRNGKey(0), (16,))), jnp.asarray(2), jax.random.PRNGKey(1))
+    assert out.shape == (16,) and out.dtype == jnp.bool_
+
+
+def test_get_strategy_registry():
+    for name in ["fedavg", "poc", "oort", "deev", "acsp-fl"]:
+        assert get_strategy(name) is not None
+    with pytest.raises(KeyError):
+        get_strategy("nope")

@@ -1,0 +1,60 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Reproduces the paper's qualitative claims on the synthetic HAR stand-ins:
+  1. ACSP-FL reduces communication dramatically vs FedAvg (§4.5, up to 95%).
+  2. ACSP-FL selects clients less frequently than POC/FedAvg (Fig. 11).
+  3. Personalization lifts worst-client accuracy on non-IID data (Fig. 10).
+  4. The efficiency metric favours ACSP-FL (Tables 3-4).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import efficiency, overhead_reduction
+from repro.data import make_har_dataset
+from repro.fl import FLConfig, run_federated
+
+
+@pytest.fixture(scope="module")
+def results():
+    ds = make_har_dataset("extrasensory", seed=0, scale=0.03)
+    out = {}
+    for name, cfg in {
+        "fedavg": FLConfig(strategy="fedavg", personalization="none", fraction=1.0, rounds=25, epochs=2),
+        "poc": FLConfig(strategy="poc", personalization="none", fraction=0.5, rounds=25, epochs=2),
+        "acsp-fl": FLConfig(strategy="acsp-fl", personalization="dld", decay=0.01, rounds=25, epochs=2),
+    }.items():
+        out[name] = run_federated(ds, cfg)
+    return out
+
+
+def test_comm_reduction_vs_fedavg(results):
+    red = overhead_reduction(results["acsp-fl"].tx_bytes_cum[-1], results["fedavg"].tx_bytes_cum[-1])
+    assert red > 0.4, f"only {red:.0%} comm reduction"
+
+
+def test_selection_frequency_ordering(results):
+    f_fedavg = results["fedavg"].selected.mean()
+    f_poc = results["poc"].selected.mean()
+    f_ours = results["acsp-fl"].selected.mean()
+    assert f_ours < f_poc <= f_fedavg + 1e-9
+
+
+def test_accuracy_competitive(results):
+    assert results["acsp-fl"].accuracy_mean[-1] >= results["fedavg"].accuracy_mean[-1] - 0.05
+
+
+def test_worst_client_lifted_non_iid(results):
+    ours = results["acsp-fl"].accuracy_per_client[-1].min()
+    base = results["fedavg"].accuracy_per_client[-1].min()
+    assert ours >= base - 0.05  # personalization must not leave clients behind
+
+
+def test_efficiency_metric_ordering(results):
+    base_cost = results["fedavg"].round_time.sum()
+    effs = {}
+    for k, h in results.items():
+        red = overhead_reduction(h.round_time.sum(), base_cost)
+        effs[k] = efficiency(float(h.accuracy_mean[-1]), red)
+    assert effs["acsp-fl"] >= effs["fedavg"]
+    assert 0.0 <= effs["acsp-fl"] <= 1.0
