@@ -1,0 +1,17 @@
+# CI/dev entry points. `make ci` is what a pipeline should run: the tier-1
+# test command plus the benchmark smoke so perf entry points can't rot.
+
+PY := PYTHONPATH=src python
+
+.PHONY: test bench-smoke bench ci
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-smoke:
+	$(PY) -m benchmarks.run --smoke
+
+bench:
+	$(PY) -m benchmarks.run --quick
+
+ci: test bench-smoke

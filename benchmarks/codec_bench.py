@@ -1,0 +1,73 @@
+"""Codec benchmark — the comm subsystem's two headline numbers:
+
+1. encode/decode throughput + compression ratio per codec on a flat
+   parameter vector (the wire-format hot path);
+2. end-to-end accuracy vs cumulative wire bytes for acsp-fl+dld under each
+   codec (selection x personalization x codec scenario matrix).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import ROUNDS, write_csv
+from repro.comm import make_codec
+from repro.data import make_har_dataset
+from repro.fl import FLConfig, run_federated
+
+CODEC_SPECS = ["float32", "int8", "int4", "topk", "topk+int8"]
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run():
+    rows = []
+
+    # --- 1. roundtrip throughput on one client's MLP-sized update ---
+    n = 1 << 14 if SMOKE else 276_742  # full uci-har MLP parameter count
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    rng = jax.random.PRNGKey(1)
+    for spec in CODEC_SPECS:
+        codec = make_codec(spec, topk_fraction=0.1)
+        fn = jax.jit(lambda x, r, c=codec: c.roundtrip(x, r))
+        us = _time(fn, x, rng)
+        ratio = codec.compression_ratio(n)
+        gbps = 4.0 * n / (us * 1e-6) / 1e9
+        rows.append([f"roundtrip_{codec.name}", f"{us:.0f}", f"{ratio:.2f}x", f"{gbps:.2f}GB/s"])
+        print(f"  roundtrip {codec.name:12s} {us:8.0f}us  ratio {ratio:5.2f}x  {gbps:6.2f}GB/s")
+
+    # --- 2. acsp-fl + dld accuracy/bytes under each codec ---
+    rounds = 5 if SMOKE else ROUNDS
+    scale = 0.25 if SMOKE else 1.0
+    ds = make_har_dataset("uci-har", seed=0, scale=scale)
+    base_tx = None
+    for spec in CODEC_SPECS:
+        cfg = FLConfig(strategy="acsp-fl", personalization="dld", decay=0.005,
+                       rounds=rounds, epochs=2, codec=spec, topk_fraction=0.1)
+        h = run_federated(ds, cfg)
+        tx_mb = float(h.tx_bytes_cum[-1] / 1e6)
+        if base_tx is None:
+            base_tx = tx_mb
+        acc = float(h.accuracy_mean[-1])
+        rows.append([f"acspfl_dld_{spec}", f"{acc:.4f}", f"{tx_mb:.2f}MB", f"{base_tx / max(tx_mb, 1e-9):.2f}x"])
+        print(f"  acsp-fl+dld {spec:12s} acc={acc:.4f}  tx={tx_mb:8.2f}MB  ({base_tx / max(tx_mb, 1e-9):.2f}x vs f32)")
+
+    return write_csv("codec_bench", ["name", "metric1", "metric2", "metric3"], rows)
+
+
+if __name__ == "__main__":
+    run()

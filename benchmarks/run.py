@@ -15,12 +15,18 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="fewer rounds / datasets")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny sizes, perf entry points only (kernel + codec)")
     args = ap.parse_args()
     if args.quick:
         os.environ["REPRO_BENCH_ROUNDS"] = "10"
+    if args.smoke:
+        os.environ["REPRO_BENCH_ROUNDS"] = "5"
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
 
     from benchmarks import (
         client_distribution,
+        codec_bench,
         comm_overhead,
         kernel_bench,
         roofline,
@@ -36,8 +42,11 @@ def main() -> None:
         ("client_distribution (paper Fig 10)", client_distribution.run),
         ("selection_frequency (paper Fig 11)", selection_frequency.run),
         ("kernel_bench", kernel_bench.run),
+        ("codec_bench (comm subsystem)", codec_bench.run),
         ("roofline (deliverable g)", roofline.run),
     ]
+    if args.smoke:  # CI smoke: just the perf entry points, tiny sizes
+        suites = [s for s in suites if s[0].split(" ")[0] in ("kernel_bench", "codec_bench")]
     t00 = time.time()
     for name, fn in suites:
         print(f"\n=== {name} ===")

@@ -1,11 +1,15 @@
 """Quickstart: ACSP-FL on the UCI-HAR stand-in, 30 clients, 30 rounds.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--codec int8]
 
 Reproduces the paper's headline behaviour in ~a minute on CPU: adaptive
 selection shrinks the cohort, DLD shrinks the shared piece, accuracy stays
-on par with full FedAvg at a fraction of the bytes.
+on par with full FedAvg at a fraction of the bytes. ``--codec`` stacks a
+wire codec (repro.comm) on the ACSP-FL run: int8 / int4 quantization,
+top-k sparsification, or a chain like topk+int8.
 """
+
+import argparse
 
 import numpy as np
 
@@ -15,18 +19,29 @@ from repro.fl import FLConfig, run_federated
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--codec", default="float32",
+                    help="wire codec for the ACSP-FL run: float32 | int8 | int4 | topk | topk+int8")
+    ap.add_argument("--topk-fraction", type=float, default=0.1)
+    ap.add_argument("--rounds", type=int, default=30)
+    args = ap.parse_args()
+    # fail fast on a bad codec spec before the (minutes-long) baseline runs
+    from repro.comm import make_codec
+    make_codec(args.codec, topk_fraction=args.topk_fraction)
+
     ds = make_har_dataset("uci-har", seed=0)
     print(f"dataset: {ds.name} — {ds.n_clients} clients, {ds.n_features} features, {ds.n_classes} classes")
 
-    print("\n[1/2] FedAvg baseline (100% participation, full model)")
+    print("\n[1/2] FedAvg baseline (100% participation, full model, float32 wire)")
     fedavg = run_federated(
-        ds, FLConfig(strategy="fedavg", personalization="none", fraction=1.0, rounds=30, epochs=2),
+        ds, FLConfig(strategy="fedavg", personalization="none", fraction=1.0, rounds=args.rounds, epochs=2),
         progress=True,
     )
 
-    print("\n[2/2] ACSP-FL (adaptive selection + decay + DLD partial sharing + personalization)")
+    print(f"\n[2/2] ACSP-FL (adaptive selection + decay + DLD partial sharing + codec={args.codec})")
     acsp = run_federated(
-        ds, FLConfig(strategy="acsp-fl", personalization="dld", decay=0.01, rounds=30, epochs=2),
+        ds, FLConfig(strategy="acsp-fl", personalization="dld", decay=0.01, rounds=args.rounds, epochs=2,
+                     codec=args.codec, topk_fraction=args.topk_fraction),
         progress=True,
     )
 

@@ -1,0 +1,26 @@
+"""repro.comm — wire-format compression subsystem (quantization, top-k
+sparsification, error feedback) for the federated uplink. See codec.py."""
+
+from repro.comm.codec import (
+    ChainedCodec,
+    Codec,
+    Float32Identity,
+    QuantizeCodec,
+    TopKCodec,
+    ef_step,
+    make_codec,
+    roundtrip_tree,
+    tree_wire_bytes,
+)
+
+__all__ = [
+    "Codec",
+    "Float32Identity",
+    "QuantizeCodec",
+    "TopKCodec",
+    "ChainedCodec",
+    "make_codec",
+    "tree_wire_bytes",
+    "roundtrip_tree",
+    "ef_step",
+]

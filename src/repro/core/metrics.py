@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 
 import jax.numpy as jnp
+import numpy as np
 
 BYTES_PER_PARAM = 4  # float32, as in the paper's Flower/TF setup
 
@@ -24,20 +25,39 @@ class CommModel:
     client_flops_per_s: float = 5e9         # edge-device training throughput
     server_latency_s: float = 0.01
 
-    def round_time(self, tx_bytes_per_client: jnp.ndarray, train_flops_per_client: jnp.ndarray, select_mask: jnp.ndarray) -> jnp.ndarray:
+    def round_time(
+        self,
+        tx_bytes_per_client: jnp.ndarray,
+        train_flops_per_client: jnp.ndarray,
+        select_mask: jnp.ndarray,
+        rx_bytes_per_client: jnp.ndarray | None = None,
+    ) -> jnp.ndarray:
         """Synchronous round time = slowest selected client (download +
-        train + upload), matching the paper's 'overhead' definition."""
+        train + upload), matching the paper's 'overhead' definition.
+
+        ``rx_bytes_per_client`` is the downlink volume; it defaults to the
+        uplink (symmetric traffic, the seed behaviour). A wire codec
+        compresses only the uplink, so the engine passes the uncompressed
+        float32 broadcast size separately.
+        """
+        if rx_bytes_per_client is None:
+            rx_bytes_per_client = tx_bytes_per_client
         per_client = (
-            2.0 * tx_bytes_per_client / self.bandwidth_bytes_per_s
+            (tx_bytes_per_client + rx_bytes_per_client) / self.bandwidth_bytes_per_s
             + train_flops_per_client / self.client_flops_per_s
         )
         per_client = jnp.where(select_mask, per_client, 0.0)
         return jnp.max(per_client) + self.server_latency_s
 
 
-def tx_bytes(params_transmitted: jnp.ndarray | float, directions: int = 2) -> jnp.ndarray:
-    """Bytes on the wire for a one-way parameter count (x directions)."""
-    return jnp.asarray(params_transmitted, jnp.float64) * BYTES_PER_PARAM * directions
+def tx_bytes(params_transmitted: np.ndarray | float, directions: int = 2) -> np.ndarray:
+    """Bytes on the wire for a one-way parameter count (x directions).
+
+    Host-side accounting helper — computed in numpy float64 on purpose:
+    ``jnp.float64`` silently downgrades to float32 when x64 is disabled
+    (the default), corrupting byte counts beyond 2^24 parameters.
+    """
+    return np.asarray(params_transmitted, np.float64) * BYTES_PER_PARAM * directions
 
 
 def efficiency(mean_accuracy: float, overhead_reduction: float, alpha: float = 0.5, beta: float = 0.5) -> float:

@@ -32,16 +32,43 @@ from repro.optim import adamw
 import os as _os
 
 
-def _agg_dtype():
-    """§Perf hillclimb-3 lever: REPRO_FL_AGG_DTYPE=bf16 halves the
-    cross-silo all-reduce wire bytes (FL averaging over <=32 silos tolerates
-    bf16 accumulation; fp32 is the paper-faithful default)."""
-    return jnp.bfloat16 if _os.environ.get("REPRO_FL_AGG_DTYPE") == "bf16" else jnp.float32
+def _agg_mode():
+    """§Perf hillclimb-3 lever, extended by the comm subsystem:
+    REPRO_FL_AGG_DTYPE=bf16 halves the cross-silo all-reduce wire bytes
+    (FL averaging over <=32 silos tolerates bf16 accumulation);
+    REPRO_FL_AGG_DTYPE=int8 quarters them via a quantized all-reduce
+    (per-silo absmax int8, repro.kernels.quantize). fp32 is the
+    paper-faithful default."""
+    return _os.environ.get("REPRO_FL_AGG_DTYPE", "fp32")
 
 
-def _agg_over_silo(x: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
-    """Weighted mean over the leading silo axis, broadcast back (Eq. 1)."""
-    acc = _agg_dtype()
+def _quantize_silo_contributions(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Quantized-allreduce emulation: each silo ships its contribution as
+    per-block int codes + f32 scales (32/bits fewer wire bytes than f32);
+    the mean then runs over the dequantized values. Round-to-nearest — the
+    deterministic mode of the quantize kernel — so the result is bitwise
+    reproducible across runs."""
+    from repro.kernels.quantize import dequantize, quantize
+
+    s = x.shape[0]
+
+    def per_silo(v):
+        q, scales = quantize(v, None, bits=bits)
+        return dequantize(q, scales)
+
+    return jax.vmap(per_silo)(x.reshape(s, -1)).reshape(x.shape)
+
+
+def _agg_over_silo(x: jnp.ndarray, weights: jnp.ndarray, agg: str | None = None) -> jnp.ndarray:
+    """Weighted mean over the leading silo axis, broadcast back (Eq. 1).
+
+    ``agg`` picks the wire format (fp32 | bf16 | int8 | int4); None defers
+    to the REPRO_FL_AGG_DTYPE env lever."""
+    mode = agg or _agg_mode()
+    if mode in ("int8", "int4"):
+        x = _quantize_silo_contributions(x, bits=int(mode[3:]))
+        mode = "fp32"  # mean over the dequantized values in f32
+    acc = jnp.bfloat16 if mode == "bf16" else jnp.float32
     w = weights.reshape((-1,) + (1,) * (x.ndim - 1)).astype(acc)
     # dtype= pins the reduction (and hence the silo-axis all-reduce wire
     # format): jnp.sum silently accumulates bf16 in f32 otherwise
@@ -49,44 +76,56 @@ def _agg_over_silo(x: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
     return jnp.broadcast_to(mean.astype(x.dtype), x.shape)
 
 
-def partial_aggregate_silo_params(silo_params, weights: jnp.ndarray, shared_periods: int):
+def partial_aggregate_silo_params(silo_params, weights: jnp.ndarray, shared_periods: int, agg: str | None = None):
     """ACSP-FL partial aggregation of stacked silo params.
 
     Shares (aggregates): 'embed', 'vision_proj', every 'prologue' block, and
     stack periods [0, shared_periods). Keeps local (personalized): the
     remaining periods, 'final_norm', 'head' — the paper's 'first layers
     shared, upper layers personal' split (Fig. 3).
+
+    ``agg`` selects the all-reduce wire format: fp32 (default), bf16, or
+    int8 (quantized all-reduce, 4x fewer collective bytes).
     """
     out = dict(silo_params)
     for key in ("embed", "vision_proj"):
         if key in out:
-            out[key] = _agg_over_silo(out[key], weights)
+            out[key] = _agg_over_silo(out[key], weights, agg)
     if "prologue" in out:
-        out["prologue"] = jax.tree.map(lambda x: _agg_over_silo(x, weights), out["prologue"])
+        out["prologue"] = jax.tree.map(lambda x: _agg_over_silo(x, weights, agg), out["prologue"])
     if "stack" in out and shared_periods > 0:
         def agg_stack(x):  # (silo, n_periods, ...)
             sp = min(shared_periods, x.shape[1])
-            shared = _agg_over_silo(x[:, :sp], weights)
+            shared = _agg_over_silo(x[:, :sp], weights, agg)
             return jnp.concatenate([shared, x[:, sp:]], axis=1)
 
         out["stack"] = jax.tree.map(agg_stack, out["stack"])
     # whisper-family: encoder shared, decoder personalized
     if "encoder" in out:
-        out["encoder"] = jax.tree.map(lambda x: _agg_over_silo(x, weights), out["encoder"])
+        out["encoder"] = jax.tree.map(lambda x: _agg_over_silo(x, weights, agg), out["encoder"])
     return out
 
 
-def make_fl_round_step(cfg, bundle, optimizer, shared_periods: int, window: int = 0):
+def make_fl_round_step(cfg, bundle, optimizer, shared_periods: int, window: int = 0, agg: str | None = None):
     base_step = bundle.make_train_step(optimizer, window=window)
 
     def fl_round(silo_params, silo_opt, batch, weights):
         """silo_params/opt: leaves (n_silos, ...); batch leaves
         (n_silos, local_batch, ...); weights (n_silos,) = select * |d_i|."""
         new_p, new_o, losses = jax.vmap(base_step)(silo_params, silo_opt, batch)
-        new_p = partial_aggregate_silo_params(new_p, weights, shared_periods)
+        new_p = partial_aggregate_silo_params(new_p, weights, shared_periods, agg)
         return new_p, new_o, jnp.mean(losses)
 
     return fl_round
+
+
+def make_quantized_fl_round_step(cfg, bundle, optimizer, shared_periods: int, window: int = 0, bits: int = 8):
+    """Quantized-allreduce variant of make_fl_round_step: shared layers
+    cross the silo axis as int8/int4 codes + scales instead of f32 (the
+    comm subsystem's cross-silo counterpart of FLConfig.codec='int8')."""
+    if bits not in (4, 8):
+        raise ValueError(f"cross-silo quantized all-reduce supports bits in (4, 8), got {bits}")
+    return make_fl_round_step(cfg, bundle, optimizer, shared_periods, window=window, agg=f"int{bits}")
 
 
 # ---------------------------------------------------------------------------

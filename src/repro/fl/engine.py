@@ -6,6 +6,12 @@ local training is a vmap of (epochs x batches) SGD; selection, decay, DLD,
 partial aggregation and personalization all run inside the round step. A
 Python loop over rounds (server loop, Algorithm 1) collects history.
 
+Uplink traffic goes through a wire codec (repro.comm): each selected
+client's shared delta is encode/decode round-tripped (with per-client
+error-feedback residuals carried in the round state for lossy codecs), and
+``FLHistory.tx_bytes_cum`` / ``round_time`` account codec-reported wire
+bytes rather than the seed's analytic float32 parameter count.
+
 Variant map (paper §4.4 naming):
   ND    — strategy selection, NO personalization, NO decay, full model shared
   FT    — fine-tuning personalization (Eq. 8), full model shared
@@ -24,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import ef_step, make_codec, tree_wire_bytes
 from repro.core import (
     fedavg_aggregate,
     masked_partial_aggregate,
@@ -54,13 +61,22 @@ class FLConfig:
     lr: float = 0.1
     momentum: float = 0.0
     seed: int = 0
+    codec: str = "float32"             # wire codec spec (repro.comm.make_codec):
+                                       # float32 | int8 | int4 | topk | topk+int8 ...
+    codec_bits: int = 8                # bits for the generic 'quantize' atom
+    topk_fraction: float = 0.1         # k/n for the 'topk' atom
 
     def strategy_obj(self):
         if self.strategy in ("deev", "acsp-fl"):
             return get_strategy(self.strategy, decay=self.decay)
-        if self.strategy == "fedavg":
-            return get_strategy(self.strategy, fraction=self.fraction if self.fraction else 1.0)
+        if not 0.0 < self.fraction <= 1.0:
+            raise ValueError(
+                f"fraction must be in (0, 1] for strategy {self.strategy!r}, got {self.fraction!r}"
+            )
         return get_strategy(self.strategy, fraction=self.fraction)
+
+    def codec_obj(self):
+        return make_codec(self.codec, bits=self.codec_bits, topk_fraction=self.topk_fraction)
 
 
 class FLHistory(NamedTuple):
@@ -70,9 +86,10 @@ class FLHistory(NamedTuple):
     accuracy_per_client: np.ndarray  # (T, C)
     selected: np.ndarray           # (T, C) bool
     tx_params: np.ndarray          # (T,) uplink parameter count
-    tx_bytes_cum: np.ndarray       # (T,) cumulative uplink bytes
+    tx_bytes_cum: np.ndarray       # (T,) cumulative uplink *wire* bytes
     round_time: np.ndarray         # (T,) simulated seconds
     pms: np.ndarray                # (T, C) layers shared per client
+    tx_wire_bytes: np.ndarray      # (T,) per-round uplink wire bytes (codec)
 
 
 class _RoundState(NamedTuple):
@@ -82,6 +99,8 @@ class _RoundState(NamedTuple):
     select: jnp.ndarray           # (C,) bool
     pms: jnp.ndarray              # (C,) int32 — layers each client will share
     rng: jax.Array
+    residual: Any = None          # error-feedback residuals (lossy codec only):
+                                  # layered list, leaves (C, ...), same as local
 
 
 def _batched(x, y, m, batch_size: int):
@@ -107,6 +126,7 @@ def make_round_step(
 ):
     """Build the jitted round step closure over static data/config."""
     strategy = cfg.strategy_obj()
+    codec = cfg.codec_obj()
     n_layers_holder = {}
 
     x_tr = jnp.asarray(data.x_train)
@@ -142,7 +162,13 @@ def make_round_step(
         n_layers_holder["n"] = n_layers
         share = layer_share_mask(n_layers, state.pms)  # (C, L)
 
-        rng, r_fit, r_sel = jax.random.split(state.rng, 3)
+        # lossless codecs draw no randomness — keep the seed's exact split
+        # so default (float32) trajectories are bit-identical to the seed
+        if codec.lossy:
+            rng, r_fit, r_sel, r_codec = jax.random.split(state.rng, 4)
+        else:
+            rng, r_fit, r_sel = jax.random.split(state.rng, 3)
+            r_codec = None
 
         # --- personalization phase: build each client's training model ---
         if cfg.personalization == "ft":
@@ -169,11 +195,43 @@ def make_round_step(
             loc if cfg.personalization != "none" else train_model,
         )
 
+        # --- wire codec: compress each client's shared delta (uplink) ---
+        # The server aggregates decode(encode(delta + residual)) instead of
+        # the raw trained params; per-client error-feedback residuals absorb
+        # what the codec dropped, but only for clients that actually
+        # transmitted the layer (selected AND sharing it) — personalized
+        # layers never hit the wire, so their residuals stay untouched.
+        if codec.lossy:
+            agg_src, new_residual = [], []
+            for j, (tr_j, g_j, res_j) in enumerate(zip(trained, g, state.residual)):
+                sent_j = state.select & share[:, j]                     # (C,)
+
+                def client_ef(tr_c, res_c, key, g_j=g_j):
+                    delta = jax.tree.map(lambda t, gl: t - gl, tr_c, g_j)
+                    dec, new_r = ef_step(codec, delta, res_c, key)
+                    recon = jax.tree.map(lambda gl, d: gl + d, g_j, dec)
+                    return recon, new_r
+
+                keys = jax.random.split(jax.random.fold_in(r_codec, j), data.n_clients)
+                recon_j, new_r_j = jax.vmap(client_ef)(tr_j, res_j, keys)
+                agg_src.append(recon_j)
+                new_residual.append(
+                    jax.tree.map(
+                        lambda n, o: jnp.where(
+                            sent_j.reshape((-1,) + (1,) * (n.ndim - 1)), n, o
+                        ),
+                        new_r_j,
+                        res_j,
+                    )
+                )
+        else:  # lossless: the wire carries the exact update, no residual
+            agg_src, new_residual = trained, state.residual
+
         # --- aggregation of shared pieces (Eq. 1, masked/partial) ---
         if cfg.personalization in ("pms", "dld"):
-            new_global = masked_partial_aggregate(trained, g, state.select, n_samples, share)
+            new_global = masked_partial_aggregate(agg_src, g, state.select, n_samples, share)
         else:
-            new_global = fedavg_aggregate(trained, state.select, n_samples)
+            new_global = fedavg_aggregate(agg_src, state.select, n_samples)
 
         # --- evaluation phase: distributed accuracy on composed models ---
         if cfg.personalization in ("pms", "dld"):
@@ -192,6 +250,13 @@ def make_round_step(
         # --- communication accounting for THIS round (uplink) ---
         sizes = layer_param_sizes(g)
         tx = transmitted_parameters(state.select, share, sizes)
+        # codec-reported wire bytes: static per-layer cost x (select & share)
+        layer_wire = jnp.asarray(
+            [tree_wire_bytes(codec, layer) for layer in g], jnp.float32
+        )  # (L,) — bytes one client pays to ship each layer through the codec
+        wire_per_client = (
+            share.astype(jnp.float32) * state.select.astype(jnp.float32)[:, None]
+        ) @ layer_wire  # (C,)
 
         # --- client selection for next round (Algorithm 1 l.12) ---
         metrics = ClientMetrics(accuracy=acc, loss=loss_now, n_samples=n_samples, delay=delay)
@@ -205,12 +270,15 @@ def make_round_step(
         else:
             next_pms = jnp.full((data.n_clients,), n_layers, jnp.int32)
 
-        new_state = _RoundState(new_global, new_local, acc, next_select, next_pms, rng)
+        new_state = _RoundState(
+            new_global, new_local, acc, next_select, next_pms, rng, new_residual
+        )
         out = {
             "acc": acc,
             "selected": state.select,
             "tx_params": tx,
             "pms": state.pms,
+            "wire_per_client": wire_per_client,
         }
         return new_state, out
 
@@ -240,6 +308,7 @@ def run_federated(
     # Algorithm 1: round 1 selects ALL clients; the shared piece is cut from
     # the first round in PMS mode (DLD starts full: A=0 <= 0.25 -> all layers)
     pms0 = cfg.pms_layers if cfg.personalization == "pms" else n_layers
+    codec = cfg.codec_obj()
     state = _RoundState(
         global_params=g0,
         local_params=loc0,
@@ -247,12 +316,13 @@ def run_federated(
         select=jnp.ones((data.n_clients,), bool),
         pms=jnp.full((data.n_clients,), pms0, jnp.int32),
         rng=r_loop,
+        residual=jax.tree.map(jnp.zeros_like, loc0) if codec.lossy else None,
     )
     round_step = jax.jit(make_round_step(data, cfg, apply_fn, loss_fn, acc_fn))
 
     comm = comm or CommModel()
     sizes_np = None
-    accs, sel_hist, tx_hist, pms_hist, times = [], [], [], [], []
+    accs, sel_hist, tx_hist, pms_hist, times, wire_hist = [], [], [], [], [], []
     for t in range(cfg.rounds):
         state, out = round_step(state, jnp.asarray(t))
         out = jax.device_get(out)
@@ -262,15 +332,20 @@ def run_federated(
         sel_hist.append(out["selected"])
         tx_hist.append(float(out["tx_params"]))
         pms_hist.append(out["pms"])
-        # simulated round time: slowest selected client
+        wire_pc = np.asarray(out["wire_per_client"], np.float64)  # (C,)
+        wire_hist.append(wire_pc.sum())
+        # simulated round time: slowest selected client — codec-compressed
+        # uplink, uncompressed float32 downlink (the server broadcasts the
+        # exact global model)
         per_client_params = (np.asarray(out["pms"])[:, None] > np.arange(len(sizes_np))[None, :]) @ sizes_np
         flops = 6.0 * per_client_params * np.asarray(data.n_samples) * cfg.epochs
         times.append(
             float(
                 comm.round_time(
-                    jnp.asarray(per_client_params * BYTES_PER_PARAM, jnp.float32),
+                    jnp.asarray(wire_pc, jnp.float32),
                     jnp.asarray(flops, jnp.float32),
                     jnp.asarray(out["selected"]),
+                    rx_bytes_per_client=jnp.asarray(per_client_params * BYTES_PER_PARAM, jnp.float32),
                 )
             )
         )
@@ -279,12 +354,14 @@ def run_federated(
 
     acc_pc = np.stack(accs)
     tx = np.asarray(tx_hist)
+    wire = np.asarray(wire_hist)
     return FLHistory(
         accuracy_mean=acc_pc.mean(axis=1),
         accuracy_per_client=acc_pc,
         selected=np.stack(sel_hist),
         tx_params=tx,
-        tx_bytes_cum=np.cumsum(tx * BYTES_PER_PARAM),
+        tx_bytes_cum=np.cumsum(wire),
         round_time=np.asarray(times),
         pms=np.stack(pms_hist),
+        tx_wire_bytes=wire,
     )

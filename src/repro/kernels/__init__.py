@@ -10,6 +10,8 @@ Kernels:
   masked_aggregate — ACSP-FL Eq. (1): fused masked weighted client average
                      (the server hot spot of the paper)
   ssm_scan         — Mamba-1 selective scan, chunked (falcon-mamba / jamba)
+  quantize         — per-block absmax int8/int4 (de)quantization with
+                     stochastic rounding (repro.comm wire-format hot path)
 
 This container is CPU-only: kernels are validated with interpret=True; on a
 real TPU set interpret=False (the default chooses by backend).
@@ -17,6 +19,7 @@ real TPU set interpret=False (the default chooses by backend).
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.masked_aggregate.ops import masked_aggregate
+from repro.kernels.quantize.ops import dequantize, quantize
 from repro.kernels.ssm_scan.ops import ssm_scan
 
-__all__ = ["flash_attention", "masked_aggregate", "ssm_scan"]
+__all__ = ["flash_attention", "masked_aggregate", "ssm_scan", "quantize", "dequantize"]

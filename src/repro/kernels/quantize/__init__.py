@@ -1,0 +1,3 @@
+from repro.kernels.quantize.ops import dequantize, quant_blocks, quantize
+
+__all__ = ["quantize", "dequantize", "quant_blocks"]

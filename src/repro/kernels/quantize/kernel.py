@@ -1,0 +1,98 @@
+"""quantize Pallas TPU kernel pair — the comm subsystem's wire-format hot path.
+
+Per parameter block of BP elements:
+
+  scale    = max(|x|) / qmax                       (qmax = 2^(bits-1) - 1)
+  q[p]     = clip(floor(x[p] / scale + u[p]), -qmax, qmax)   as int8
+  x_hat[p] = q[p] * scale                          (dequantize)
+
+``u`` is uniform noise in [0, 1): with u ~ U[0,1) this is *stochastic
+rounding* (unbiased, E[q*scale] = x); with u = 0.5 it degenerates to
+round-to-nearest. Noise is generated outside the kernel with jax.random so
+the kernel stays deterministic given its inputs and runs identically in
+interpret mode on CPU (pltpu.prng_* is TPU-compile only).
+
+Grid: (n_param_blocks,). BlockSpecs:
+  x      (P,)  -> (BP,)
+  noise  (P,)  -> (BP,)
+  q      (P,)  -> (BP,)  int8 out
+  scales (NB,) -> (1,)   one f32 scale per block (the codec's meta payload)
+
+int4 reuses the same int8 storage with qmax=7 — packing is accounted at the
+wire level (bits/8 bytes per element) by repro.comm, not materialised here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, u_ref, q_ref, s_ref, *, qmax: float):
+    x = x_ref[...].astype(jnp.float32)          # (BP,)
+    u = u_ref[...].astype(jnp.float32)          # (BP,)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.floor(x / scale + u), -qmax, qmax)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = jnp.full((1,), scale, jnp.float32)
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[0]
+
+
+def quantize_kernel(
+    x: jnp.ndarray,       # (P,) float32, P % block_p == 0
+    noise: jnp.ndarray,   # (P,) uniform [0,1) (0.5 everywhere = nearest)
+    bits: int = 8,
+    block_p: int = 512,
+    interpret: bool = True,
+):
+    p = x.shape[0]
+    bp = min(block_p, p)
+    assert p % bp == 0, "ops.py pads the param axis"
+    nb = p // bp
+    qmax = float(2 ** (bits - 1) - 1)
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, qmax=qmax),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p,), jnp.int8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, noise)
+
+
+def dequantize_kernel(
+    q: jnp.ndarray,       # (P,) int8, P % block_p == 0
+    scales: jnp.ndarray,  # (NB,) float32
+    block_p: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    p = q.shape[0]
+    bp = min(block_p, p)
+    assert p % bp == 0 and scales.shape[0] == p // bp
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(p // bp,),
+        in_specs=[
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        interpret=interpret,
+    )(q, scales)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the quantize/dequantize kernel pair."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(
+    x: jnp.ndarray,       # (P,) float32, P % block == 0
+    noise: jnp.ndarray,   # (P,) uniform [0,1); 0.5 everywhere = nearest
+    bits: int = 8,
+    block: int = 512,
+):
+    """Per-block absmax int quantization with (stochastic) rounding.
+
+    Returns ``(q, scales)`` with ``q`` int8 of shape (P,) and ``scales``
+    float32 of shape (P // block,).
+    """
+    p = x.shape[0]
+    qmax = float(2 ** (bits - 1) - 1)
+    xb = x.astype(jnp.float32).reshape(-1, min(block, p))
+    ub = noise.astype(jnp.float32).reshape(xb.shape)
+    scales = jnp.maximum(jnp.max(jnp.abs(xb), axis=1), 1e-12) / qmax
+    q = jnp.clip(jnp.floor(xb / scales[:, None] + ub), -qmax, qmax)
+    return q.astype(jnp.int8).reshape(p), scales
+
+
+def dequantize_ref(q: jnp.ndarray, scales: jnp.ndarray, block: int = 512) -> jnp.ndarray:
+    p = q.shape[0]
+    qb = q.astype(jnp.float32).reshape(-1, min(block, p))
+    return (qb * scales[:, None]).reshape(p)

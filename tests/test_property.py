@@ -1,8 +1,15 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+hypothesis is an optional dev dependency (see requirements.txt) — the whole
+module skips cleanly when it is absent instead of erroring at collection.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
