@@ -30,6 +30,7 @@ def main() -> None:
         comm_overhead,
         kernel_bench,
         roofline,
+        selection_bench,
         selection_frequency,
         table3_variants,
         table4_literature,
@@ -43,10 +44,14 @@ def main() -> None:
         ("selection_frequency (paper Fig 11)", selection_frequency.run),
         ("kernel_bench", kernel_bench.run),
         ("codec_bench (comm subsystem)", codec_bench.run),
+        ("selection_bench (strategy x codec grid)", selection_bench.run),
         ("roofline (deliverable g)", roofline.run),
     ]
-    if args.smoke:  # CI smoke: just the perf entry points, tiny sizes
-        suites = [s for s in suites if s[0].split(" ")[0] in ("kernel_bench", "codec_bench")]
+    if args.smoke:  # CI smoke: the perf + pipeline entry points, tiny sizes
+        suites = [
+            s for s in suites
+            if s[0].split(" ")[0] in ("kernel_bench", "codec_bench", "selection_bench")
+        ]
     t00 = time.time()
     for name, fn in suites:
         print(f"\n=== {name} ===")

@@ -1,0 +1,78 @@
+"""Selection-strategy x codec grid — the round-pipeline API's headline
+numbers: for every (strategy, codec) cell, rounds-to-target-accuracy and
+cumulative uplink wire bytes. This is where the cost-aware strategies
+(grad-importance, oort-wire) show their value: equal-or-fewer rounds to
+target at strictly fewer wire bytes than their cost-blind counterparts.
+
+Smoke mode (REPRO_BENCH_SMOKE=1, via ``benchmarks.run --smoke``) shrinks
+the grid to the adaptive + cost-aware strategies on float32/int8.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import ROUNDS, run_solution, write_csv
+from repro.data import make_har_dataset
+from repro.fl import FLConfig, run_federated
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+# cache names matching benchmarks.common.SOLUTIONS, so a full run.py pass
+# reuses the float32 trainings other suites already did
+_CACHE_ALIAS = {"acsp-fl": "acsp-fl-dld"}
+
+STRATEGIES = {
+    "fedavg": dict(strategy="fedavg", personalization="none", fraction=1.0),
+    "poc": dict(strategy="poc", personalization="none", fraction=0.5),
+    "oort": dict(strategy="oort", personalization="none", fraction=0.5),
+    "deev": dict(strategy="deev", personalization="none", decay=0.005),
+    "acsp-fl": dict(strategy="acsp-fl", personalization="dld", decay=0.005),
+    "grad-importance": dict(strategy="grad-importance", personalization="dld", fraction=0.5),
+    "oort-wire": dict(strategy="oort-wire", personalization="dld", fraction=0.5),
+}
+CODECS = ["float32", "int8", "topk+int8"]
+
+if SMOKE:
+    STRATEGIES = {k: STRATEGIES[k] for k in ("acsp-fl", "grad-importance", "oort-wire")}
+    CODECS = ["float32", "int8"]
+
+
+def rounds_to_target(acc_mean: np.ndarray, target: float) -> int:
+    """First round index reaching the target mean accuracy; -1 if never."""
+    hit = np.nonzero(acc_mean >= target)[0]
+    return int(hit[0]) if hit.size else -1
+
+
+def run():
+    rounds = 5 if SMOKE else ROUNDS
+    target = 0.70 if SMOKE else 0.80
+    ds = make_har_dataset("uci-har", seed=0, scale=0.25) if SMOKE else None
+    rows = []
+    for name, spec in STRATEGIES.items():
+        for codec in CODECS:
+            full = dict(spec, codec=codec, topk_fraction=0.1)
+            if SMOKE:  # tiny direct runs; the shared cache keys full scale
+                h = run_federated(ds, FLConfig(rounds=rounds, epochs=2, **full))
+            else:
+                sol = _CACHE_ALIAS.get(name, name) + ("" if codec == "float32" else f"@{codec}")
+                h = run_solution("uci-har", sol, full if codec != "float32" else dict(spec), rounds=rounds)
+            acc = float(h.accuracy_mean[-1])
+            rtt = rounds_to_target(h.accuracy_mean, target)
+            wire_mb = float(h.tx_bytes_cum[-1] / 1e6)
+            rows.append([name, codec, f"{acc:.4f}", rtt, f"{wire_mb:.2f}"])
+            print(
+                f"  {name:16s} {codec:10s} acc={acc:.4f}  "
+                f"rounds_to_{target:.2f}={rtt:3d}  wire={wire_mb:8.2f}MB"
+            )
+    return write_csv(
+        "selection_bench",
+        ["strategy", "codec", "final_accuracy", "rounds_to_target", "wire_mb"],
+        rows,
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,33 +1,73 @@
 """Quickstart: ACSP-FL on the UCI-HAR stand-in, 30 clients, 30 rounds.
 
-    PYTHONPATH=src python examples/quickstart.py [--codec int8]
+    PYTHONPATH=src python examples/quickstart.py [--codec int8] [--strategy oort-wire]
 
 Reproduces the paper's headline behaviour in ~a minute on CPU: adaptive
 selection shrinks the cohort, DLD shrinks the shared piece, accuracy stays
 on par with full FedAvg at a fraction of the bytes. ``--codec`` stacks a
-wire codec (repro.comm) on the ACSP-FL run: int8 / int4 quantization,
-top-k sparsification, or a chain like topk+int8.
+wire codec (repro.comm) on the adaptive run: int8 / int4 quantization,
+top-k sparsification, or a chain like topk+int8. ``--strategy`` swaps the
+selector — including the cost-aware ``grad-importance`` and ``oort-wire``
+strategies that read the codec's wire-byte signals.
 """
 
 import argparse
+import dataclasses
 
 import numpy as np
 
+from repro.configs.har_mlp import fl_defaults
 from repro.core.metrics import overhead_reduction
 from repro.data import make_har_dataset
 from repro.fl import FLConfig, run_federated
 
+CUSTOM_ROUND_HELP = """
+composing a custom round:
+  A federated round is a pipeline of swappable phases (repro.fl.phases):
+
+    Personalizer -> LocalTrainer -> TransmitPhase (wire codec + EF)
+                 -> Aggregator -> Evaluator -> SelectorPhase -> LayerPolicy
+
+  Build the default pipeline from a config, swap any phase, and hand it to
+  run_federated:
+
+    import dataclasses
+    from repro.core.selection import get_strategy
+    from repro.fl import api, phases, run_federated
+
+    cfg = api.FLConfig(strategy="acsp-fl", personalization="dld", rounds=30)
+    pipe = api.pipeline_from_config(cfg)
+    pipe = dataclasses.replace(
+        pipe,
+        selector=phases.SelectorPhase(get_strategy("oort-wire", fraction=0.3)),
+        layer_policy=phases.get_phase("layer-policy", "static", layers=2),
+    )
+    hist = run_federated(ds, cfg, pipeline=pipe)
+
+  Phase names live in string registries (phases.get_phase, get_strategy,
+  repro.comm.make_codec); register_phase / register_strategy /
+  register_codec_atom add custom components without touching the engine.
+"""
+
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog=CUSTOM_ROUND_HELP,
+    )
     ap.add_argument("--codec", default="float32",
-                    help="wire codec for the ACSP-FL run: float32 | int8 | int4 | topk | topk+int8")
+                    help="wire codec for the adaptive run: float32 | int8 | int4 | topk | topk+int8")
+    ap.add_argument("--strategy", default="acsp-fl",
+                    help="selection strategy: acsp-fl | deev | poc | oort | grad-importance | oort-wire")
     ap.add_argument("--topk-fraction", type=float, default=0.1)
     ap.add_argument("--rounds", type=int, default=30)
     args = ap.parse_args()
-    # fail fast on a bad codec spec before the (minutes-long) baseline runs
+    # fail fast on a bad codec spec or strategy name before the
+    # (minutes-long) baseline runs
     from repro.comm import make_codec
+    from repro.core.selection import get_strategy
     make_codec(args.codec, topk_fraction=args.topk_fraction)
+    get_strategy(args.strategy)
 
     ds = make_har_dataset("uci-har", seed=0)
     print(f"dataset: {ds.name} — {ds.n_clients} clients, {ds.n_features} features, {ds.n_classes} classes")
@@ -38,20 +78,24 @@ def main():
         progress=True,
     )
 
-    print(f"\n[2/2] ACSP-FL (adaptive selection + decay + DLD partial sharing + codec={args.codec})")
-    acsp = run_federated(
-        ds, FLConfig(strategy="acsp-fl", personalization="dld", decay=0.01, rounds=args.rounds, epochs=2,
-                     codec=args.codec, topk_fraction=args.topk_fraction),
-        progress=True,
+    print(f"\n[2/2] {args.strategy} (adaptive selection + DLD partial sharing + codec={args.codec})")
+    cfg = fl_defaults()  # the paper's recipe (configs.har_mlp), tailored by flags
+    cfg = dataclasses.replace(
+        cfg,
+        selection=dataclasses.replace(cfg.selection, strategy=args.strategy),
+        codec=dataclasses.replace(cfg.codec, spec=args.codec, topk_fraction=args.topk_fraction),
+        train=dataclasses.replace(cfg.train, rounds=args.rounds),
     )
+    acsp = run_federated(ds, cfg, progress=True)
 
     red = overhead_reduction(acsp.tx_bytes_cum[-1], fedavg.tx_bytes_cum[-1])
+    name = args.strategy
     print("\n=== summary ===")
-    print(f"accuracy      : FedAvg {fedavg.accuracy_mean[-1]:.3f} | ACSP-FL {acsp.accuracy_mean[-1]:.3f}")
-    print(f"worst client  : FedAvg {fedavg.accuracy_per_client[-1].min():.3f} | ACSP-FL {acsp.accuracy_per_client[-1].min():.3f}")
-    print(f"uplink bytes  : FedAvg {fedavg.tx_bytes_cum[-1]/1e6:.1f}MB | ACSP-FL {acsp.tx_bytes_cum[-1]/1e6:.1f}MB")
+    print(f"accuracy      : FedAvg {fedavg.accuracy_mean[-1]:.3f} | {name} {acsp.accuracy_mean[-1]:.3f}")
+    print(f"worst client  : FedAvg {fedavg.accuracy_per_client[-1].min():.3f} | {name} {acsp.accuracy_per_client[-1].min():.3f}")
+    print(f"uplink bytes  : FedAvg {fedavg.tx_bytes_cum[-1]/1e6:.1f}MB | {name} {acsp.tx_bytes_cum[-1]/1e6:.1f}MB")
     print(f"communication reduction: {red:.1%} (paper reports up to 95% at 100 rounds)")
-    print(f"avg clients/round: FedAvg {fedavg.selected.sum(1).mean():.1f} | ACSP-FL {acsp.selected.sum(1).mean():.1f}")
+    print(f"avg clients/round: FedAvg {fedavg.selected.sum(1).mean():.1f} | {name} {acsp.selected.sum(1).mean():.1f}")
     assert acsp.tx_bytes_cum[-1] < fedavg.tx_bytes_cum[-1]
 
 

@@ -9,6 +9,7 @@ from repro.comm.codec import (
     TopKCodec,
     ef_step,
     make_codec,
+    register_codec_atom,
     roundtrip_tree,
     tree_wire_bytes,
 )
@@ -20,6 +21,7 @@ __all__ = [
     "TopKCodec",
     "ChainedCodec",
     "make_codec",
+    "register_codec_atom",
     "tree_wire_bytes",
     "roundtrip_tree",
     "ef_step",

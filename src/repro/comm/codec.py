@@ -236,6 +236,26 @@ class ChainedCodec(Codec):
 # ---------------------------------------------------------------------------
 
 
+# spec atom -> factory(bits=..., topk_fraction=...) — mirrors the string
+# registries of repro.core.selection.get_strategy and repro.fl.phases
+_CODEC_ATOMS = {
+    "float32": lambda **kw: Float32Identity(),
+    "identity": lambda **kw: Float32Identity(),
+    "none": lambda **kw: Float32Identity(),
+    "fp32": lambda **kw: Float32Identity(),
+    "quantize": lambda **kw: QuantizeCodec(bits=kw.get("bits", 8)),
+    "int8": lambda **kw: QuantizeCodec(bits=8),
+    "int4": lambda **kw: QuantizeCodec(bits=4),
+    "topk": lambda **kw: TopKCodec(fraction=kw.get("topk_fraction", 0.1)),
+}
+
+
+def register_codec_atom(name: str, factory) -> None:
+    """Register a custom spec atom for ``make_codec``; ``factory`` is called
+    with the keyword arguments of ``make_codec`` and returns a Codec."""
+    _CODEC_ATOMS[name.lower()] = factory
+
+
 def make_codec(spec: str, bits: int = 8, topk_fraction: float = 0.1) -> Codec:
     """Build a codec from an FLConfig-style spec string.
 
@@ -246,15 +266,11 @@ def make_codec(spec: str, bits: int = 8, topk_fraction: float = 0.1) -> Codec:
 
     def atom(s: str) -> Codec:
         s = s.strip().lower()
-        if s in ("float32", "identity", "none", "fp32"):
-            return Float32Identity()
-        if s == "quantize":
-            return QuantizeCodec(bits=bits)
-        if s.startswith("int"):
-            return QuantizeCodec(bits=int(s[3:]))
-        if s == "topk":
-            return TopKCodec(fraction=topk_fraction)
-        raise ValueError(f"unknown codec atom {s!r} in spec {spec!r}")
+        if s not in _CODEC_ATOMS:
+            raise ValueError(
+                f"unknown codec atom {s!r} in spec {spec!r}; have {sorted(_CODEC_ATOMS)}"
+            )
+        return _CODEC_ATOMS[s](bits=bits, topk_fraction=topk_fraction)
 
     parts = [p for p in spec.split("+") if p.strip()]
     if not parts:

@@ -1,8 +1,14 @@
-"""ModelConfig (covers all six assigned arch families) and input shapes.
+"""ModelConfig (covers all six assigned arch families), input shapes, and
+the nested federated sub-configs composed by ``repro.fl.api.FLConfig``.
 
 The FULL configs are exercised only via the dry-run (ShapeDtypeStruct —
 never allocated); ``reduced()`` yields the smoke-test variant (<=2 layers,
 d_model<=512, <=4 experts) that runs a real forward/train step on CPU.
+
+The FL sub-configs (SelectionConfig, PersonalizationConfig, CodecConfig,
+TrainConfig) are pure-dataclass, validated at construction, and build their
+runtime objects lazily (``strategy_obj``/``codec_obj``) so this module
+stays import-light.
 """
 
 from __future__ import annotations
@@ -216,3 +222,92 @@ def get_shape(name: str) -> InputShape:
     if name not in SHAPES:
         raise KeyError(f"unknown shape {name!r}; have {sorted(SHAPES)}")
     return SHAPES[name]
+
+
+# ---------------------------------------------------------------------------
+# federated sub-configs (composed by repro.fl.api.FLConfig)
+# ---------------------------------------------------------------------------
+
+PERSONALIZATION_MODES = ("none", "ft", "pms", "dld")
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionConfig:
+    """Which clients train each round (paper §3.2-3.3 + baselines)."""
+
+    strategy: str = "acsp-fl"   # see repro.core.selection registry
+    fraction: float = 0.5       # k/C for fraction-based strategies
+    decay: float = 0.005        # phi decay (Eq. 6) for deev/acsp-fl; 0 disables
+
+    def __post_init__(self):
+        if self.decay < 0.0:
+            raise ValueError(f"decay must be >= 0, got {self.decay!r}")
+
+    def strategy_obj(self):
+        from repro.core.selection import get_strategy
+
+        if self.strategy in ("deev", "acsp-fl"):
+            return get_strategy(self.strategy, decay=self.decay)
+        # fraction only matters for the remaining strategies, so it is
+        # validated here rather than at construction (deev configs may carry
+        # the default fraction untouched)
+        if not 0.0 < self.fraction <= 1.0:
+            raise ValueError(
+                f"fraction must be in (0, 1] for strategy {self.strategy!r}, got {self.fraction!r}"
+            )
+        return get_strategy(self.strategy, fraction=self.fraction)
+
+
+@dataclasses.dataclass(frozen=True)
+class PersonalizationConfig:
+    """How clients' local models relate to the global one (paper §3.4)."""
+
+    mode: str = "dld"           # none | ft | pms | dld
+    pms_layers: int = 2         # shared-prefix length when mode == 'pms'
+
+    def __post_init__(self):
+        if self.mode not in PERSONALIZATION_MODES:
+            raise ValueError(
+                f"unknown personalization mode {self.mode!r}; have {list(PERSONALIZATION_MODES)}"
+            )
+        if self.pms_layers < 1:
+            raise ValueError(f"pms_layers must be >= 1, got {self.pms_layers!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecConfig:
+    """Uplink wire format (repro.comm.make_codec spec)."""
+
+    spec: str = "float32"       # float32 | int8 | int4 | topk | topk+int8 ...
+    bits: int = 8               # bits for the generic 'quantize' atom
+    topk_fraction: float = 0.1  # k/n for the 'topk' atom
+
+    def __post_init__(self):
+        if not 0.0 < self.topk_fraction <= 1.0:
+            raise ValueError(
+                f"topk_fraction must be in (0, 1], got {self.topk_fraction!r}"
+            )
+
+    def codec_obj(self):
+        from repro.comm import make_codec
+
+        return make_codec(self.spec, bits=self.bits, topk_fraction=self.topk_fraction)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Server loop + local SGD hyperparameters (Algorithms 1 & 2)."""
+
+    rounds: int = 100
+    epochs: int = 1             # tau — local epochs
+    batch_size: int = 32
+    lr: float = 0.1
+    momentum: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        for field in ("rounds", "epochs", "batch_size"):
+            if getattr(self, field) < 1:
+                raise ValueError(f"{field} must be >= 1, got {getattr(self, field)!r}")
+        if self.lr <= 0.0:
+            raise ValueError(f"lr must be > 0, got {self.lr!r}")

@@ -21,3 +21,21 @@ config = ModelConfig(
     attn_type="none",
     source="10.1016/j.adhoc.2024.103462",
 )
+
+
+def fl_defaults():
+    """The paper's headline experiment recipe as a nested FLConfig:
+    ACSP-FL selection + decay, DLD partial sharing, SGD local training.
+    Callers tailor it with ``dataclasses.replace`` on the sub-configs
+    (e.g. ``replace(cfg, train=replace(cfg.train, rounds=30))``)."""
+    from repro.configs.base import (
+        CodecConfig, PersonalizationConfig, SelectionConfig, TrainConfig,
+    )
+    from repro.fl.api import FLConfig
+
+    return FLConfig(
+        selection=SelectionConfig(strategy="acsp-fl", decay=0.01),
+        personalization=PersonalizationConfig(mode="dld"),
+        codec=CodecConfig(spec="float32"),
+        train=TrainConfig(rounds=100, epochs=2, batch_size=32, lr=0.1),
+    )

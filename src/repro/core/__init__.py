@@ -15,12 +15,17 @@ FedAvg (random), POC, Oort, DEEV.
 
 from repro.core.selection import (
     SelectionStrategy,
+    ClientObservations,
+    ClientMetrics,
     FedAvgRandom,
     PowerOfChoice,
     Oort,
+    OortWire,
     DEEV,
     ACSPFL,
+    GradImportance,
     get_strategy,
+    register_strategy,
 )
 from repro.core.decay import phi_decay
 from repro.core.layersharing import (
@@ -34,12 +39,17 @@ from repro.core.aggregation import fedavg_aggregate, masked_partial_aggregate
 
 __all__ = [
     "SelectionStrategy",
+    "ClientObservations",
+    "ClientMetrics",
     "FedAvgRandom",
     "PowerOfChoice",
     "Oort",
+    "OortWire",
     "DEEV",
     "ACSPFL",
+    "GradImportance",
     "get_strategy",
+    "register_strategy",
     "phi_decay",
     "dynamic_layer_definition",
     "layer_share_mask",

@@ -12,6 +12,14 @@ Strategies:
   DEEV           — accuracy<=mean filter + decay (de Souza et al. 2023)
   ACSPFL         — the paper: pi filter (Eq. 4-5) + phi decay (Eq. 6) +
                    ordered truncation (Eq. 7)
+  GradImportance — compressed-update norm per wire byte (Marnissi et al. 2021)
+  OortWire       — Oort whose systemic term is the codec-reported uplink
+                   wire bytes instead of the analytic training delay
+
+The cost-aware strategies consume the extended ``ClientObservations``
+fields (``wire_bytes``, ``update_norm``, ``participation_count``) that the
+round pipeline (repro.fl.phases.TransmitPhase) fills from the wire codec;
+calling them with bare four-field observations raises at trace time.
 """
 
 from __future__ import annotations
@@ -25,13 +33,30 @@ import jax.numpy as jnp
 from repro.core.decay import phi_decay
 
 
-class ClientMetrics(NamedTuple):
-    """Per-client observations available to the server each round."""
+class ClientObservations(NamedTuple):
+    """Per-client observations available to the server each round.
+
+    The first four fields are the seed's ``ClientMetrics``; the trailing
+    fields are cost signals filled by the round pipeline's codec phase so
+    selection can trade statistical utility against *actual* (compressed)
+    uplink cost. They default to ``None`` — strategies that need them check
+    at trace time and raise with a pointer to the engine.
+    """
 
     accuracy: jnp.ndarray  # (C,) float — distributed-eval accuracy A_i
     loss: jnp.ndarray      # (C,) float — local loss
     n_samples: jnp.ndarray  # (C,) int/float — |d_i|
     delay: jnp.ndarray     # (C,) float — systemic training delay (Oort)
+    wire_bytes: jnp.ndarray | None = None  # (C,) codec wire bytes a client
+                                           # pays to ship its shared layers
+    update_norm: jnp.ndarray | None = None  # (C,) l2 norm of the *compressed*
+                                            # uplink delta (post decode)
+    participation_count: jnp.ndarray | None = None  # (C,) int — times selected
+
+
+# Backward-compat alias: the seed's four-field name. Positional construction
+# and field access are unchanged; the new fields simply default to None.
+ClientMetrics = ClientObservations
 
 
 def _keep_lowest(values: jnp.ndarray, within: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
@@ -111,16 +136,22 @@ class Oort(SelectionStrategy):
     preferred_delay: float = 1.0  # T — the developer-preferred round duration
     epsilon: float = 0.1          # exploration fraction
 
-    def select(self, metrics: ClientMetrics, t, rng) -> jnp.ndarray:
-        c = metrics.loss.shape[0]
-        k = max(1, int(round(self.fraction * c)))
-        stat = metrics.n_samples * jnp.sqrt(jnp.maximum(metrics.loss, 0.0) ** 2 + 1e-12)
-        penalty = jnp.where(
+    def _systemic_penalty(self, metrics: ClientMetrics) -> jnp.ndarray:
+        """(T / t_i)^alpha for clients slower than the preferred duration.
+
+        Overridden by OortWire to penalize by wire bytes instead of delay.
+        """
+        return jnp.where(
             metrics.delay > self.preferred_delay,
             (self.preferred_delay / jnp.maximum(metrics.delay, 1e-6)) ** self.alpha,
             1.0,
         )
-        util = stat * penalty
+
+    def select(self, metrics: ClientMetrics, t, rng) -> jnp.ndarray:
+        c = metrics.loss.shape[0]
+        k = max(1, int(round(self.fraction * c)))
+        stat = metrics.n_samples * jnp.sqrt(jnp.maximum(metrics.loss, 0.0) ** 2 + 1e-12)
+        util = stat * self._systemic_penalty(metrics)
         k_exploit = max(1, int(round((1.0 - self.epsilon) * k)))
         k_explore = k - k_exploit
         exploit = _keep_highest(util, jnp.ones((c,), bool), jnp.asarray(k_exploit))
@@ -149,24 +180,66 @@ class DEEV(SelectionStrategy):
 
 
 @dataclasses.dataclass(frozen=True)
-class ACSPFL(SelectionStrategy):
+class ACSPFL(DEEV):
     """ACSP-FL adaptive selection (paper §3.2-3.3).
 
-    Identical selection law to DEEV (the paper extends DEEV); the ACSP-FL
-    *system* additionally enables personalization and partial model sharing,
-    which live in repro.core.layersharing / personalization and are wired by
-    the FL engine. Kept as a separate type so experiment configs read like
-    the paper.
+    Identical selection law to DEEV (the paper extends DEEV), hence the
+    subclass; the ACSP-FL *system* additionally enables personalization and
+    partial model sharing, which live in repro.core.layersharing /
+    personalization and are wired by the FL round pipeline. Kept as a
+    separate type so experiment configs read like the paper.
     """
 
-    decay: float = 0.005
+
+def _require(metrics: ClientMetrics, strategy: str, *fields: str) -> None:
+    """Trace-time check that the extended observation fields are present."""
+    missing = [f for f in fields if getattr(metrics, f) is None]
+    if missing:
+        raise ValueError(
+            f"{strategy} needs ClientObservations.{'/'.join(missing)}; run it "
+            f"through the repro.fl round pipeline, whose codec phase fills "
+            f"the wire-cost signals"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class GradImportance(SelectionStrategy):
+    """Gradient-importance selection (Marnissi et al. 2021), codec-aware.
+
+    Ranks clients by the l2 norm of their *compressed* uplink delta divided
+    by the wire bytes that delta costs through the active codec — utility
+    per byte — and keeps the top ``fraction``. Under a lossy codec the norm
+    includes the error-feedback replay, so chronically suppressed clients
+    bubble up once their residual grows.
+    """
+
+    fraction: float = 0.5
 
     def select(self, metrics: ClientMetrics, t, rng) -> jnp.ndarray:
-        a = metrics.accuracy
-        filtered = a <= jnp.mean(a)
-        cohort = jnp.sum(filtered)
-        keep = phi_decay(cohort, t, self.decay)
-        return _keep_lowest(a, filtered, keep)
+        _require(metrics, "grad-importance", "update_norm", "wire_bytes")
+        c = metrics.update_norm.shape[0]
+        k = max(1, int(round(self.fraction * c)))
+        util = metrics.update_norm / jnp.maximum(metrics.wire_bytes, 1.0)
+        return _keep_highest(util, jnp.ones((c,), bool), jnp.asarray(k))
+
+
+@dataclasses.dataclass(frozen=True)
+class OortWire(Oort):
+    """Oort with the systemic term driven by *actual* uplink wire bytes.
+
+    The stock Oort penalty uses an analytic per-client delay; this variant
+    penalizes clients whose codec-reported wire bytes exceed the cohort
+    mean by (mean / bytes)^alpha — so selection trades statistical utility
+    against the real (compressed, partial-model) uplink cost.
+    """
+
+    def _systemic_penalty(self, metrics: ClientMetrics) -> jnp.ndarray:
+        _require(metrics, "oort-wire", "wire_bytes")
+        wb = metrics.wire_bytes
+        preferred = jnp.mean(wb)
+        return jnp.where(
+            wb > preferred, (preferred / jnp.maximum(wb, 1e-6)) ** self.alpha, 1.0
+        )
 
 
 _REGISTRY = {
@@ -175,6 +248,8 @@ _REGISTRY = {
     "oort": lambda **kw: Oort(**{k: v for k, v in kw.items() if k in ("fraction", "alpha", "preferred_delay", "epsilon")}),
     "deev": lambda **kw: DEEV(**{k: v for k, v in kw.items() if k in ("decay",)}),
     "acsp-fl": lambda **kw: ACSPFL(**{k: v for k, v in kw.items() if k in ("decay",)}),
+    "grad-importance": lambda **kw: GradImportance(**{k: v for k, v in kw.items() if k in ("fraction",)}),
+    "oort-wire": lambda **kw: OortWire(**{k: v for k, v in kw.items() if k in ("fraction", "alpha", "epsilon")}),
 }
 
 
@@ -183,3 +258,9 @@ def get_strategy(name: str, **kwargs) -> SelectionStrategy:
     if key not in _REGISTRY:
         raise KeyError(f"unknown selection strategy {name!r}; have {sorted(_REGISTRY)}")
     return _REGISTRY[key](**kwargs)
+
+
+def register_strategy(name: str, factory) -> None:
+    """Register a custom strategy factory (``factory(**kwargs) -> strategy``)
+    under ``name`` so configs and the round pipeline can reference it."""
+    _REGISTRY[name.lower()] = factory

@@ -1,6 +1,29 @@
-"""FL runtime: single-host vmap'd simulation engine (repro.fl.engine) and
-the cross-silo distributed runtime over a TPU mesh (repro.fl.cross_silo)."""
+"""FL runtime: the composable round pipeline (repro.fl.api + repro.fl.phases),
+the single-host vmap'd simulation engine (repro.fl.engine), and the
+cross-silo distributed runtime over a TPU mesh (repro.fl.cross_silo)."""
 
-from repro.fl.engine import FLConfig, FLHistory, run_federated, make_round_step
+from repro.fl.api import (
+    CodecConfig,
+    FLConfig,
+    PersonalizationConfig,
+    RoundPipeline,
+    SelectionConfig,
+    TrainConfig,
+    build_round_step,
+    pipeline_from_config,
+)
+from repro.fl.engine import FLHistory, make_round_step, run_federated
 
-__all__ = ["FLConfig", "FLHistory", "run_federated", "make_round_step"]
+__all__ = [
+    "FLConfig",
+    "SelectionConfig",
+    "PersonalizationConfig",
+    "CodecConfig",
+    "TrainConfig",
+    "FLHistory",
+    "RoundPipeline",
+    "pipeline_from_config",
+    "build_round_step",
+    "run_federated",
+    "make_round_step",
+]

@@ -1,0 +1,389 @@
+"""Composable round-pipeline API for the federated engine.
+
+A federated round is a ``RoundPipeline`` — an explicit, swappable sequence
+of phase components (see ``repro.fl.phases``):
+
+  Personalizer -> LocalTrainer -> TransmitPhase (wire codec + EF)
+               -> Aggregator -> Evaluator -> SelectorPhase -> LayerPolicy
+
+``FLConfig`` is the declarative form: four nested validated sub-configs
+(``SelectionConfig``, ``PersonalizationConfig``, ``CodecConfig``,
+``TrainConfig``) with a flat-kwargs backward-compat constructor, so both
+
+    FLConfig(strategy="acsp-fl", personalization="dld", rounds=30)   # flat
+    FLConfig(selection=SelectionConfig("acsp-fl"), train=TrainConfig(rounds=30))
+
+build the same config. ``pipeline_from_config`` maps a config onto phase
+objects via the string registries; ``build_round_step`` composes any
+pipeline into the jitted round step the server loop drives.
+
+Composing a custom round::
+
+    from repro.fl import api, phases
+
+    pipe = api.pipeline_from_config(cfg)                       # the default
+    pipe = dataclasses.replace(                                 # swap a phase
+        pipe, selector=phases.SelectorPhase(get_strategy("oort-wire", fraction=0.3))
+    )
+    hist = run_federated(data, cfg, pipeline=pipe)
+
+The default pipeline reproduces the pre-refactor monolithic round step
+bit-identically (guarded by tests/test_fl_api.py golden trajectories).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    CodecConfig,
+    PersonalizationConfig,
+    SelectionConfig,
+    TrainConfig,
+)
+from repro.core.aggregation import transmitted_parameters
+from repro.core.layersharing import layer_param_sizes, layer_share_mask
+from repro.data.synthetic import FederatedDataset
+from repro.fl import phases
+from repro.models.mlp import mlp_accuracy, mlp_loss
+
+__all__ = [
+    "FLConfig",
+    "SelectionConfig",
+    "PersonalizationConfig",
+    "CodecConfig",
+    "TrainConfig",
+    "RoundPipeline",
+    "RoundState",
+    "pipeline_from_config",
+    "build_round_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# FLConfig — nested sub-configs + flat-kwargs backward compat
+# ---------------------------------------------------------------------------
+
+# flat kwarg -> (group field, sub-config attribute)
+_FLAT_KEYS = {
+    "strategy": ("selection", "strategy"),
+    "fraction": ("selection", "fraction"),
+    "decay": ("selection", "decay"),
+    "personalization": ("personalization", "mode"),
+    "pms_layers": ("personalization", "pms_layers"),
+    "codec": ("codec", "spec"),
+    "codec_bits": ("codec", "bits"),
+    "topk_fraction": ("codec", "topk_fraction"),
+    "rounds": ("train", "rounds"),
+    "epochs": ("train", "epochs"),
+    "batch_size": ("train", "batch_size"),
+    "lr": ("train", "lr"),
+    "momentum": ("train", "momentum"),
+    "seed": ("train", "seed"),
+}
+
+_GROUP_TYPES = {
+    "selection": SelectionConfig,
+    "personalization": PersonalizationConfig,
+    "codec": CodecConfig,
+    "train": TrainConfig,
+}
+
+
+@dataclasses.dataclass(frozen=True, init=False)
+class FLConfig:
+    """Federated experiment config: four nested validated sub-configs.
+
+    Accepts either the nested objects (``selection=SelectionConfig(...)``)
+    or the seed's flat kwargs (``strategy="oort", fraction=0.5, rounds=30,
+    codec="int8"``) — but not both forms for the same group. The seed's flat
+    attributes (``cfg.strategy``, ``cfg.rounds``, ...) remain readable.
+    """
+
+    selection: SelectionConfig
+    personalization: PersonalizationConfig
+    codec: CodecConfig
+    train: TrainConfig
+
+    def __init__(self, selection=None, personalization=None, codec=None,
+                 train=None, **flat):
+        # string conveniences on the group params themselves: the seed's
+        # FLConfig(personalization="dld", codec="int8") spelled the mode/spec
+        # directly, so route strings into the flat namespace
+        if isinstance(personalization, str):
+            flat["personalization"], personalization = personalization, None
+        if isinstance(codec, str):
+            flat["codec"], codec = codec, None
+        if isinstance(selection, str):
+            flat["strategy"], selection = selection, None
+
+        unknown = set(flat) - set(_FLAT_KEYS)
+        if unknown:
+            raise TypeError(
+                f"unknown FLConfig kwargs {sorted(unknown)}; flat kwargs are "
+                f"{sorted(_FLAT_KEYS)} (or pass nested "
+                f"{sorted(_GROUP_TYPES)} sub-configs)"
+            )
+        given = {"selection": selection, "personalization": personalization,
+                 "codec": codec, "train": train}
+        grouped: dict[str, dict[str, Any]] = {g: {} for g in _GROUP_TYPES}
+        for key, value in flat.items():
+            group, attr = _FLAT_KEYS[key]
+            grouped[group][attr] = value
+        for group, cls in _GROUP_TYPES.items():
+            if given[group] is not None:
+                if grouped[group]:
+                    raise ValueError(
+                        f"pass either {group}={cls.__name__}(...) or its flat "
+                        f"kwargs, not both (got both for {sorted(grouped[group])})"
+                    )
+                if not isinstance(given[group], cls):
+                    raise TypeError(
+                        f"{group} must be a {cls.__name__}, got {type(given[group]).__name__}"
+                    )
+                object.__setattr__(self, group, given[group])
+            else:
+                object.__setattr__(self, group, cls(**grouped[group]))
+
+    # --- flat read access (seed compatibility) -----------------------------
+    @property
+    def strategy(self) -> str:
+        return self.selection.strategy
+
+    @property
+    def fraction(self) -> float:
+        return self.selection.fraction
+
+    @property
+    def decay(self) -> float:
+        return self.selection.decay
+
+    @property
+    def pms_layers(self) -> int:
+        return self.personalization.pms_layers
+
+    @property
+    def codec_bits(self) -> int:
+        return self.codec.bits
+
+    @property
+    def topk_fraction(self) -> float:
+        return self.codec.topk_fraction
+
+    @property
+    def rounds(self) -> int:
+        return self.train.rounds
+
+    @property
+    def epochs(self) -> int:
+        return self.train.epochs
+
+    @property
+    def batch_size(self) -> int:
+        return self.train.batch_size
+
+    @property
+    def lr(self) -> float:
+        return self.train.lr
+
+    @property
+    def momentum(self) -> float:
+        return self.train.momentum
+
+    @property
+    def seed(self) -> int:
+        return self.train.seed
+
+    def strategy_obj(self):
+        return self.selection.strategy_obj()
+
+    def codec_obj(self):
+        return self.codec.codec_obj()
+
+
+# ---------------------------------------------------------------------------
+# RoundPipeline — the composed phases
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundPipeline:
+    """One federated round as an explicit phase sequence. Swap any field
+    (``dataclasses.replace``) to compose a custom round."""
+
+    personalizer: phases.Personalizer
+    trainer: phases.LocalTrainer
+    transmit: phases.TransmitPhase
+    aggregator: phases.Aggregator
+    evaluator: phases.Evaluator
+    selector: phases.SelectorPhase
+    layer_policy: phases.LayerPolicy
+
+
+def pipeline_from_config(cfg: FLConfig) -> RoundPipeline:
+    """Map a (nested) FLConfig onto phase objects via the registries."""
+    mode = cfg.personalization.mode
+    personalizer = phases.get_phase(
+        "personalizer", mode if mode in ("none", "ft") else "compose"
+    )
+    if mode == "dld":
+        layer_policy = phases.get_phase("layer-policy", "dld")
+    elif mode == "pms":
+        layer_policy = phases.get_phase("layer-policy", "static", layers=cfg.personalization.pms_layers)
+    else:
+        layer_policy = phases.get_phase("layer-policy", "full")
+    return RoundPipeline(
+        personalizer=personalizer,
+        trainer=phases.get_phase(
+            "trainer", "sgd",
+            epochs=cfg.train.epochs, batch_size=cfg.train.batch_size, lr=cfg.train.lr,
+        ),
+        transmit=phases.TransmitPhase(cfg.codec_obj()),
+        aggregator=phases.get_phase(
+            "aggregator", "masked-partial" if mode in ("pms", "dld") else "fedavg"
+        ),
+        evaluator=phases.get_phase("evaluator", "distributed"),
+        selector=phases.SelectorPhase(cfg.strategy_obj()),
+        layer_policy=layer_policy,
+    )
+
+
+# ---------------------------------------------------------------------------
+# round-step composition
+# ---------------------------------------------------------------------------
+
+
+class RoundState(NamedTuple):
+    """Carried server-loop state (a pytree; jit round-step input/output)."""
+
+    global_params: Any            # layered list, leaves (...)
+    local_params: Any             # layered list, leaves (C, ...)
+    accuracy: jnp.ndarray         # (C,)
+    select: jnp.ndarray           # (C,) bool
+    pms: jnp.ndarray              # (C,) int32 — layers each client will share
+    rng: jax.Array
+    residual: Any = None          # EF residuals (lossy codec only), (C, ...)
+    participation: Any = None     # (C,) int32 — cumulative selection counts
+
+
+def build_env(
+    data: FederatedDataset,
+    seed: int,
+    loss_fn: Callable = mlp_loss,
+    acc_fn: Callable = mlp_accuracy,
+) -> phases.RoundEnv:
+    """Device-resident static environment for the round phases."""
+    return phases.RoundEnv(
+        x_tr=jnp.asarray(data.x_train),
+        y_tr=jnp.asarray(data.y_train),
+        m_tr=jnp.asarray(data.m_train),
+        x_te=jnp.asarray(data.x_test),
+        y_te=jnp.asarray(data.y_test),
+        m_te=jnp.asarray(data.m_test),
+        n_samples=jnp.asarray(data.n_samples, jnp.float32),
+        # Oort's systemic term: per-client delay, fixed per experiment
+        delay=jax.random.uniform(
+            jax.random.PRNGKey(seed + 99), (data.n_clients,), minval=0.5, maxval=2.0
+        ),
+        n_clients=data.n_clients,
+        loss_fn=loss_fn,
+        acc_fn=acc_fn,
+    )
+
+
+def build_round_step(env: phases.RoundEnv, pipeline: RoundPipeline):
+    """Compose a RoundPipeline into the jitted round step.
+
+    The step maps ``(RoundState, t) -> (RoundState, out)`` where ``out``
+    holds the host-side history records. Phase order and rng-lane splits
+    reproduce the pre-refactor monolithic engine exactly: lossless codecs
+    draw no codec randomness, keeping default float32 trajectories
+    bit-identical to the seed.
+    """
+
+    def round_step(state: RoundState, t: jnp.ndarray):
+        g = state.global_params
+        n_layers = len(g)
+        share = layer_share_mask(n_layers, state.pms)  # (C, L)
+
+        if pipeline.transmit.lossy:
+            rng, r_fit, r_sel, r_codec = jax.random.split(state.rng, 4)
+        else:
+            rng, r_fit, r_sel = jax.random.split(state.rng, 3)
+            r_codec = None
+
+        # participation defaults to None on hand-built states (the exported
+        # RoundState mirrors the old _RoundState shape) — treat as zeros
+        prev_part = (
+            state.participation
+            if state.participation is not None
+            else jnp.zeros(state.select.shape, jnp.int32)
+        )
+        participation = prev_part + state.select.astype(jnp.int32)
+        ctx = phases.RoundContext(
+            t=t,
+            global_params=g,
+            local_params=state.local_params,
+            select=state.select,
+            pms=state.pms,
+            share=share,
+            residual=state.residual,
+            participation=participation,
+            rng_fit=r_fit,
+            rng_codec=r_codec,
+            rng_sel=r_sel,
+        )
+
+        # --- personalization: build each client's training model ---
+        ctx = ctx._replace(train_model=pipeline.personalizer.train_model(ctx, env))
+        # --- local training (all lanes compute; unselected discarded) ---
+        ctx = pipeline.trainer.fit(ctx, env)
+        sel_f = ctx.select
+        ctx = ctx._replace(
+            new_local=jax.tree.map(
+                lambda new, old: jnp.where(
+                    sel_f.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
+                ),
+                ctx.trained,
+                pipeline.personalizer.local_fallback(ctx, env),
+            )
+        )
+        # --- wire codec: compress each client's shared delta (uplink) ---
+        ctx = pipeline.transmit.transmit(ctx, env)
+        # --- aggregation of shared pieces (Eq. 1, masked/partial) ---
+        ctx = pipeline.aggregator.aggregate(ctx, env)
+        # --- evaluation: distributed accuracy on composed models ---
+        ctx = ctx._replace(eval_model=pipeline.personalizer.eval_model(ctx, env))
+        ctx = pipeline.evaluator.evaluate(ctx, env)
+        # --- client selection for next round (Algorithm 1 l.12) ---
+        ctx = pipeline.selector.select(ctx, env)
+        # --- next round's PMS (layers to share) ---
+        ctx = ctx._replace(next_pms=pipeline.layer_policy.next_pms(ctx, env, n_layers))
+
+        # --- communication accounting for THIS round (uplink) ---
+        tx = transmitted_parameters(state.select, share, layer_param_sizes(g))
+
+        new_state = RoundState(
+            global_params=ctx.new_global,
+            local_params=ctx.new_local,
+            accuracy=ctx.accuracy,
+            select=ctx.next_select,
+            pms=ctx.next_pms,
+            rng=rng,
+            residual=ctx.residual,
+            participation=participation,
+        )
+        out = {
+            "acc": ctx.accuracy,
+            "selected": state.select,
+            "tx_params": tx,
+            "pms": state.pms,
+            "wire_per_client": ctx.wire_paid,
+        }
+        return new_state, out
+
+    return round_step

@@ -19,6 +19,14 @@ params) — the paper's communication-reduction claim, measurable directly as
 HLO collective bytes in the dry-run. ``shared_periods`` is static per
 compile (the server re-jits when DLD changes the cut; compiles are cached
 per value).
+
+The error-feedback all-reduce path (``make_quantized_fl_round_step(...,
+error_feedback=True)``) shares its wire-format definition with the
+single-host engine — both compose the same ``repro.fl.phases.TransmitPhase``
+over a ``repro.comm`` codec — and carries per-silo EF residuals across
+periods (the engine's ``ef_step`` applied along the silo axis). The plain
+quantized paths (``agg='int8'`` / the env lever below) still use the local
+``_quantize_silo_contributions`` round-to-nearest emulation.
 """
 
 from __future__ import annotations
@@ -57,6 +65,17 @@ def _quantize_silo_contributions(x: jnp.ndarray, bits: int) -> jnp.ndarray:
         return dequantize(q, scales)
 
     return jax.vmap(per_silo)(x.reshape(s, -1)).reshape(x.shape)
+
+
+def _quantize_phase(bits: int, stochastic: bool = False):
+    """The cross-silo wire format as the SAME phase object the single-host
+    engine composes (repro.fl.phases.TransmitPhase) — one pipeline
+    definition for both runtimes. Deterministic rounding (the default)
+    keeps the all-reduce bitwise reproducible."""
+    from repro.comm import QuantizeCodec
+    from repro.fl.phases import TransmitPhase
+
+    return TransmitPhase(QuantizeCodec(bits=bits, stochastic=stochastic))
 
 
 def _agg_over_silo(x: jnp.ndarray, weights: jnp.ndarray, agg: str | None = None) -> jnp.ndarray:
@@ -106,6 +125,72 @@ def partial_aggregate_silo_params(silo_params, weights: jnp.ndarray, shared_peri
     return out
 
 
+def partial_aggregate_silo_params_ef(
+    silo_params, residual, weights: jnp.ndarray, shared_periods: int,
+    bits: int = 8, rng: jax.Array | None = None, stochastic: bool = False,
+):
+    """EF variant of ``partial_aggregate_silo_params`` (ROADMAP cross-silo
+    item): each silo's shared-leaf contribution is encoded through the
+    quantize codec with a per-silo error-feedback residual carried across
+    periods (the engine's ``ef_step``, via the shared TransmitPhase), so the
+    quantization error dithers out of the running average instead of
+    accumulating as bias.
+
+    ``residual`` mirrors the structure of ``silo_params`` (zeros initially —
+    see ``init_ef_residual``); unshared leaves/periods pass through with
+    their residuals untouched. Returns ``(aggregated, new_residual)``.
+    ``rng`` only matters with ``stochastic=True`` (stochastic rounding);
+    the deterministic default is bitwise reproducible.
+    """
+    phase = _quantize_phase(bits, stochastic=stochastic)
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    leaf_counter = [0]
+
+    def agg_ef(x, e):
+        key = jax.random.fold_in(rng, leaf_counter[0])
+        leaf_counter[0] += 1
+        dec, new_e = phase.silo_transmit(x, e, key)
+        return _agg_over_silo(dec, weights, agg="fp32"), new_e
+
+    def tree_map_pairs(fn, tree, res):
+        """tree.map for a two-output leaf fn: returns (tree_a, tree_b)."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        rleaves = jax.tree_util.tree_leaves(res)
+        pairs = [fn(l, r) for l, r in zip(leaves, rleaves)]
+        return (
+            jax.tree_util.tree_unflatten(treedef, [p[0] for p in pairs]),
+            jax.tree_util.tree_unflatten(treedef, [p[1] for p in pairs]),
+        )
+
+    out, new_res = dict(silo_params), dict(residual)
+    for key in ("embed", "vision_proj"):
+        if key in out:
+            out[key], new_res[key] = agg_ef(out[key], residual[key])
+    for key in ("prologue", "encoder"):
+        if key in out:
+            out[key], new_res[key] = tree_map_pairs(agg_ef, out[key], residual[key])
+    if "stack" in out and shared_periods > 0:
+
+        def agg_stack_ef(x, e):  # (silo, n_periods, ...)
+            sp = min(shared_periods, x.shape[1])
+            shared, new_e_sl = agg_ef(x[:, :sp], e[:, :sp])
+            return (
+                jnp.concatenate([shared, x[:, sp:]], axis=1),
+                e.at[:, :sp].set(new_e_sl),
+            )
+
+        out["stack"], new_res["stack"] = tree_map_pairs(
+            agg_stack_ef, out["stack"], residual["stack"]
+        )
+
+    return out, new_res
+
+
+def init_ef_residual(silo_params):
+    """Zero error-feedback residuals matching the stacked silo params."""
+    return jax.tree.map(jnp.zeros_like, silo_params)
+
+
 def make_fl_round_step(cfg, bundle, optimizer, shared_periods: int, window: int = 0, agg: str | None = None):
     base_step = bundle.make_train_step(optimizer, window=window)
 
@@ -119,13 +204,35 @@ def make_fl_round_step(cfg, bundle, optimizer, shared_periods: int, window: int 
     return fl_round
 
 
-def make_quantized_fl_round_step(cfg, bundle, optimizer, shared_periods: int, window: int = 0, bits: int = 8):
+def make_quantized_fl_round_step(
+    cfg, bundle, optimizer, shared_periods: int, window: int = 0, bits: int = 8,
+    error_feedback: bool = False,
+):
     """Quantized-allreduce variant of make_fl_round_step: shared layers
     cross the silo axis as int8/int4 codes + scales instead of f32 (the
-    comm subsystem's cross-silo counterpart of FLConfig.codec='int8')."""
+    comm subsystem's cross-silo counterpart of FLConfig.codec='int8').
+
+    With ``error_feedback=True`` the round step additionally threads
+    per-silo EF residuals across periods — signature becomes
+    ``fl_round(silo_params, silo_opt, residual, batch, weights) ->
+    (new_params, new_opt, new_residual, loss)`` with ``residual`` seeded by
+    ``init_ef_residual``.
+    """
     if bits not in (4, 8):
         raise ValueError(f"cross-silo quantized all-reduce supports bits in (4, 8), got {bits}")
-    return make_fl_round_step(cfg, bundle, optimizer, shared_periods, window=window, agg=f"int{bits}")
+    if not error_feedback:
+        return make_fl_round_step(cfg, bundle, optimizer, shared_periods, window=window, agg=f"int{bits}")
+
+    base_step = bundle.make_train_step(optimizer, window=window)
+
+    def fl_round(silo_params, silo_opt, residual, batch, weights):
+        new_p, new_o, losses = jax.vmap(base_step)(silo_params, silo_opt, batch)
+        new_p, new_res = partial_aggregate_silo_params_ef(
+            new_p, residual, weights, shared_periods, bits=bits
+        )
+        return new_p, new_o, new_res, jnp.mean(losses)
+
+    return fl_round
 
 
 # ---------------------------------------------------------------------------

@@ -1,16 +1,24 @@
-"""Federated simulation engine — the paper's Algorithms 1 & 2 as one jitted
-array program.
+"""Federated simulation engine — the paper's Algorithms 1 & 2 driven
+through the composable round pipeline (repro.fl.api / repro.fl.phases).
 
-Clients live on a stacked leading axis (C, ...) of every parameter leaf;
-local training is a vmap of (epochs x batches) SGD; selection, decay, DLD,
-partial aggregation and personalization all run inside the round step. A
-Python loop over rounds (server loop, Algorithm 1) collects history.
+Clients live on a stacked leading axis (C, ...) of every parameter leaf. A
+round is the phase sequence
+
+  Personalizer -> LocalTrainer -> TransmitPhase (wire codec + EF)
+               -> Aggregator -> Evaluator -> SelectorPhase -> LayerPolicy
+
+composed by ``repro.fl.api.build_round_step`` into one jitted array
+program; this module owns the Python server loop (Algorithm 1) that drives
+it and collects host-side history. ``make_round_step`` builds the default
+pipeline from an ``FLConfig``; pass ``pipeline=`` to either entry point to
+swap phases (see api.py's "composing a custom round").
 
 Uplink traffic goes through a wire codec (repro.comm): each selected
 client's shared delta is encode/decode round-tripped (with per-client
 error-feedback residuals carried in the round state for lossy codecs), and
 ``FLHistory.tx_bytes_cum`` / ``round_time`` account codec-reported wire
-bytes rather than the seed's analytic float32 parameter count.
+bytes. The codec phase also feeds per-client wire bytes and compressed
+update norms to cost-aware selection (grad-importance, oort-wire).
 
 Variant map (paper §4.4 naming):
   ND    — strategy selection, NO personalization, NO decay, full model shared
@@ -23,60 +31,26 @@ share all layers, and their own selection strategy.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import ef_step, make_codec, tree_wire_bytes
-from repro.core import (
-    fedavg_aggregate,
-    masked_partial_aggregate,
-    compose_model,
-    personalize_ft,
-    dynamic_layer_definition,
-    layer_share_mask,
-    get_strategy,
-)
-from repro.core.aggregation import transmitted_parameters
 from repro.core.layersharing import layer_param_sizes
 from repro.core.metrics import BYTES_PER_PARAM, CommModel
-from repro.core.selection import ClientMetrics
 from repro.data.synthetic import FederatedDataset
-from repro.models.mlp import init_mlp, mlp_apply, mlp_loss, mlp_accuracy
+from repro.fl.api import (
+    FLConfig,
+    RoundPipeline,
+    RoundState,
+    build_env,
+    build_round_step,
+    pipeline_from_config,
+)
+from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
 
-
-@dataclasses.dataclass(frozen=True)
-class FLConfig:
-    strategy: str = "acsp-fl"          # fedavg | poc | oort | deev | acsp-fl
-    personalization: str = "dld"       # none | ft | pms | dld
-    pms_layers: int = 2                # used when personalization == 'pms'
-    decay: float = 0.005               # phi decay (Eq. 6); 0 disables
-    fraction: float = 0.5              # k/C for poc/oort; 1.0 for fedavg
-    rounds: int = 100
-    epochs: int = 1                    # tau — local epochs
-    batch_size: int = 32
-    lr: float = 0.1
-    momentum: float = 0.0
-    seed: int = 0
-    codec: str = "float32"             # wire codec spec (repro.comm.make_codec):
-                                       # float32 | int8 | int4 | topk | topk+int8 ...
-    codec_bits: int = 8                # bits for the generic 'quantize' atom
-    topk_fraction: float = 0.1         # k/n for the 'topk' atom
-
-    def strategy_obj(self):
-        if self.strategy in ("deev", "acsp-fl"):
-            return get_strategy(self.strategy, decay=self.decay)
-        if not 0.0 < self.fraction <= 1.0:
-            raise ValueError(
-                f"fraction must be in (0, 1] for strategy {self.strategy!r}, got {self.fraction!r}"
-            )
-        return get_strategy(self.strategy, fraction=self.fraction)
-
-    def codec_obj(self):
-        return make_codec(self.codec, bits=self.codec_bits, topk_fraction=self.topk_fraction)
+__all__ = ["FLConfig", "FLHistory", "make_round_step", "run_federated"]
 
 
 class FLHistory(NamedTuple):
@@ -92,210 +66,32 @@ class FLHistory(NamedTuple):
     tx_wire_bytes: np.ndarray      # (T,) per-round uplink wire bytes (codec)
 
 
-class _RoundState(NamedTuple):
-    global_params: Any            # layered list, leaves (...)
-    local_params: Any             # layered list, leaves (C, ...)
-    accuracy: jnp.ndarray         # (C,)
-    select: jnp.ndarray           # (C,) bool
-    pms: jnp.ndarray              # (C,) int32 — layers each client will share
-    rng: jax.Array
-    residual: Any = None          # error-feedback residuals (lossy codec only):
-                                  # layered list, leaves (C, ...), same as local
-
-
-def _batched(x, y, m, batch_size: int):
-    """Trim to a whole number of batches and reshape to (nb, B, ...)."""
-    n = x.shape[0]
-    nb = max(1, n // batch_size)
-    take = nb * batch_size
-    if take > n:  # dataset smaller than one batch: single ragged batch
-        nb, take, batch_size = 1, n, n
-    return (
-        x[:take].reshape(nb, batch_size, *x.shape[1:]),
-        y[:take].reshape(nb, batch_size),
-        m[:take].reshape(nb, batch_size),
-    )
-
-
 def make_round_step(
     data: FederatedDataset,
     cfg: FLConfig,
-    apply_fn: Callable = mlp_apply,
     loss_fn: Callable = mlp_loss,
     acc_fn: Callable = mlp_accuracy,
+    pipeline: RoundPipeline | None = None,
 ):
-    """Build the jitted round step closure over static data/config."""
-    strategy = cfg.strategy_obj()
-    codec = cfg.codec_obj()
-    n_layers_holder = {}
-
-    x_tr = jnp.asarray(data.x_train)
-    y_tr = jnp.asarray(data.y_train)
-    m_tr = jnp.asarray(data.m_train)
-    x_te = jnp.asarray(data.x_test)
-    y_te = jnp.asarray(data.y_test)
-    m_te = jnp.asarray(data.m_test)
-    n_samples = jnp.asarray(data.n_samples, jnp.float32)
-    # Oort's systemic term: per-client delay, fixed per experiment
-    delay = jax.random.uniform(jax.random.PRNGKey(cfg.seed + 99), (data.n_clients,), minval=0.5, maxval=2.0)
-
-    def local_fit(params, x, y, m, rng):
-        """Algorithm 2 LocalTrain: tau epochs of minibatch SGD."""
-        xb, yb, mb = _batched(x, y, m, cfg.batch_size)
-
-        def epoch(params, _):
-            def step(params, batch):
-                bx, by, bm = batch
-                grads = jax.grad(loss_fn)(params, bx, by, bm)
-                new = jax.tree.map(lambda p, g: p - cfg.lr * g, params, grads)
-                return new, ()
-
-            params, _ = jax.lax.scan(step, params, (xb, yb, mb))
-            return params, ()
-
-        params, _ = jax.lax.scan(epoch, params, None, length=cfg.epochs)
-        return params
-
-    def round_step(state: _RoundState, t: jnp.ndarray):
-        g, loc = state.global_params, state.local_params
-        n_layers = len(g)
-        n_layers_holder["n"] = n_layers
-        share = layer_share_mask(n_layers, state.pms)  # (C, L)
-
-        # lossless codecs draw no randomness — keep the seed's exact split
-        # so default (float32) trajectories are bit-identical to the seed
-        if codec.lossy:
-            rng, r_fit, r_sel, r_codec = jax.random.split(state.rng, 4)
-        else:
-            rng, r_fit, r_sel = jax.random.split(state.rng, 3)
-            r_codec = None
-
-        # --- personalization phase: build each client's training model ---
-        if cfg.personalization == "ft":
-            loss_loc = jax.vmap(lambda p, x, y, m: loss_fn(p, x, y, m))(loc, x_te, y_te, m_te)
-            loss_glob = jax.vmap(lambda x, y, m: loss_fn(g, x, y, m))(x_te, y_te, m_te)
-            train_model = personalize_ft(loc, g, loss_loc, loss_glob)
-        elif cfg.personalization == "none":
-            train_model = jax.tree.map(
-                lambda gl: jnp.broadcast_to(gl, (data.n_clients,) + gl.shape), g
-            )
-        else:  # pms / dld — compose shared global layers with local ones
-            train_model = compose_model(g, loc, share)
-
-        # --- local training (all lanes compute; unselected discarded) ---
-        fit_rngs = jax.random.split(r_fit, data.n_clients)
-        trained = jax.vmap(local_fit)(train_model, x_tr, y_tr, m_tr, fit_rngs)
-
-        sel_f = state.select
-        new_local = jax.tree.map(
-            lambda new, old: jnp.where(
-                sel_f.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
-            ),
-            trained,
-            loc if cfg.personalization != "none" else train_model,
-        )
-
-        # --- wire codec: compress each client's shared delta (uplink) ---
-        # The server aggregates decode(encode(delta + residual)) instead of
-        # the raw trained params; per-client error-feedback residuals absorb
-        # what the codec dropped, but only for clients that actually
-        # transmitted the layer (selected AND sharing it) — personalized
-        # layers never hit the wire, so their residuals stay untouched.
-        if codec.lossy:
-            agg_src, new_residual = [], []
-            for j, (tr_j, g_j, res_j) in enumerate(zip(trained, g, state.residual)):
-                sent_j = state.select & share[:, j]                     # (C,)
-
-                def client_ef(tr_c, res_c, key, g_j=g_j):
-                    delta = jax.tree.map(lambda t, gl: t - gl, tr_c, g_j)
-                    dec, new_r = ef_step(codec, delta, res_c, key)
-                    recon = jax.tree.map(lambda gl, d: gl + d, g_j, dec)
-                    return recon, new_r
-
-                keys = jax.random.split(jax.random.fold_in(r_codec, j), data.n_clients)
-                recon_j, new_r_j = jax.vmap(client_ef)(tr_j, res_j, keys)
-                agg_src.append(recon_j)
-                new_residual.append(
-                    jax.tree.map(
-                        lambda n, o: jnp.where(
-                            sent_j.reshape((-1,) + (1,) * (n.ndim - 1)), n, o
-                        ),
-                        new_r_j,
-                        res_j,
-                    )
-                )
-        else:  # lossless: the wire carries the exact update, no residual
-            agg_src, new_residual = trained, state.residual
-
-        # --- aggregation of shared pieces (Eq. 1, masked/partial) ---
-        if cfg.personalization in ("pms", "dld"):
-            new_global = masked_partial_aggregate(agg_src, g, state.select, n_samples, share)
-        else:
-            new_global = fedavg_aggregate(agg_src, state.select, n_samples)
-
-        # --- evaluation phase: distributed accuracy on composed models ---
-        if cfg.personalization in ("pms", "dld"):
-            eval_model = compose_model(new_global, new_local, share)
-        elif cfg.personalization == "ft":
-            loss_loc2 = jax.vmap(lambda p, x, y, m: loss_fn(p, x, y, m))(new_local, x_te, y_te, m_te)
-            loss_glob2 = jax.vmap(lambda x, y, m: loss_fn(new_global, x, y, m))(x_te, y_te, m_te)
-            eval_model = personalize_ft(new_local, new_global, loss_loc2, loss_glob2)
-        else:
-            eval_model = jax.tree.map(
-                lambda gl: jnp.broadcast_to(gl, (data.n_clients,) + gl.shape), new_global
-            )
-        acc = jax.vmap(lambda p, x, y, m: acc_fn(p, x, y, m))(eval_model, x_te, y_te, m_te)
-        loss_now = jax.vmap(lambda p, x, y, m: loss_fn(p, x, y, m))(eval_model, x_te, y_te, m_te)
-
-        # --- communication accounting for THIS round (uplink) ---
-        sizes = layer_param_sizes(g)
-        tx = transmitted_parameters(state.select, share, sizes)
-        # codec-reported wire bytes: static per-layer cost x (select & share)
-        layer_wire = jnp.asarray(
-            [tree_wire_bytes(codec, layer) for layer in g], jnp.float32
-        )  # (L,) — bytes one client pays to ship each layer through the codec
-        wire_per_client = (
-            share.astype(jnp.float32) * state.select.astype(jnp.float32)[:, None]
-        ) @ layer_wire  # (C,)
-
-        # --- client selection for next round (Algorithm 1 l.12) ---
-        metrics = ClientMetrics(accuracy=acc, loss=loss_now, n_samples=n_samples, delay=delay)
-        next_select = strategy.select(metrics, t, r_sel)
-
-        # --- next round's PMS (layers to share) ---
-        if cfg.personalization == "dld":
-            next_pms = dynamic_layer_definition(acc, n_layers)
-        elif cfg.personalization == "pms":
-            next_pms = jnp.full((data.n_clients,), cfg.pms_layers, jnp.int32)
-        else:
-            next_pms = jnp.full((data.n_clients,), n_layers, jnp.int32)
-
-        new_state = _RoundState(
-            new_global, new_local, acc, next_select, next_pms, rng, new_residual
-        )
-        out = {
-            "acc": acc,
-            "selected": state.select,
-            "tx_params": tx,
-            "pms": state.pms,
-            "wire_per_client": wire_per_client,
-        }
-        return new_state, out
-
-    return round_step
+    """Build the jitted round step: the cfg's default pipeline (or a custom
+    one) composed over the static data/config environment."""
+    pipeline = pipeline or pipeline_from_config(cfg)
+    env = build_env(data, cfg.seed, loss_fn=loss_fn, acc_fn=acc_fn)
+    return build_round_step(env, pipeline)
 
 
 def run_federated(
     data: FederatedDataset,
     cfg: FLConfig,
     init_fn: Callable | None = None,
-    apply_fn: Callable = mlp_apply,
     loss_fn: Callable = mlp_loss,
     acc_fn: Callable = mlp_accuracy,
     comm: CommModel | None = None,
     progress: bool = False,
+    pipeline: RoundPipeline | None = None,
 ) -> FLHistory:
     """Run ``cfg.rounds`` federated rounds; returns host-side history."""
+    pipeline = pipeline or pipeline_from_config(cfg)
     rng = jax.random.PRNGKey(cfg.seed)
     r_init, r_loop = jax.random.split(rng)
     if init_fn is None:
@@ -307,18 +103,19 @@ def run_federated(
 
     # Algorithm 1: round 1 selects ALL clients; the shared piece is cut from
     # the first round in PMS mode (DLD starts full: A=0 <= 0.25 -> all layers)
-    pms0 = cfg.pms_layers if cfg.personalization == "pms" else n_layers
-    codec = cfg.codec_obj()
-    state = _RoundState(
+    pms0 = cfg.pms_layers if cfg.personalization.mode == "pms" else n_layers
+    state = RoundState(
         global_params=g0,
         local_params=loc0,
         accuracy=jnp.zeros((data.n_clients,)),
         select=jnp.ones((data.n_clients,), bool),
         pms=jnp.full((data.n_clients,), pms0, jnp.int32),
         rng=r_loop,
-        residual=jax.tree.map(jnp.zeros_like, loc0) if codec.lossy else None,
+        residual=jax.tree.map(jnp.zeros_like, loc0) if pipeline.transmit.lossy else None,
+        participation=jnp.zeros((data.n_clients,), jnp.int32),
     )
-    round_step = jax.jit(make_round_step(data, cfg, apply_fn, loss_fn, acc_fn))
+    env = build_env(data, cfg.seed, loss_fn=loss_fn, acc_fn=acc_fn)
+    round_step = jax.jit(build_round_step(env, pipeline))
 
     comm = comm or CommModel()
     sizes_np = None

@@ -7,7 +7,15 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ModelConfig
-from repro.fl.cross_silo import make_fl_round_step, partial_aggregate_silo_params
+from repro.fl.cross_silo import (
+    _agg_over_silo,
+    _quantize_phase,
+    init_ef_residual,
+    make_fl_round_step,
+    make_quantized_fl_round_step,
+    partial_aggregate_silo_params,
+    partial_aggregate_silo_params_ef,
+)
 from repro.models.api import get_model, make_batch_specs
 from repro.optim import adamw
 
@@ -73,6 +81,62 @@ def test_head_personalized(round_out):
     _, _, new_p, _ = round_out
     head = np.asarray(new_p["head"], np.float32)
     assert not np.allclose(head[0], head[1])
+
+
+def test_ef_aggregate_shared_identical_and_residual_scoped():
+    """EF variant: shared leaves still identical across silos; residuals are
+    nonzero only where something hit the quantized wire."""
+    bundle = get_model(CFG)
+    base = bundle.init(jax.random.PRNGKey(0))
+    silo = jax.tree.map(lambda l: jnp.broadcast_to(l, (N_SILOS,) + l.shape).copy(), base)
+    w = jnp.asarray([1.0, 2.0, 1.0])
+    agg, res = partial_aggregate_silo_params_ef(silo, init_ef_residual(silo), w, shared_periods=2)
+    emb = np.asarray(agg["embed"], np.float32)
+    for i in range(1, N_SILOS):
+        np.testing.assert_array_equal(emb[i], emb[0])
+    # residual lives on the shared prefix, never on the personalized head
+    assert float(jnp.abs(res["embed"]).max()) > 0.0
+    assert float(jnp.abs(res["head"]).max()) == 0.0
+
+
+def test_ef_residual_cancels_quantization_bias_across_periods():
+    """Across many periods, the EF-quantized running average converges to the
+    fp32 mean while plain quantization keeps its per-period bias."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 8, 33)) * 0.1
+    w = jnp.ones((4,))
+    ref = np.asarray(_agg_over_silo(x, w, agg="fp32"))[0]
+    phase = _quantize_phase(8)
+    e = jnp.zeros_like(x)
+    acc_ef = np.zeros_like(ref)
+    periods = 40
+    for t in range(periods):
+        dec, e = phase.silo_transmit(x, e, jax.random.fold_in(jax.random.PRNGKey(0), t))
+        acc_ef += np.asarray(_agg_over_silo(dec, w, agg="fp32"))[0]
+    err_ef = np.abs(acc_ef / periods - ref).max()
+    err_plain = np.abs(np.asarray(_agg_over_silo(x, w, agg="int8"))[0] - ref).max()
+    assert err_ef < 0.2 * err_plain
+    # residual stays bounded by one quantization step per element
+    step = np.abs(np.asarray(x)).max() / 127.0
+    assert float(jnp.abs(e).max()) <= 2 * step
+
+
+def test_ef_quantized_round_step_runs():
+    bundle = get_model(CFG)
+    base = bundle.init(jax.random.PRNGKey(0))
+    silo = jax.tree.map(lambda l: jnp.broadcast_to(l, (N_SILOS,) + l.shape).copy(), base)
+    opt = adamw(1e-2)
+    silo_opt = jax.vmap(opt.init)(silo)
+    step = jax.jit(make_quantized_fl_round_step(
+        CFG, bundle, opt, shared_periods=2, bits=8, error_feedback=True))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (N_SILOS, 2, 33), 0, 256)
+    batch = {"tokens": toks[:, :, :-1], "labels": toks[:, :, 1:]}
+    w = jnp.asarray([1.0, 2.0, 1.0])
+    new_p, _, new_res, loss = step(silo, silo_opt, init_ef_residual(silo), batch, w)
+    assert np.isfinite(float(loss))
+    emb = np.asarray(new_p["embed"], np.float32)
+    for i in range(1, N_SILOS):
+        np.testing.assert_array_equal(emb[i], emb[0])
+    assert jax.tree_util.tree_structure(new_res) == jax.tree_util.tree_structure(silo)
 
 
 def test_zero_weight_silo_excluded():

@@ -1,0 +1,317 @@
+"""Round-pipeline API: nested/flat FLConfig, phase registries, bit-identity
+regression against the pre-refactor engine, and the cost-aware strategies
+end-to-end."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (
+    CodecConfig,
+    PersonalizationConfig,
+    SelectionConfig,
+    TrainConfig,
+)
+from repro.core.selection import (
+    ClientMetrics,
+    ClientObservations,
+    GradImportance,
+    OortWire,
+    get_strategy,
+)
+from repro.data import make_federated_classification
+from repro.fl import FLConfig, api, phases, run_federated
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    return make_federated_classification(
+        n_clients=8, n_classes=4, n_features=20,
+        samples_per_client_range=(60, 90), dirichlet_alpha=50.0,
+        client_shift=0.05, class_sep=5.0, seed=1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# FLConfig: flat-kwargs backward compat + nested construction + validation
+# ---------------------------------------------------------------------------
+
+
+def test_flat_kwargs_backcompat():
+    cfg = FLConfig(strategy="oort", personalization="pms", pms_layers=3,
+                   fraction=0.25, rounds=7, epochs=2, codec="int8", seed=5)
+    # nested form populated
+    assert cfg.selection == SelectionConfig(strategy="oort", fraction=0.25)
+    assert cfg.personalization == PersonalizationConfig(mode="pms", pms_layers=3)
+    assert cfg.codec == CodecConfig(spec="int8")
+    assert cfg.train == TrainConfig(rounds=7, epochs=2, seed=5)
+    # seed-era flat reads still work
+    assert cfg.strategy == "oort" and cfg.fraction == 0.25
+    assert cfg.pms_layers == 3 and cfg.rounds == 7 and cfg.epochs == 2
+    assert cfg.codec_bits == 8 and cfg.seed == 5
+    assert cfg.codec_obj().name == "int8"
+
+
+def test_nested_construction():
+    cfg = FLConfig(
+        selection=SelectionConfig(strategy="deev", decay=0.02),
+        personalization=PersonalizationConfig(mode="none"),
+        codec=CodecConfig(spec="topk", topk_fraction=0.2),
+        train=TrainConfig(rounds=3),
+    )
+    assert cfg.decay == 0.02 and cfg.rounds == 3
+    assert cfg.strategy_obj().decay == 0.02
+    assert cfg.codec_obj().name == "topk0.2"
+
+
+def test_defaults_match_seed():
+    cfg = FLConfig()
+    assert cfg.strategy == "acsp-fl" and cfg.personalization.mode == "dld"
+    assert cfg.codec.spec == "float32" and cfg.rounds == 100
+
+
+def test_mixed_nested_and_flat_raises():
+    with pytest.raises(ValueError, match="not both"):
+        FLConfig(train=TrainConfig(rounds=3), epochs=2)
+
+
+def test_unknown_kwarg_raises():
+    with pytest.raises(TypeError, match="unknown FLConfig kwargs"):
+        FLConfig(stratgy="oort")
+
+
+def test_wrong_group_type_raises():
+    with pytest.raises(TypeError, match="TrainConfig"):
+        FLConfig(train=SelectionConfig())
+
+
+def test_nested_validation():
+    with pytest.raises(ValueError, match="personalization mode"):
+        PersonalizationConfig(mode="bogus")
+    with pytest.raises(ValueError, match="pms_layers"):
+        PersonalizationConfig(mode="pms", pms_layers=0)
+    with pytest.raises(ValueError, match="rounds"):
+        TrainConfig(rounds=0)
+    with pytest.raises(ValueError, match="lr"):
+        TrainConfig(lr=0.0)
+    with pytest.raises(ValueError, match="topk_fraction"):
+        CodecConfig(topk_fraction=0.0)
+    with pytest.raises(ValueError, match="decay"):
+        SelectionConfig(decay=-0.1)
+
+
+def test_fraction_still_validated_at_strategy_obj():
+    cfg = FLConfig(strategy="fedavg", fraction=0.0)  # constructs fine
+    with pytest.raises(ValueError, match="fraction"):
+        cfg.strategy_obj()
+
+
+def test_replace_on_nested_groups():
+    cfg = FLConfig(rounds=10)
+    cfg2 = dataclasses.replace(cfg, train=dataclasses.replace(cfg.train, rounds=3))
+    assert cfg2.rounds == 3 and cfg2.strategy == cfg.strategy
+
+
+# ---------------------------------------------------------------------------
+# registries: unknown names raise KeyError listing what exists
+# ---------------------------------------------------------------------------
+
+
+def test_phase_registry_unknown_kind():
+    with pytest.raises(KeyError, match="aggregator"):
+        phases.get_phase("aggregatr", "fedavg")
+
+
+def test_phase_registry_unknown_name_lists_keys():
+    with pytest.raises(KeyError, match="masked-partial"):
+        phases.get_phase("aggregator", "nope")
+    with pytest.raises(KeyError, match="compose"):
+        phases.get_phase("personalizer", "nope")
+    with pytest.raises(KeyError, match="dld"):
+        phases.get_phase("layer-policy", "nope")
+
+
+def test_strategy_registry_lists_new_strategies():
+    with pytest.raises(KeyError, match="grad-importance"):
+        get_strategy("nope")
+    assert isinstance(get_strategy("grad-importance", fraction=0.3), GradImportance)
+    assert isinstance(get_strategy("oort-wire"), OortWire)
+
+
+def test_register_phase_roundtrip():
+    class MyPolicy(phases.FullShare):
+        pass
+
+    phases.register_phase("layer-policy", "my-policy", MyPolicy)
+    try:
+        assert isinstance(phases.get_phase("layer-policy", "my-policy"), MyPolicy)
+    finally:
+        del phases._PHASE_REGISTRY["layer-policy"]["my-policy"]
+
+
+# ---------------------------------------------------------------------------
+# observations: widened NamedTuple stays backward compatible
+# ---------------------------------------------------------------------------
+
+
+def test_observations_alias_and_defaults():
+    assert ClientMetrics is ClientObservations
+    m = ClientMetrics(jnp.zeros(4), jnp.zeros(4), jnp.ones(4), jnp.ones(4))
+    assert m.wire_bytes is None and m.update_norm is None
+    assert m.participation_count is None
+
+
+def test_cost_aware_strategies_require_signals():
+    m = ClientMetrics(jnp.zeros(4), jnp.zeros(4), jnp.ones(4), jnp.ones(4))
+    import jax
+
+    with pytest.raises(ValueError, match="update_norm"):
+        GradImportance().select(m, jnp.asarray(0), jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="wire_bytes"):
+        OortWire().select(m, jnp.asarray(0), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# bit-identity regression: default pipeline vs pre-refactor trajectories
+# ---------------------------------------------------------------------------
+
+# Golden 5-round trajectories captured from the pre-refactor monolithic
+# make_round_step (commit 6e94d37) on the small_ds fixture, epochs=1.
+# accuracy_mean is stored as raw float32 little-endian hex — equality is
+# exact, not approximate.
+_GOLDEN = {
+    "acsp-fl+dld+float32": dict(
+        cfg=dict(),
+        acc_hex="9022033f6842293f97df533f117e613f428a6e3f",
+        selected=["11111111", "11110100", "10001100", "01000101", "00111100"],
+    ),
+    "fedavg+none+float32": dict(
+        cfg=dict(strategy="fedavg", personalization="none", fraction=1.0),
+        acc_hex="9022033ff082713f38cb733f38cb733f38cb733f",
+        selected=["11111111"] * 5,
+    ),
+    "oort+ft+float32": dict(
+        cfg=dict(strategy="oort", personalization="ft", fraction=0.5),
+        acc_hex="dab4073f08bf6c3f38cb6d3f38cb753fd264773f",
+        selected=["11111111", "10010110", "10010101", "01010101", "10010101"],
+    ),
+    "acsp-fl+dld+int8": dict(
+        cfg=dict(codec="int8"),
+        acc_hex="9022033f6842293f97df533f117e613f428a6e3f",
+        selected=["11111111", "11110100", "10001100", "01000101", "00111100"],
+    ),
+}
+
+
+@pytest.mark.parametrize("name", sorted(_GOLDEN))
+def test_bit_identical_to_prerefactor_engine(small_ds, name):
+    gold = _GOLDEN[name]
+    h = run_federated(small_ds, FLConfig(rounds=5, epochs=1, **gold["cfg"]))
+    got_acc = np.asarray(h.accuracy_mean, np.float32)
+    want_acc = np.frombuffer(bytes.fromhex(gold["acc_hex"]), np.dtype("<f4"))
+    np.testing.assert_array_equal(got_acc, want_acc)
+    got_sel = ["".join("1" if b else "0" for b in row) for row in np.asarray(h.selected)]
+    assert got_sel == gold["selected"]
+
+
+# ---------------------------------------------------------------------------
+# cost-aware strategies end-to-end through run_federated
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["grad-importance", "oort-wire"])
+def test_cost_aware_strategies_run_end_to_end(small_ds, strategy):
+    h = run_federated(
+        small_ds,
+        FLConfig(strategy=strategy, personalization="dld", fraction=0.5,
+                 rounds=5, epochs=1, codec="int8"),
+    )
+    assert np.isfinite(h.accuracy_mean).all()
+    assert h.accuracy_mean[-1] > h.accuracy_mean[0]
+    # round 0 selects everyone (Algorithm 1), then the fraction applies
+    assert h.selected[0].sum() == small_ds.n_clients
+    assert (h.selected[1:].sum(axis=1) == round(0.5 * small_ds.n_clients)).all()
+    # wire accounting flows: int8 pays < 1/3.5 of the float32 analytic bytes
+    assert h.tx_wire_bytes.sum() < 4.0 * h.tx_params.sum() / 3.5
+
+
+def test_grad_importance_prefers_cheap_informative_clients():
+    """Unit-level: utility = update_norm / wire_bytes ranks as documented."""
+    import jax
+
+    m = ClientObservations(
+        accuracy=jnp.zeros(4), loss=jnp.zeros(4),
+        n_samples=jnp.ones(4), delay=jnp.ones(4),
+        wire_bytes=jnp.asarray([100.0, 100.0, 1000.0, 1000.0]),
+        update_norm=jnp.asarray([5.0, 1.0, 5.0, 50.1]),
+    )
+    mask = np.asarray(GradImportance(fraction=0.5).select(m, jnp.asarray(0), jax.random.PRNGKey(0)))
+    # utilities: .05, .01, .005, .0501 -> clients 3 and 0 win
+    assert mask.tolist() == [True, False, False, True]
+
+
+def test_oort_wire_penalizes_costly_clients():
+    import jax
+
+    c = 8
+    m = ClientObservations(
+        accuracy=jnp.zeros(c), loss=jnp.ones(c),
+        n_samples=jnp.ones(c), delay=jnp.ones(c),
+        wire_bytes=jnp.asarray([1.0] * 4 + [1000.0] * 4),
+    )
+    sel = np.zeros(c)
+    for s in range(5):
+        mask = OortWire(fraction=0.5, epsilon=0.0).select(m, jnp.asarray(0), jax.random.PRNGKey(s))
+        sel += np.asarray(mask)
+    assert sel[:4].sum() > sel[4:].sum()
+
+
+# ---------------------------------------------------------------------------
+# custom pipeline composition
+# ---------------------------------------------------------------------------
+
+
+def test_custom_pipeline_swaps_selector(small_ds):
+    cfg = FLConfig(rounds=3, epochs=1)
+    pipe = api.pipeline_from_config(cfg)
+    pipe = dataclasses.replace(
+        pipe, selector=phases.SelectorPhase(get_strategy("fedavg", fraction=1.0))
+    )
+    h = run_federated(small_ds, cfg, pipeline=pipe)
+    # the swapped selector keeps everyone in, unlike acsp-fl's decay filter
+    assert (h.selected.sum(axis=1) == small_ds.n_clients).all()
+
+
+def test_hand_built_round_state_defaults_work(small_ds):
+    """The exported RoundState mirrors the old _RoundState shape: residual
+    and participation may be left as their None defaults."""
+    import jax
+    from repro.models.mlp import init_mlp
+
+    cfg = FLConfig(rounds=2, epochs=1)
+    step = jax.jit(api.build_round_step(api.build_env(small_ds, 0), api.pipeline_from_config(cfg)))
+    g0 = init_mlp(jax.random.PRNGKey(0), small_ds.n_features, small_ds.n_classes)
+    loc0 = jax.tree.map(lambda l: jnp.broadcast_to(l, (small_ds.n_clients,) + l.shape), g0)
+    state = api.RoundState(
+        global_params=g0, local_params=loc0,
+        accuracy=jnp.zeros((small_ds.n_clients,)),
+        select=jnp.ones((small_ds.n_clients,), bool),
+        pms=jnp.full((small_ds.n_clients,), len(g0), jnp.int32),
+        rng=jax.random.PRNGKey(1),
+    )
+    new_state, out = step(state, jnp.asarray(0))
+    assert np.isfinite(np.asarray(out["acc"])).all()
+    assert np.asarray(new_state.participation).tolist() == [1] * small_ds.n_clients
+
+
+def test_pipeline_from_config_uses_registries():
+    pipe = api.pipeline_from_config(FLConfig(personalization="pms", pms_layers=2))
+    assert isinstance(pipe.personalizer, phases.ComposePersonalizer)
+    assert isinstance(pipe.layer_policy, phases.StaticPMS) and pipe.layer_policy.layers == 2
+    assert isinstance(pipe.aggregator, phases.MaskedPartialAggregator)
+    pipe = api.pipeline_from_config(FLConfig(personalization="none", strategy="fedavg", fraction=1.0))
+    assert isinstance(pipe.personalizer, phases.NoPersonalizer)
+    assert isinstance(pipe.layer_policy, phases.FullShare)
+    assert isinstance(pipe.aggregator, phases.FedAvgAggregator)
