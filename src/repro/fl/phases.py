@@ -1,0 +1,493 @@
+"""Swappable round phases — the building blocks of the FL round pipeline.
+
+A federated round is an explicit sequence of small frozen-dataclass phase
+components, each transforming a shared ``RoundContext``:
+
+  Personalizer -> LocalTrainer -> TransmitPhase (wire codec + EF)
+               -> Aggregator -> Evaluator -> SelectorPhase -> LayerPolicy
+
+``RoundContext`` is a NamedTuple (a pytree) carrying the per-round dynamic
+values: parameters, masks, rng lanes, and the per-client observations each
+phase deposits for the ones downstream. ``RoundEnv`` is the static
+per-experiment environment (data shards, sample counts, loss/acc fns)
+closed over by the jitted round step — phases read it, never mutate it.
+
+Every phase kind has a string registry mirroring ``get_strategy`` /
+``make_codec`` (``get_phase('aggregator', 'fedavg')``), so configs address
+phases by name and custom components drop in via ``register_phase``.
+``repro.fl.api`` composes phases into a ``RoundPipeline`` and builds the
+jitted round step; ``repro.fl.cross_silo`` reuses ``TransmitPhase`` for its
+quantized all-reduce so both runtimes share one wire-format definition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import Codec, ef_step, tree_wire_bytes
+from repro.core import (
+    compose_model,
+    dynamic_layer_definition,
+    fedavg_aggregate,
+    masked_partial_aggregate,
+    personalize_ft,
+)
+from repro.core.selection import ClientObservations, SelectionStrategy
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundEnv:
+    """Static per-experiment environment every phase can read.
+
+    Held by the round-step closure (not traced): data shards stacked on the
+    client axis, per-client sample counts, the analytic delay lane for
+    Oort's systemic term, and the model's loss/accuracy functions.
+    """
+
+    x_tr: jnp.ndarray
+    y_tr: jnp.ndarray
+    m_tr: jnp.ndarray
+    x_te: jnp.ndarray
+    y_te: jnp.ndarray
+    m_te: jnp.ndarray
+    n_samples: jnp.ndarray   # (C,) float — |d_i|
+    delay: jnp.ndarray       # (C,) float — analytic systemic delay (Oort)
+    n_clients: int
+    loss_fn: Callable
+    acc_fn: Callable
+
+
+class RoundContext(NamedTuple):
+    """Dynamic state threaded through the phase pipeline (a pytree).
+
+    The first block comes from the carried round state; later fields start
+    as ``None`` and are filled by the phase that owns them (``_replace``
+    returns an updated copy — phases never mutate in place).
+    """
+
+    t: Any = None                 # round index (traced scalar)
+    global_params: Any = None     # layered list, leaves (...)
+    local_params: Any = None      # layered list, leaves (C, ...)
+    select: Any = None            # (C,) bool — THIS round's cohort
+    pms: Any = None               # (C,) int32 — layers each client shares
+    share: Any = None             # (C, L) bool — layer_share_mask(pms)
+    residual: Any = None          # EF residuals (lossy codec), leaves (C, ...)
+    participation: Any = None     # (C,) int32 — selections so far (incl. now)
+    rng_fit: Any = None
+    rng_codec: Any = None
+    rng_sel: Any = None
+    # filled by phases, in pipeline order:
+    train_model: Any = None       # Personalizer
+    trained: Any = None           # LocalTrainer
+    new_local: Any = None         # engine (selected lanes keep training)
+    agg_src: Any = None           # TransmitPhase — what the server receives
+    wire_bytes: Any = None        # (C,) prospective uplink cost (codec)
+    wire_paid: Any = None         # (C,) wire bytes actually paid this round
+    update_norm: Any = None       # (C,) l2 norm of the compressed delta
+    new_global: Any = None        # Aggregator
+    eval_model: Any = None        # Personalizer.eval_model
+    accuracy: Any = None          # Evaluator
+    loss: Any = None              # Evaluator
+    next_select: Any = None       # SelectorPhase
+    next_pms: Any = None          # LayerPolicy
+
+
+def _stack_clients(params, n_clients: int):
+    """Broadcast an unstacked layered model to every client lane."""
+    return jax.tree.map(
+        lambda gl: jnp.broadcast_to(gl, (n_clients,) + gl.shape), params
+    )
+
+
+# ---------------------------------------------------------------------------
+# Personalizer — builds train-time and eval-time per-client models
+# ---------------------------------------------------------------------------
+
+
+class Personalizer:
+    """Decides what model each client trains and is evaluated on."""
+
+    def train_model(self, ctx: RoundContext, env: RoundEnv):
+        raise NotImplementedError
+
+    def eval_model(self, ctx: RoundContext, env: RoundEnv):
+        raise NotImplementedError
+
+    def local_fallback(self, ctx: RoundContext, env: RoundEnv):
+        """What unselected clients keep as their local model this round."""
+        return ctx.local_params
+
+
+@dataclasses.dataclass(frozen=True)
+class NoPersonalizer(Personalizer):
+    """Everyone trains and evaluates the broadcast global model."""
+
+    def train_model(self, ctx, env):
+        return _stack_clients(ctx.global_params, env.n_clients)
+
+    def eval_model(self, ctx, env):
+        return _stack_clients(ctx.new_global, env.n_clients)
+
+    def local_fallback(self, ctx, env):
+        return ctx.train_model
+
+
+@dataclasses.dataclass(frozen=True)
+class FTPersonalizer(Personalizer):
+    """Fine-tuning choice (Eq. 8): each client keeps whichever whole model
+    (local vs global) has lower loss on its test shard."""
+
+    def _pick(self, local, global_, env):
+        loss_loc = jax.vmap(lambda p, x, y, m: env.loss_fn(p, x, y, m))(
+            local, env.x_te, env.y_te, env.m_te
+        )
+        loss_glob = jax.vmap(lambda x, y, m: env.loss_fn(global_, x, y, m))(
+            env.x_te, env.y_te, env.m_te
+        )
+        return personalize_ft(local, global_, loss_loc, loss_glob)
+
+    def train_model(self, ctx, env):
+        return self._pick(ctx.local_params, ctx.global_params, env)
+
+    def eval_model(self, ctx, env):
+        return self._pick(ctx.new_local, ctx.new_global, env)
+
+
+@dataclasses.dataclass(frozen=True)
+class ComposePersonalizer(Personalizer):
+    """PMS/DLD: compose shared global layers with personalized local ones
+    along the (C, L) share mask."""
+
+    def train_model(self, ctx, env):
+        return compose_model(ctx.global_params, ctx.local_params, ctx.share)
+
+    def eval_model(self, ctx, env):
+        return compose_model(ctx.new_global, ctx.new_local, ctx.share)
+
+
+# ---------------------------------------------------------------------------
+# LocalTrainer — Algorithm 2
+# ---------------------------------------------------------------------------
+
+
+def _batched(x, y, m, batch_size: int):
+    """Trim to a whole number of batches and reshape to (nb, B, ...)."""
+    n = x.shape[0]
+    nb = max(1, n // batch_size)
+    take = nb * batch_size
+    if take > n:  # dataset smaller than one batch: single ragged batch
+        nb, take, batch_size = 1, n, n
+    return (
+        x[:take].reshape(nb, batch_size, *x.shape[1:]),
+        y[:take].reshape(nb, batch_size),
+        m[:take].reshape(nb, batch_size),
+    )
+
+
+class LocalTrainer:
+    """Produces ``ctx.trained`` from ``ctx.train_model`` (Algorithm 2)."""
+
+    def fit(self, ctx: RoundContext, env: RoundEnv) -> RoundContext:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDTrainer(LocalTrainer):
+    """Algorithm 2 LocalTrain: tau epochs of minibatch SGD, vmapped over
+    the client axis (all lanes compute; unselected results are discarded
+    by the engine's select mask)."""
+
+    epochs: int = 1
+    batch_size: int = 32
+    lr: float = 0.1
+
+    def fit(self, ctx: RoundContext, env: RoundEnv) -> RoundContext:
+        def local_fit(params, x, y, m, rng):
+            xb, yb, mb = _batched(x, y, m, self.batch_size)
+
+            def epoch(params, _):
+                def step(params, batch):
+                    bx, by, bm = batch
+                    grads = jax.grad(env.loss_fn)(params, bx, by, bm)
+                    new = jax.tree.map(lambda p, g: p - self.lr * g, params, grads)
+                    return new, ()
+
+                params, _ = jax.lax.scan(step, params, (xb, yb, mb))
+                return params, ()
+
+            params, _ = jax.lax.scan(epoch, params, None, length=self.epochs)
+            return params
+
+        fit_rngs = jax.random.split(ctx.rng_fit, env.n_clients)
+        trained = jax.vmap(local_fit)(
+            ctx.train_model, env.x_tr, env.y_tr, env.m_tr, fit_rngs
+        )
+        return ctx._replace(trained=trained)
+
+
+# ---------------------------------------------------------------------------
+# TransmitPhase — the wire codec with error feedback
+# ---------------------------------------------------------------------------
+
+
+def _client_sq_norms(stacked, reference):
+    """(C,) sum of squared differences between stacked leaves (C, ...) and
+    the unstacked reference, reduced over every non-client axis."""
+    total = 0.0
+    for lc, lg in zip(jax.tree.leaves(stacked), jax.tree.leaves(reference)):
+        d = lc - lg
+        total = total + jnp.sum(d * d, axis=tuple(range(1, d.ndim)))
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class TransmitPhase:
+    """Wire-codec phase: the uplink every selected client's shared delta
+    takes to the server.
+
+    Lossy codecs run an error-feedback step per client and layer (residuals
+    carried in the round state, touched only for layers actually sent);
+    lossless codecs pass the exact update through. Besides ``agg_src`` (what
+    the server aggregates) this phase deposits the cost-aware selection
+    signals: per-client prospective wire bytes, paid wire bytes, and the l2
+    norm of the compressed uplink delta.
+    """
+
+    codec: Codec
+
+    @property
+    def lossy(self) -> bool:
+        return self.codec.lossy
+
+    def transmit(self, ctx: RoundContext, env: RoundEnv) -> RoundContext:
+        g, trained = ctx.global_params, ctx.trained
+        if self.codec.lossy and ctx.residual is None:
+            raise ValueError(
+                "lossy codec requires RoundState.residual; initialize it with "
+                "jax.tree.map(jnp.zeros_like, local_params) (run_federated does)"
+            )
+        if self.codec.lossy:
+            # The server aggregates decode(encode(delta + residual)); the new
+            # residual absorbs what the codec dropped, but only for clients
+            # that actually transmitted the layer (selected AND sharing it) —
+            # personalized layers never hit the wire, so their residuals stay.
+            agg_src, new_residual = [], []
+            for j, (tr_j, g_j, res_j) in enumerate(zip(trained, g, ctx.residual)):
+                sent_j = ctx.select & ctx.share[:, j]  # (C,)
+
+                def client_ef(tr_c, res_c, key, g_j=g_j):
+                    delta = jax.tree.map(lambda t, gl: t - gl, tr_c, g_j)
+                    dec, new_r = ef_step(self.codec, delta, res_c, key)
+                    recon = jax.tree.map(lambda gl, d: gl + d, g_j, dec)
+                    return recon, new_r
+
+                keys = jax.random.split(
+                    jax.random.fold_in(ctx.rng_codec, j), env.n_clients
+                )
+                recon_j, new_r_j = jax.vmap(client_ef)(tr_j, res_j, keys)
+                agg_src.append(recon_j)
+                new_residual.append(
+                    jax.tree.map(
+                        lambda n, o: jnp.where(
+                            sent_j.reshape((-1,) + (1,) * (n.ndim - 1)), n, o
+                        ),
+                        new_r_j,
+                        res_j,
+                    )
+                )
+        else:  # lossless: the wire carries the exact update, no residual
+            agg_src, new_residual = trained, ctx.residual
+
+        # --- cost signals for selection + accounting ------------------------
+        # static per-layer cost one client pays to ship layer j through the
+        # codec; (C,) products with the share/select masks give prospective
+        # (share only) vs paid (share & select) per-client wire bytes
+        layer_wire = jnp.asarray(
+            [tree_wire_bytes(self.codec, layer) for layer in g], jnp.float32
+        )
+        share_f = ctx.share.astype(jnp.float32)
+        wire_prospective = share_f @ layer_wire
+        wire_paid = (share_f * ctx.select.astype(jnp.float32)[:, None]) @ layer_wire
+        norm_sq = 0.0
+        for j in range(len(g)):
+            norm_sq = norm_sq + share_f[:, j] * _client_sq_norms(agg_src[j], g[j])
+        return ctx._replace(
+            agg_src=agg_src,
+            residual=new_residual,
+            wire_bytes=wire_prospective,
+            wire_paid=wire_paid,
+            update_norm=jnp.sqrt(norm_sq),
+        )
+
+    def silo_transmit(self, x: jnp.ndarray, residual: jnp.ndarray, rng: jax.Array):
+        """Cross-silo lane: EF-compress each silo's stacked contribution.
+
+        ``x``/``residual`` are single leaves with a leading silo axis
+        (S, ...); each silo's slice is encoded independently (per-silo codec
+        blocks/scales). Returns ``(decoded, new_residual)``, both (S, ...).
+        """
+        keys = jax.random.split(rng, x.shape[0])
+        return jax.vmap(lambda v, e, k: ef_step(self.codec, v, e, k))(
+            x, residual, keys
+        )
+
+
+# ---------------------------------------------------------------------------
+# Aggregator — Eq. 1
+# ---------------------------------------------------------------------------
+
+
+class Aggregator:
+    def aggregate(self, ctx: RoundContext, env: RoundEnv) -> RoundContext:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgAggregator(Aggregator):
+    """Plain Eq. 1 over selected clients, full model."""
+
+    def aggregate(self, ctx, env):
+        return ctx._replace(
+            new_global=fedavg_aggregate(ctx.agg_src, ctx.select, env.n_samples)
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskedPartialAggregator(Aggregator):
+    """ACSP-FL masked aggregation: only layers a client shares contribute;
+    layers nobody shared keep the previous global value."""
+
+    def aggregate(self, ctx, env):
+        return ctx._replace(
+            new_global=masked_partial_aggregate(
+                ctx.agg_src, ctx.global_params, ctx.select, env.n_samples, ctx.share
+            )
+        )
+
+
+# ---------------------------------------------------------------------------
+# Evaluator
+# ---------------------------------------------------------------------------
+
+
+class Evaluator:
+    def evaluate(self, ctx: RoundContext, env: RoundEnv) -> RoundContext:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedEvaluator(Evaluator):
+    """Distributed eval (paper §4.3): each client scores its composed model
+    on its own test shard; accuracy and loss feed the selector."""
+
+    def evaluate(self, ctx, env):
+        acc = jax.vmap(lambda p, x, y, m: env.acc_fn(p, x, y, m))(
+            ctx.eval_model, env.x_te, env.y_te, env.m_te
+        )
+        loss = jax.vmap(lambda p, x, y, m: env.loss_fn(p, x, y, m))(
+            ctx.eval_model, env.x_te, env.y_te, env.m_te
+        )
+        return ctx._replace(accuracy=acc, loss=loss)
+
+
+# ---------------------------------------------------------------------------
+# SelectorPhase — Algorithm 1 l.12
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectorPhase:
+    """Wraps a SelectionStrategy; assembles the full ClientObservations
+    (including the codec-phase cost signals) and picks next round's cohort."""
+
+    strategy: SelectionStrategy
+
+    def select(self, ctx: RoundContext, env: RoundEnv) -> RoundContext:
+        obs = ClientObservations(
+            accuracy=ctx.accuracy,
+            loss=ctx.loss,
+            n_samples=env.n_samples,
+            delay=env.delay,
+            wire_bytes=ctx.wire_bytes,
+            update_norm=ctx.update_norm,
+            participation_count=ctx.participation,
+        )
+        return ctx._replace(next_select=self.strategy.select(obs, ctx.t, ctx.rng_sel))
+
+
+# ---------------------------------------------------------------------------
+# LayerPolicy — how many layers each client shares next round
+# ---------------------------------------------------------------------------
+
+
+class LayerPolicy:
+    def next_pms(self, ctx: RoundContext, env: RoundEnv, n_layers: int):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class FullShare(LayerPolicy):
+    """Everyone always shares the whole model."""
+
+    def next_pms(self, ctx, env, n_layers):
+        return jnp.full((env.n_clients,), n_layers, jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticPMS(LayerPolicy):
+    """Fixed shared-prefix length (the paper's PMS k variants)."""
+
+    layers: int = 2
+
+    def next_pms(self, ctx, env, n_layers):
+        return jnp.full((env.n_clients,), self.layers, jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DLDPolicy(LayerPolicy):
+    """Dynamic layer definition (Eq. 9): per-client PMS from accuracy."""
+
+    def next_pms(self, ctx, env, n_layers):
+        return dynamic_layer_definition(ctx.accuracy, n_layers)
+
+
+# ---------------------------------------------------------------------------
+# registries (mirror get_strategy / make_codec)
+# ---------------------------------------------------------------------------
+
+_PHASE_REGISTRY: dict[str, dict[str, Callable]] = {
+    "personalizer": {
+        "none": NoPersonalizer,
+        "ft": FTPersonalizer,
+        "compose": ComposePersonalizer,
+    },
+    "trainer": {"sgd": SGDTrainer},
+    "aggregator": {"fedavg": FedAvgAggregator, "masked-partial": MaskedPartialAggregator},
+    "evaluator": {"distributed": DistributedEvaluator},
+    "layer-policy": {"full": FullShare, "static": StaticPMS, "dld": DLDPolicy},
+}
+
+
+def get_phase(kind: str, name: str, **kwargs):
+    """Build a phase component by (kind, name), e.g.
+    ``get_phase('aggregator', 'fedavg')``. Unknown kinds/names raise
+    ``KeyError`` listing what is available."""
+    if kind not in _PHASE_REGISTRY:
+        raise KeyError(f"unknown phase kind {kind!r}; have {sorted(_PHASE_REGISTRY)}")
+    reg = _PHASE_REGISTRY[kind]
+    key = name.lower()
+    if key not in reg:
+        raise KeyError(f"unknown {kind} {name!r}; have {sorted(reg)}")
+    return reg[key](**kwargs)
+
+
+def register_phase(kind: str, name: str, factory: Callable) -> None:
+    """Register a custom phase factory under (kind, name); ``factory`` is
+    called with the keyword arguments passed to ``get_phase``."""
+    if kind not in _PHASE_REGISTRY:
+        raise KeyError(f"unknown phase kind {kind!r}; have {sorted(_PHASE_REGISTRY)}")
+    _PHASE_REGISTRY[kind][name.lower()] = factory
