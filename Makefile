@@ -1,12 +1,17 @@
-# CI/dev entry points. `make ci` is what a pipeline should run: the tier-1
-# test command plus the benchmark smoke so perf entry points can't rot.
+# CI/dev entry points. `make ci` is what a pipeline should run: the full
+# test set (including tests marked slow, which tier-1 `make test` skips via
+# pytest.ini addopts) plus the benchmark smoke so perf entry points can't
+# rot (kernel + codec + selection grid + sync/async scheduler grid).
 
 PY := PYTHONPATH=src python
 
-.PHONY: test bench-smoke bench ci
+.PHONY: test test-all bench-smoke bench ci
 
 test:
 	$(PY) -m pytest -x -q
+
+test-all:
+	$(PY) -m pytest -q -m "slow or not slow"
 
 bench-smoke:
 	$(PY) -m benchmarks.run --smoke
@@ -14,4 +19,4 @@ bench-smoke:
 bench:
 	$(PY) -m benchmarks.run --quick
 
-ci: test bench-smoke
+ci: test-all bench-smoke

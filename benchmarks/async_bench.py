@@ -1,0 +1,96 @@
+"""Sync-vs-async scheduler grid — the event-driven scheduler's headline
+numbers: for every (mode, codec) cell on a heterogeneous-delay scenario,
+simulated time to target accuracy and cumulative uplink wire MB.
+
+The scenario gives clients lognormal delay multipliers (a fat straggler
+tail), so the synchronous barrier pays the slowest selected client every
+round while the async scheduler (buffer_k = C//2, polynomial staleness
+discount) merges the fast half's updates as they land — same codec path,
+same EF residuals, a fraction of the simulated wall-clock to target.
+
+Async runs get 2x the aggregation events: the comparison is simulated
+*time* to target, not event count (an async event costs roughly half the
+uplink of a sync round).
+
+Smoke mode (REPRO_BENCH_SMOKE=1, via ``benchmarks.run --smoke``) shrinks
+rounds and the dataset; run standalone with
+``PYTHONPATH=src python -m benchmarks.async_bench [--smoke]``.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+from benchmarks.common import ROUNDS, write_csv
+from benchmarks.selection_bench import rounds_to_target
+from repro.data import make_har_dataset
+from repro.fl import FLConfig, run_federated
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+CODECS = ["float32", "int8", "topk+int8"]
+if SMOKE:
+    CODECS = ["float32", "int8"]
+
+# straggler tail: lognormal(sigma=1.0) spans ~20x between fastest and slowest
+HETEROGENEITY = 1.0
+
+
+def time_to_target(h, target: float) -> float:
+    """Simulated seconds until mean accuracy first reaches target; inf if
+    never (so the CSV stays comparable)."""
+    r = rounds_to_target(h.accuracy_mean, target)
+    return float(h.sim_clock[r]) if r >= 0 else float("inf")
+
+
+def run():
+    sync_rounds = 6 if SMOKE else ROUNDS
+    target = 0.70 if SMOKE else 0.80
+    scale = 0.25 if SMOKE else 1.0
+    ds = make_har_dataset("uci-har", seed=0, scale=scale)
+    base = dict(strategy="fedavg", personalization="none", fraction=1.0,
+                epochs=2, heterogeneity=HETEROGENEITY)
+    rows = []
+    for codec in CODECS:
+        runs = {}
+        for mode in ("sync", "async"):
+            rounds = sync_rounds if mode == "sync" else 2 * sync_rounds
+            cfg = FLConfig(rounds=rounds, codec=codec, topk_fraction=0.1,
+                           scheduler=mode, **base)
+            h = run_federated(ds, cfg)
+            runs[mode] = h
+            acc = float(h.accuracy_mean[-1])
+            ttt = time_to_target(h, target)
+            wire_mb = float(h.tx_bytes_cum[-1] / 1e6)
+            rows.append([
+                mode, codec, f"{acc:.4f}",
+                f"{ttt:.2f}", f"{float(h.sim_clock[-1]):.2f}",
+                f"{wire_mb:.2f}", f"{float(h.staleness_mean.mean()):.2f}",
+            ])
+            print(
+                f"  {mode:5s} {codec:10s} acc={acc:.4f}  "
+                f"t_to_{target:.2f}={ttt:8.2f}s  total={float(h.sim_clock[-1]):8.2f}s  "
+                f"wire={wire_mb:8.2f}MB  staleness={float(h.staleness_mean.mean()):.2f}"
+            )
+        t_sync = time_to_target(runs["sync"], target)
+        t_async = time_to_target(runs["async"], target)
+        if np.isfinite(t_sync) and np.isfinite(t_async):
+            print(f"  -> {codec}: async reaches {target:.2f} in {t_async/t_sync:.2f}x "
+                  f"the sync simulated time ({t_async:.1f}s vs {t_sync:.1f}s)")
+    return write_csv(
+        "async_bench",
+        ["mode", "codec", "final_accuracy", "time_to_target_s", "total_sim_s",
+         "wire_mb", "mean_staleness"],
+        rows,
+    )
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv[1:]:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        SMOKE = True
+        CODECS = ["float32", "int8"]
+    run()

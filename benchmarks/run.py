@@ -25,6 +25,7 @@ def main() -> None:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
 
     from benchmarks import (
+        async_bench,
         client_distribution,
         codec_bench,
         comm_overhead,
@@ -45,12 +46,13 @@ def main() -> None:
         ("kernel_bench", kernel_bench.run),
         ("codec_bench (comm subsystem)", codec_bench.run),
         ("selection_bench (strategy x codec grid)", selection_bench.run),
+        ("async_bench (sync vs async scheduler grid)", async_bench.run),
         ("roofline (deliverable g)", roofline.run),
     ]
     if args.smoke:  # CI smoke: the perf + pipeline entry points, tiny sizes
         suites = [
             s for s in suites
-            if s[0].split(" ")[0] in ("kernel_bench", "codec_bench", "selection_bench")
+            if s[0].split(" ")[0] in ("kernel_bench", "codec_bench", "selection_bench", "async_bench")
         ]
     t00 = time.time()
     for name, fn in suites:

@@ -32,11 +32,12 @@ STRATEGIES = {
     "acsp-fl": dict(strategy="acsp-fl", personalization="dld", decay=0.005),
     "grad-importance": dict(strategy="grad-importance", personalization="dld", fraction=0.5),
     "oort-wire": dict(strategy="oort-wire", personalization="dld", fraction=0.5),
+    "oort-fair": dict(strategy="oort-fair", personalization="dld", fraction=0.5),
 }
 CODECS = ["float32", "int8", "topk+int8"]
 
 if SMOKE:
-    STRATEGIES = {k: STRATEGIES[k] for k in ("acsp-fl", "grad-importance", "oort-wire")}
+    STRATEGIES = {k: STRATEGIES[k] for k in ("acsp-fl", "grad-importance", "oort-wire", "oort-fair")}
     CODECS = ["float32", "int8"]
 
 

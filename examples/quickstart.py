@@ -1,14 +1,19 @@
 """Quickstart: ACSP-FL on the UCI-HAR stand-in, 30 clients, 30 rounds.
 
     PYTHONPATH=src python examples/quickstart.py [--codec int8] [--strategy oort-wire]
+                                                 [--mode async --buffer-k 8]
 
 Reproduces the paper's headline behaviour in ~a minute on CPU: adaptive
 selection shrinks the cohort, DLD shrinks the shared piece, accuracy stays
 on par with full FedAvg at a fraction of the bytes. ``--codec`` stacks a
 wire codec (repro.comm) on the adaptive run: int8 / int4 quantization,
 top-k sparsification, or a chain like topk+int8. ``--strategy`` swaps the
-selector — including the cost-aware ``grad-importance`` and ``oort-wire``
-strategies that read the codec's wire-byte signals.
+selector — including the cost-aware ``grad-importance`` / ``oort-wire``
+and the participation-fair ``oort-fair``. ``--mode async`` swaps the
+barrier loop for the event-driven FedBuff-style scheduler
+(repro.fl.sched): the server merges as soon as ``--buffer-k`` updates
+land, weighting stale updates down, so a straggler no longer pins the
+simulated round clock.
 """
 
 import argparse
@@ -19,7 +24,7 @@ import numpy as np
 from repro.configs.har_mlp import fl_defaults
 from repro.core.metrics import overhead_reduction
 from repro.data import make_har_dataset
-from repro.fl import FLConfig, run_federated
+from repro.fl import FLConfig, SchedulerConfig, run_federated
 
 CUSTOM_ROUND_HELP = """
 composing a custom round:
@@ -58,9 +63,15 @@ def main():
     ap.add_argument("--codec", default="float32",
                     help="wire codec for the adaptive run: float32 | int8 | int4 | topk | topk+int8")
     ap.add_argument("--strategy", default="acsp-fl",
-                    help="selection strategy: acsp-fl | deev | poc | oort | grad-importance | oort-wire")
+                    help="selection strategy: acsp-fl | deev | poc | oort | grad-importance | oort-wire | oort-fair")
     ap.add_argument("--topk-fraction", type=float, default=0.1)
     ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--mode", default="sync", choices=["sync", "async"],
+                    help="server loop: sync barrier or async buffered aggregation")
+    ap.add_argument("--buffer-k", type=int, default=0,
+                    help="async: aggregate once this many updates land (0 = C//2)")
+    ap.add_argument("--heterogeneity", type=float, default=0.0,
+                    help="lognormal sigma of per-client delay multipliers (stragglers)")
     args = ap.parse_args()
     # fail fast on a bad codec spec or strategy name before the
     # (minutes-long) baseline runs
@@ -73,18 +84,25 @@ def main():
     print(f"dataset: {ds.name} — {ds.n_clients} clients, {ds.n_features} features, {ds.n_classes} classes")
 
     print("\n[1/2] FedAvg baseline (100% participation, full model, float32 wire)")
+    # same heterogeneity lane as the adaptive run (seed-derived), so the
+    # simulated-clock comparison sees identical stragglers on both sides
     fedavg = run_federated(
-        ds, FLConfig(strategy="fedavg", personalization="none", fraction=1.0, rounds=args.rounds, epochs=2),
+        ds, FLConfig(strategy="fedavg", personalization="none", fraction=1.0,
+                     rounds=args.rounds, epochs=2, heterogeneity=args.heterogeneity),
         progress=True,
     )
 
-    print(f"\n[2/2] {args.strategy} (adaptive selection + DLD partial sharing + codec={args.codec})")
+    print(f"\n[2/2] {args.strategy} (adaptive selection + DLD partial sharing + codec={args.codec}"
+          + (f" + async buffer_k={args.buffer_k or ds.n_clients // 2}" if args.mode == "async" else "")
+          + ")")
     cfg = fl_defaults()  # the paper's recipe (configs.har_mlp), tailored by flags
     cfg = dataclasses.replace(
         cfg,
         selection=dataclasses.replace(cfg.selection, strategy=args.strategy),
         codec=dataclasses.replace(cfg.codec, spec=args.codec, topk_fraction=args.topk_fraction),
         train=dataclasses.replace(cfg.train, rounds=args.rounds),
+        scheduler=SchedulerConfig(mode=args.mode, buffer_k=args.buffer_k,
+                                  heterogeneity=args.heterogeneity),
     )
     acsp = run_federated(ds, cfg, progress=True)
 
@@ -96,6 +114,8 @@ def main():
     print(f"uplink bytes  : FedAvg {fedavg.tx_bytes_cum[-1]/1e6:.1f}MB | {name} {acsp.tx_bytes_cum[-1]/1e6:.1f}MB")
     print(f"communication reduction: {red:.1%} (paper reports up to 95% at 100 rounds)")
     print(f"avg clients/round: FedAvg {fedavg.selected.sum(1).mean():.1f} | {name} {acsp.selected.sum(1).mean():.1f}")
+    print(f"simulated clock : FedAvg {fedavg.sim_clock[-1]:.1f}s | {name} {acsp.sim_clock[-1]:.1f}s"
+          + (f" (mean staleness {acsp.staleness_mean.mean():.2f})" if args.mode == "async" else ""))
     assert acsp.tx_bytes_cum[-1] < fedavg.tx_bytes_cum[-1]
 
 

@@ -27,7 +27,8 @@ Codecs:
   Float32Identity — raw float32 (the seed's analytic accounting, now real)
   QuantizeCodec   — int8/int4 per-block absmax quantization, stochastic
                     rounding, backed by the Pallas kernel pair in
-                    repro.kernels.quantize
+                    repro.kernels.quantize; int4 packs two nibbles per
+                    byte in the wire buffer (physical byte accounting)
   TopKCodec       — magnitude top-k sparsification (values + int32 indices)
   ChainedCodec    — composition, e.g. top-k then int8 on the survivors
 """
@@ -105,14 +106,34 @@ class Float32Identity(Codec):
         return carrier
 
 
+def _pack_nibbles(q: jnp.ndarray) -> jnp.ndarray:
+    """(N,) int8 4-bit codes in [-8, 7] -> (ceil(N/2),) uint8, two per byte
+    (low nibble first). The physical int4 wire buffer."""
+    n = q.shape[0]
+    u = (q.astype(jnp.int32) + 8).astype(jnp.uint8)
+    if n % 2:
+        u = jnp.pad(u, (0, 1))
+    return (u[0::2] | (u[1::2] << 4)).astype(jnp.uint8)
+
+
+def _unpack_nibbles(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Inverse of ``_pack_nibbles``: (ceil(N/2),) uint8 -> (N,) int8."""
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    u = jnp.stack([lo, hi], axis=1).reshape(-1)[:n]
+    return (u - 8).astype(jnp.int8)
+
+
 @dataclasses.dataclass(frozen=True)
 class QuantizeCodec(Codec):
     """Per-block absmax integer quantization (int8 default, int4 with
     ``bits=4``) with stochastic rounding; one float32 scale per block.
 
     Backed by the Pallas kernel pair in repro.kernels.quantize (interpret
-    mode off-TPU). int4 codes are stored in int8 lanes on device; the wire
-    accounting charges the logical bits/8 per element.
+    mode off-TPU). int4 codes are *physically packed* two nibbles per byte
+    in the encoded wire buffer, so ``wire_bytes`` counts the bytes the
+    carrier actually occupies (``ceil(n/2)``) rather than charging an
+    idealized 0.5 B/param while the codes ride int8 lanes.
     """
 
     bits: int = 8
@@ -131,17 +152,27 @@ class QuantizeCodec(Codec):
     def encode(self, flat, rng):
         noise = jax.random.uniform(rng, flat.shape) if self.stochastic else None
         q, scales = quantize(flat, noise, bits=self.bits, block_p=self.block)
+        if self.bits == 4:
+            return (scales, flat.shape[0]), _pack_nibbles(q)
         return scales, q
 
     def decode(self, payload, carrier):
-        return dequantize(carrier, payload, block_p=self.block)
+        if self.bits == 4:
+            scales, n = payload
+            carrier = _unpack_nibbles(carrier, n)
+        else:
+            scales = payload
+        return dequantize(carrier, scales, block_p=self.block)
 
     def meta_bytes(self, n):
         _, nb = quant_blocks(n, self.block)
         return 4.0 * nb
 
+    def carrier_size(self, n):
+        return (n + 1) // 2 if self.bits == 4 else n
+
     def carrier_bits(self):
-        return float(self.bits)
+        return 8.0  # physical: int8 codes, or a byte of two packed nibbles
 
 
 @dataclasses.dataclass(frozen=True)

@@ -6,9 +6,9 @@ never allocated); ``reduced()`` yields the smoke-test variant (<=2 layers,
 d_model<=512, <=4 experts) that runs a real forward/train step on CPU.
 
 The FL sub-configs (SelectionConfig, PersonalizationConfig, CodecConfig,
-TrainConfig) are pure-dataclass, validated at construction, and build their
-runtime objects lazily (``strategy_obj``/``codec_obj``) so this module
-stays import-light.
+SchedulerConfig, TrainConfig) are pure-dataclass, validated at
+construction, and build their runtime objects lazily
+(``strategy_obj``/``codec_obj``) so this module stays import-light.
 """
 
 from __future__ import annotations
@@ -292,6 +292,54 @@ class CodecConfig:
         from repro.comm import make_codec
 
         return make_codec(self.spec, bits=self.bits, topk_fraction=self.topk_fraction)
+
+
+SCHEDULER_MODES = ("sync", "async")
+STALENESS_FN_NAMES = ("constant", "polynomial", "hinge")
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """How the server loop executes rounds (repro.fl.sched).
+
+    ``sync`` is the paper's barrier loop: every selected client finishes
+    before the server aggregates, so round time is the slowest straggler.
+    ``async`` is FedBuff-style buffered execution on a simulated event
+    clock: the server aggregates as soon as ``buffer_k`` client updates
+    land, discounting stale updates by ``staleness_fn``.
+    """
+
+    mode: str = "sync"            # sync | async
+    buffer_k: int = 0             # async: updates per aggregation; 0 -> C//2
+    staleness_fn: str = "polynomial"   # constant | polynomial | hinge
+    staleness_exponent: float = 0.5    # a in (1+s)^-a / hinge slope
+    staleness_threshold: float = 4.0   # hinge knee b
+    heterogeneity: float = 0.0    # lognormal sigma of per-client delay
+                                  # multipliers; 0 = uniform client clocks
+
+    def __post_init__(self):
+        if self.mode not in SCHEDULER_MODES:
+            raise ValueError(
+                f"unknown scheduler mode {self.mode!r}; have {list(SCHEDULER_MODES)}"
+            )
+        if self.buffer_k < 0:
+            raise ValueError(f"buffer_k must be >= 0, got {self.buffer_k!r}")
+        if self.staleness_fn not in STALENESS_FN_NAMES:
+            raise ValueError(
+                f"unknown staleness_fn {self.staleness_fn!r}; have {list(STALENESS_FN_NAMES)}"
+            )
+        if self.staleness_exponent <= 0.0:
+            raise ValueError(
+                f"staleness_exponent must be > 0, got {self.staleness_exponent!r}"
+            )
+        if self.staleness_threshold < 0.0:
+            raise ValueError(
+                f"staleness_threshold must be >= 0, got {self.staleness_threshold!r}"
+            )
+        if self.heterogeneity < 0.0:
+            raise ValueError(
+                f"heterogeneity must be >= 0, got {self.heterogeneity!r}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -21,6 +21,7 @@ from repro.core.selection import (
     PowerOfChoice,
     Oort,
     OortWire,
+    OortFair,
     DEEV,
     ACSPFL,
     GradImportance,
@@ -45,6 +46,7 @@ __all__ = [
     "PowerOfChoice",
     "Oort",
     "OortWire",
+    "OortFair",
     "DEEV",
     "ACSPFL",
     "GradImportance",

@@ -86,6 +86,46 @@ def masked_partial_aggregate(
     return out
 
 
+def staleness_weighted_merge(
+    client_deltas,
+    prev_global,
+    weights: jnp.ndarray,
+    share_mask: jnp.ndarray | None = None,
+):
+    """FedBuff-style buffered merge: ``w <- w + sum_i v_i d_i / sum_i v_i``.
+
+    The async scheduler aggregates *deltas* (each client's update relative
+    to the model snapshot it trained from), weighted by
+    ``v_i = landed_i * |d_i| * s(staleness_i)`` — the caller folds the
+    landing mask, sample counts, and staleness discount into ``weights``.
+    Layers with zero total weight (nobody landed a shared copy) keep the
+    previous global value.
+
+    Args:
+      client_deltas: layered stacked pytree — list over L of trees (C, ...).
+      prev_global: layered pytree — list over L of trees (...).
+      weights: (C,) float — combined merge weight per client.
+      share_mask: optional (C, L) bool — which layers each client shared;
+        None means every client contributes to every layer.
+
+    Returns the new layered global model (client axis reduced).
+    """
+    n_layers = len(client_deltas)
+    out = []
+    for j in range(n_layers):
+        w_j = weights
+        if share_mask is not None:
+            w_j = w_j * share_mask[:, j].astype(jnp.float32)
+        out.append(
+            jax.tree.map(
+                lambda d, g, w_j=w_j: g + _weighted_mean(d, w_j),
+                client_deltas[j],
+                prev_global[j],
+            )
+        )
+    return out
+
+
 def transmitted_parameters(select_mask: jnp.ndarray, share_mask: jnp.ndarray, layer_sizes: jnp.ndarray) -> jnp.ndarray:
     """Analytic one-way transmitted parameter count for a round.
 

@@ -25,26 +25,47 @@ class CommModel:
     client_flops_per_s: float = 5e9         # edge-device training throughput
     server_latency_s: float = 0.01
 
-    def round_time(
+    def client_times(
         self,
         tx_bytes_per_client: jnp.ndarray,
         train_flops_per_client: jnp.ndarray,
-        select_mask: jnp.ndarray,
         rx_bytes_per_client: jnp.ndarray | None = None,
+        delay: jnp.ndarray | None = None,
     ) -> jnp.ndarray:
-        """Synchronous round time = slowest selected client (download +
-        train + upload), matching the paper's 'overhead' definition.
+        """Per-client completion time (download + train + upload), the event
+        clock's sampling primitive: the async scheduler dispatches a client
+        and marks it done ``client_times(...)[i]`` simulated seconds later.
 
         ``rx_bytes_per_client`` is the downlink volume; it defaults to the
         uplink (symmetric traffic, the seed behaviour). A wire codec
         compresses only the uplink, so the engine passes the uncompressed
-        float32 broadcast size separately.
+        float32 broadcast size separately. ``delay`` is an optional (C,)
+        multiplicative heterogeneity lane (straggler simulation); server
+        latency is NOT included — it is a per-aggregation cost.
         """
         if rx_bytes_per_client is None:
             rx_bytes_per_client = tx_bytes_per_client
         per_client = (
             (tx_bytes_per_client + rx_bytes_per_client) / self.bandwidth_bytes_per_s
             + train_flops_per_client / self.client_flops_per_s
+        )
+        if delay is not None:
+            per_client = per_client * delay
+        return per_client
+
+    def round_time(
+        self,
+        tx_bytes_per_client: jnp.ndarray,
+        train_flops_per_client: jnp.ndarray,
+        select_mask: jnp.ndarray,
+        rx_bytes_per_client: jnp.ndarray | None = None,
+        delay: jnp.ndarray | None = None,
+    ) -> jnp.ndarray:
+        """Synchronous round time = slowest selected client (download +
+        train + upload), matching the paper's 'overhead' definition."""
+        per_client = self.client_times(
+            tx_bytes_per_client, train_flops_per_client, rx_bytes_per_client,
+            delay=delay,
         )
         per_client = jnp.where(select_mask, per_client, 0.0)
         return jnp.max(per_client) + self.server_latency_s

@@ -15,6 +15,8 @@ Strategies:
   GradImportance — compressed-update norm per wire byte (Marnissi et al. 2021)
   OortWire       — Oort whose systemic term is the codec-reported uplink
                    wire bytes instead of the analytic training delay
+  OortFair       — Oort with a participation-count fairness bonus (Oort's
+                   temporal-uncertainty incentive for rarely-picked clients)
 
 The cost-aware strategies consume the extended ``ClientObservations``
 fields (``wire_bytes``, ``update_norm``, ``participation_count``) that the
@@ -147,11 +149,16 @@ class Oort(SelectionStrategy):
             1.0,
         )
 
+    def _utility(self, metrics: ClientMetrics, t) -> jnp.ndarray:
+        """Statistical term x systemic penalty; OortFair layers a
+        participation bonus on top."""
+        stat = metrics.n_samples * jnp.sqrt(jnp.maximum(metrics.loss, 0.0) ** 2 + 1e-12)
+        return stat * self._systemic_penalty(metrics)
+
     def select(self, metrics: ClientMetrics, t, rng) -> jnp.ndarray:
         c = metrics.loss.shape[0]
         k = max(1, int(round(self.fraction * c)))
-        stat = metrics.n_samples * jnp.sqrt(jnp.maximum(metrics.loss, 0.0) ** 2 + 1e-12)
-        util = stat * self._systemic_penalty(metrics)
+        util = self._utility(metrics, t)
         k_exploit = max(1, int(round((1.0 - self.epsilon) * k)))
         k_explore = k - k_exploit
         exploit = _keep_highest(util, jnp.ones((c,), bool), jnp.asarray(k_exploit))
@@ -242,6 +249,30 @@ class OortWire(Oort):
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class OortFair(Oort):
+    """Oort with a participation-aware fairness bonus (Oort's temporal
+    uncertainty term, driven by the round pipeline's participation counter).
+
+    The utility is multiplied by
+    ``1 + fairness * sqrt(log(t + 2) / (1 + participation_count))`` — the
+    confidence-bound shape Oort uses for staleness incentives: clients the
+    selector has rarely picked accumulate a growing bonus and bubble back
+    into the cohort, bounding selection skew without giving up the
+    utility-driven core.
+    """
+
+    fairness: float = 1.0
+
+    def _utility(self, metrics: ClientMetrics, t) -> jnp.ndarray:
+        _require(metrics, "oort-fair", "participation_count")
+        part = metrics.participation_count.astype(jnp.float32)
+        bonus = 1.0 + self.fairness * jnp.sqrt(
+            jnp.log(jnp.asarray(t, jnp.float32) + 2.0) / (1.0 + part)
+        )
+        return super()._utility(metrics, t) * bonus
+
+
 _REGISTRY = {
     "fedavg": lambda **kw: FedAvgRandom(**{k: v for k, v in kw.items() if k in ("fraction",)}),
     "poc": lambda **kw: PowerOfChoice(**{k: v for k, v in kw.items() if k in ("fraction", "candidate_factor")}),
@@ -250,6 +281,7 @@ _REGISTRY = {
     "acsp-fl": lambda **kw: ACSPFL(**{k: v for k, v in kw.items() if k in ("decay",)}),
     "grad-importance": lambda **kw: GradImportance(**{k: v for k, v in kw.items() if k in ("fraction",)}),
     "oort-wire": lambda **kw: OortWire(**{k: v for k, v in kw.items() if k in ("fraction", "alpha", "epsilon")}),
+    "oort-fair": lambda **kw: OortFair(**{k: v for k, v in kw.items() if k in ("fraction", "alpha", "epsilon", "fairness")}),
 }
 
 

@@ -1,24 +1,28 @@
 """FL runtime: the composable round pipeline (repro.fl.api + repro.fl.phases),
-the single-host vmap'd simulation engine (repro.fl.engine), and the
-cross-silo distributed runtime over a TPU mesh (repro.fl.cross_silo)."""
+the sync/async scheduler layer driving it (repro.fl.sched) behind the
+single-host simulation entry point (repro.fl.engine), and the cross-silo
+distributed runtime over a TPU mesh (repro.fl.cross_silo)."""
 
 from repro.fl.api import (
     CodecConfig,
     FLConfig,
     PersonalizationConfig,
     RoundPipeline,
+    SchedulerConfig,
     SelectionConfig,
     TrainConfig,
     build_round_step,
     pipeline_from_config,
 )
 from repro.fl.engine import FLHistory, make_round_step, run_federated
+from repro.fl.sched import AsyncScheduler, SyncScheduler, make_scheduler
 
 __all__ = [
     "FLConfig",
     "SelectionConfig",
     "PersonalizationConfig",
     "CodecConfig",
+    "SchedulerConfig",
     "TrainConfig",
     "FLHistory",
     "RoundPipeline",
@@ -26,4 +30,7 @@ __all__ = [
     "build_round_step",
     "run_federated",
     "make_round_step",
+    "SyncScheduler",
+    "AsyncScheduler",
+    "make_scheduler",
 ]

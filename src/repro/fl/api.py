@@ -6,16 +6,21 @@ of phase components (see ``repro.fl.phases``):
   Personalizer -> LocalTrainer -> TransmitPhase (wire codec + EF)
                -> Aggregator -> Evaluator -> SelectorPhase -> LayerPolicy
 
-``FLConfig`` is the declarative form: four nested validated sub-configs
+``FLConfig`` is the declarative form: five nested validated sub-configs
 (``SelectionConfig``, ``PersonalizationConfig``, ``CodecConfig``,
-``TrainConfig``) with a flat-kwargs backward-compat constructor, so both
+``TrainConfig``, ``SchedulerConfig``) with a flat-kwargs backward-compat
+constructor, so both
 
     FLConfig(strategy="acsp-fl", personalization="dld", rounds=30)   # flat
     FLConfig(selection=SelectionConfig("acsp-fl"), train=TrainConfig(rounds=30))
 
 build the same config. ``pipeline_from_config`` maps a config onto phase
 objects via the string registries; ``build_round_step`` composes any
-pipeline into the jitted round step the server loop drives.
+pipeline into the jitted round step. The server loop that drives the step
+lives in ``repro.fl.sched``: ``SchedulerConfig.mode`` picks between the
+synchronous barrier (``SyncScheduler``, the paper's Algorithm 1) and
+event-driven buffered execution (``AsyncScheduler``, FedBuff-style) —
+``run_federated`` dispatches on it.
 
 Composing a custom round::
 
@@ -42,6 +47,7 @@ import jax.numpy as jnp
 from repro.configs.base import (
     CodecConfig,
     PersonalizationConfig,
+    SchedulerConfig,
     SelectionConfig,
     TrainConfig,
 )
@@ -56,6 +62,7 @@ __all__ = [
     "SelectionConfig",
     "PersonalizationConfig",
     "CodecConfig",
+    "SchedulerConfig",
     "TrainConfig",
     "RoundPipeline",
     "RoundState",
@@ -84,6 +91,10 @@ _FLAT_KEYS = {
     "lr": ("train", "lr"),
     "momentum": ("train", "momentum"),
     "seed": ("train", "seed"),
+    "scheduler": ("scheduler", "mode"),
+    "buffer_k": ("scheduler", "buffer_k"),
+    "staleness_fn": ("scheduler", "staleness_fn"),
+    "heterogeneity": ("scheduler", "heterogeneity"),
 }
 
 _GROUP_TYPES = {
@@ -91,12 +102,13 @@ _GROUP_TYPES = {
     "personalization": PersonalizationConfig,
     "codec": CodecConfig,
     "train": TrainConfig,
+    "scheduler": SchedulerConfig,
 }
 
 
 @dataclasses.dataclass(frozen=True, init=False)
 class FLConfig:
-    """Federated experiment config: four nested validated sub-configs.
+    """Federated experiment config: five nested validated sub-configs.
 
     Accepts either the nested objects (``selection=SelectionConfig(...)``)
     or the seed's flat kwargs (``strategy="oort", fraction=0.5, rounds=30,
@@ -108,9 +120,10 @@ class FLConfig:
     personalization: PersonalizationConfig
     codec: CodecConfig
     train: TrainConfig
+    scheduler: SchedulerConfig
 
     def __init__(self, selection=None, personalization=None, codec=None,
-                 train=None, **flat):
+                 train=None, scheduler=None, **flat):
         # string conveniences on the group params themselves: the seed's
         # FLConfig(personalization="dld", codec="int8") spelled the mode/spec
         # directly, so route strings into the flat namespace
@@ -120,6 +133,8 @@ class FLConfig:
             flat["codec"], codec = codec, None
         if isinstance(selection, str):
             flat["strategy"], selection = selection, None
+        if isinstance(scheduler, str):
+            flat["scheduler"], scheduler = scheduler, None
 
         unknown = set(flat) - set(_FLAT_KEYS)
         if unknown:
@@ -129,7 +144,7 @@ class FLConfig:
                 f"{sorted(_GROUP_TYPES)} sub-configs)"
             )
         given = {"selection": selection, "personalization": personalization,
-                 "codec": codec, "train": train}
+                 "codec": codec, "train": train, "scheduler": scheduler}
         grouped: dict[str, dict[str, Any]] = {g: {} for g in _GROUP_TYPES}
         for key, value in flat.items():
             group, attr = _FLAT_KEYS[key]
@@ -198,6 +213,10 @@ class FLConfig:
     def seed(self) -> int:
         return self.train.seed
 
+    @property
+    def buffer_k(self) -> int:
+        return self.scheduler.buffer_k
+
     def strategy_obj(self):
         return self.selection.strategy_obj()
 
@@ -225,7 +244,13 @@ class RoundPipeline:
 
 
 def pipeline_from_config(cfg: FLConfig) -> RoundPipeline:
-    """Map a (nested) FLConfig onto phase objects via the registries."""
+    """Map a (nested) FLConfig onto phase objects via the registries.
+
+    The scheduler group picks the aggregator family: async mode always
+    merges through the staleness-weighted buffered aggregator (which
+    honours the share mask, so it composes with PMS/DLD partial sharing);
+    sync mode keeps the paper's FedAvg / masked-partial aggregation.
+    """
     mode = cfg.personalization.mode
     personalizer = phases.get_phase(
         "personalizer", mode if mode in ("none", "ft") else "compose"
@@ -236,6 +261,18 @@ def pipeline_from_config(cfg: FLConfig) -> RoundPipeline:
         layer_policy = phases.get_phase("layer-policy", "static", layers=cfg.personalization.pms_layers)
     else:
         layer_policy = phases.get_phase("layer-policy", "full")
+    sched = cfg.scheduler
+    if sched.mode == "async":
+        aggregator = phases.get_phase(
+            "aggregator", "staleness",
+            staleness_fn=sched.staleness_fn,
+            exponent=sched.staleness_exponent,
+            threshold=sched.staleness_threshold,
+        )
+    else:
+        aggregator = phases.get_phase(
+            "aggregator", "masked-partial" if mode in ("pms", "dld") else "fedavg"
+        )
     return RoundPipeline(
         personalizer=personalizer,
         trainer=phases.get_phase(
@@ -243,9 +280,7 @@ def pipeline_from_config(cfg: FLConfig) -> RoundPipeline:
             epochs=cfg.train.epochs, batch_size=cfg.train.batch_size, lr=cfg.train.lr,
         ),
         transmit=phases.TransmitPhase(cfg.codec_obj()),
-        aggregator=phases.get_phase(
-            "aggregator", "masked-partial" if mode in ("pms", "dld") else "fedavg"
-        ),
+        aggregator=aggregator,
         evaluator=phases.get_phase("evaluator", "distributed"),
         selector=phases.SelectorPhase(cfg.strategy_obj()),
         layer_policy=layer_policy,

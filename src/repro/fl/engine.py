@@ -1,24 +1,27 @@
-"""Federated simulation engine — the paper's Algorithms 1 & 2 driven
-through the composable round pipeline (repro.fl.api / repro.fl.phases).
+"""Federated simulation entry point — config plumbing + host-side history.
 
-Clients live on a stacked leading axis (C, ...) of every parameter leaf. A
-round is the phase sequence
+The round itself is the composable phase pipeline (repro.fl.api /
+repro.fl.phases):
 
   Personalizer -> LocalTrainer -> TransmitPhase (wire codec + EF)
                -> Aggregator -> Evaluator -> SelectorPhase -> LayerPolicy
 
-composed by ``repro.fl.api.build_round_step`` into one jitted array
-program; this module owns the Python server loop (Algorithm 1) that drives
-it and collects host-side history. ``make_round_step`` builds the default
-pipeline from an ``FLConfig``; pass ``pipeline=`` to either entry point to
-swap phases (see api.py's "composing a custom round").
+and the server loop that drives it lives in the scheduler layer
+(repro.fl.sched): ``cfg.scheduler.mode`` picks between the paper's
+synchronous barrier (``SyncScheduler`` — Algorithm 1, round time = slowest
+selected client) and FedBuff-style event-driven buffered execution
+(``AsyncScheduler`` — aggregate as soon as ``buffer_k`` updates land, with
+staleness-weighted merging). ``run_federated`` is the stable entry point
+that builds the default pipeline from an ``FLConfig`` and delegates to the
+configured scheduler; ``make_round_step`` exposes the jitted synchronous
+round step for callers that drive it themselves.
 
 Uplink traffic goes through a wire codec (repro.comm): each selected
 client's shared delta is encode/decode round-tripped (with per-client
 error-feedback residuals carried in the round state for lossy codecs), and
 ``FLHistory.tx_bytes_cum`` / ``round_time`` account codec-reported wire
-bytes. The codec phase also feeds per-client wire bytes and compressed
-update norms to cost-aware selection (grad-importance, oort-wire).
+bytes. Under the async scheduler the same codec path carries each landing
+client's delta, so async + compression + cost-aware selection compose.
 
 Variant map (paper §4.4 naming):
   ND    — strategy selection, NO personalization, NO decay, full model shared
@@ -33,37 +36,37 @@ from __future__ import annotations
 
 from typing import Callable, NamedTuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.layersharing import layer_param_sizes
-from repro.core.metrics import BYTES_PER_PARAM, CommModel
+from repro.core.metrics import CommModel
 from repro.data.synthetic import FederatedDataset
 from repro.fl.api import (
     FLConfig,
     RoundPipeline,
-    RoundState,
     build_env,
     build_round_step,
     pipeline_from_config,
 )
-from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
+from repro.models.mlp import mlp_accuracy, mlp_loss
 
 __all__ = ["FLConfig", "FLHistory", "make_round_step", "run_federated"]
 
 
 class FLHistory(NamedTuple):
-    """Per-round records (numpy, host-side)."""
+    """Per-round records (numpy, host-side). Under the async scheduler a
+    "round" is one aggregation event (``buffer_k`` landed updates)."""
 
     accuracy_mean: np.ndarray      # (T,)
     accuracy_per_client: np.ndarray  # (T, C)
-    selected: np.ndarray           # (T, C) bool
+    selected: np.ndarray           # (T, C) bool — sync: cohort; async: landers
     tx_params: np.ndarray          # (T,) uplink parameter count
     tx_bytes_cum: np.ndarray       # (T,) cumulative uplink *wire* bytes
-    round_time: np.ndarray         # (T,) simulated seconds
+    round_time: np.ndarray         # (T,) simulated seconds per round/event
     pms: np.ndarray                # (T, C) layers shared per client
     tx_wire_bytes: np.ndarray      # (T,) per-round uplink wire bytes (codec)
+    sim_clock: np.ndarray          # (T,) simulated clock at each aggregation
+    staleness_mean: np.ndarray     # (T,) mean staleness of merged updates
+                                   # (identically 0 under the sync barrier)
 
 
 def make_round_step(
@@ -73,8 +76,8 @@ def make_round_step(
     acc_fn: Callable = mlp_accuracy,
     pipeline: RoundPipeline | None = None,
 ):
-    """Build the jitted round step: the cfg's default pipeline (or a custom
-    one) composed over the static data/config environment."""
+    """Build the jitted synchronous round step: the cfg's default pipeline
+    (or a custom one) composed over the static data/config environment."""
     pipeline = pipeline or pipeline_from_config(cfg)
     env = build_env(data, cfg.seed, loss_fn=loss_fn, acc_fn=acc_fn)
     return build_round_step(env, pipeline)
@@ -89,76 +92,26 @@ def run_federated(
     comm: CommModel | None = None,
     progress: bool = False,
     pipeline: RoundPipeline | None = None,
+    client_delay: np.ndarray | None = None,
 ) -> FLHistory:
-    """Run ``cfg.rounds`` federated rounds; returns host-side history."""
-    pipeline = pipeline or pipeline_from_config(cfg)
-    rng = jax.random.PRNGKey(cfg.seed)
-    r_init, r_loop = jax.random.split(rng)
-    if init_fn is None:
-        init_fn = lambda r: init_mlp(r, data.n_features, data.n_classes)
-    g0 = init_fn(r_init)
-    n_layers = len(g0)
-    # every client starts from the same init (paper: server broadcasts w(0))
-    loc0 = jax.tree.map(lambda gl: jnp.broadcast_to(gl, (data.n_clients,) + gl.shape), g0)
+    """Run ``cfg.rounds`` federated rounds (sync) or aggregation events
+    (async) under the configured scheduler; returns host-side history.
 
-    # Algorithm 1: round 1 selects ALL clients; the shared piece is cut from
-    # the first round in PMS mode (DLD starts full: A=0 <= 0.25 -> all layers)
-    pms0 = cfg.pms_layers if cfg.personalization.mode == "pms" else n_layers
-    state = RoundState(
-        global_params=g0,
-        local_params=loc0,
-        accuracy=jnp.zeros((data.n_clients,)),
-        select=jnp.ones((data.n_clients,), bool),
-        pms=jnp.full((data.n_clients,), pms0, jnp.int32),
-        rng=r_loop,
-        residual=jax.tree.map(jnp.zeros_like, loc0) if pipeline.transmit.lossy else None,
-        participation=jnp.zeros((data.n_clients,), jnp.int32),
-    )
-    env = build_env(data, cfg.seed, loss_fn=loss_fn, acc_fn=acc_fn)
-    round_step = jax.jit(build_round_step(env, pipeline))
+    ``client_delay`` is an optional (C,) multiplicative heterogeneity lane
+    for the simulated clock (stragglers); by default it is derived from
+    ``cfg.scheduler.heterogeneity`` (0 = uniform clocks, the seed
+    behaviour).
+    """
+    from repro.fl.sched import make_scheduler
 
-    comm = comm or CommModel()
-    sizes_np = None
-    accs, sel_hist, tx_hist, pms_hist, times, wire_hist = [], [], [], [], [], []
-    for t in range(cfg.rounds):
-        state, out = round_step(state, jnp.asarray(t))
-        out = jax.device_get(out)
-        if sizes_np is None:
-            sizes_np = np.asarray(jax.device_get(layer_param_sizes(state.global_params)))
-        accs.append(out["acc"])
-        sel_hist.append(out["selected"])
-        tx_hist.append(float(out["tx_params"]))
-        pms_hist.append(out["pms"])
-        wire_pc = np.asarray(out["wire_per_client"], np.float64)  # (C,)
-        wire_hist.append(wire_pc.sum())
-        # simulated round time: slowest selected client — codec-compressed
-        # uplink, uncompressed float32 downlink (the server broadcasts the
-        # exact global model)
-        per_client_params = (np.asarray(out["pms"])[:, None] > np.arange(len(sizes_np))[None, :]) @ sizes_np
-        flops = 6.0 * per_client_params * np.asarray(data.n_samples) * cfg.epochs
-        times.append(
-            float(
-                comm.round_time(
-                    jnp.asarray(wire_pc, jnp.float32),
-                    jnp.asarray(flops, jnp.float32),
-                    jnp.asarray(out["selected"]),
-                    rx_bytes_per_client=jnp.asarray(per_client_params * BYTES_PER_PARAM, jnp.float32),
-                )
-            )
-        )
-        if progress and (t % 10 == 0 or t == cfg.rounds - 1):
-            print(f"  round {t:3d}  acc={np.mean(out['acc']):.4f}  |S|={int(np.sum(out['selected']))}")
-
-    acc_pc = np.stack(accs)
-    tx = np.asarray(tx_hist)
-    wire = np.asarray(wire_hist)
-    return FLHistory(
-        accuracy_mean=acc_pc.mean(axis=1),
-        accuracy_per_client=acc_pc,
-        selected=np.stack(sel_hist),
-        tx_params=tx,
-        tx_bytes_cum=np.cumsum(wire),
-        round_time=np.asarray(times),
-        pms=np.stack(pms_hist),
-        tx_wire_bytes=wire,
+    return make_scheduler(cfg).run(
+        data,
+        cfg,
+        init_fn=init_fn,
+        loss_fn=loss_fn,
+        acc_fn=acc_fn,
+        comm=comm,
+        progress=progress,
+        pipeline=pipeline,
+        client_delay=client_delay,
     )

@@ -18,6 +18,13 @@ phases by name and custom components drop in via ``register_phase``.
 ``repro.fl.api`` composes phases into a ``RoundPipeline`` and builds the
 jitted round step; ``repro.fl.cross_silo`` reuses ``TransmitPhase`` for its
 quantized all-reduce so both runtimes share one wire-format definition.
+
+Phases are scheduler-agnostic: ``repro.fl.sched.SyncScheduler`` drives them
+with the broadcast global model (``ctx.dispatch_params is None``), while
+``AsyncScheduler`` supplies per-client dispatch snapshots plus the
+``staleness``/``clock`` lanes, and swaps the aggregator for
+``StalenessAggregator`` (registry name ``'staleness'``) — a FedBuff-style
+buffered delta merge discounted by ``staleness_weight``.
 """
 
 from __future__ import annotations
@@ -36,6 +43,7 @@ from repro.core import (
     masked_partial_aggregate,
     personalize_ft,
 )
+from repro.core.aggregation import staleness_weighted_merge
 from repro.core.selection import ClientObservations, SelectionStrategy
 
 
@@ -77,6 +85,15 @@ class RoundContext(NamedTuple):
     share: Any = None             # (C, L) bool — layer_share_mask(pms)
     residual: Any = None          # EF residuals (lossy codec), leaves (C, ...)
     participation: Any = None     # (C,) int32 — selections so far (incl. now)
+    # scheduler lane (async mode; None under the synchronous barrier):
+    dispatch_params: Any = None   # per-client model snapshot each client
+                                  # trained from, leaves (C, ...) — deltas and
+                                  # EF are computed against it, not the
+                                  # (newer) server model
+    staleness: Any = None         # (C,) int32 — aggregation events since each
+                                  # client's snapshot was cut
+    clock: Any = None             # (C,) float32 — sim time each client's
+                                  # latest result landed at the server
     rng_fit: Any = None
     rng_codec: Any = None
     rng_sel: Any = None
@@ -103,6 +120,19 @@ def _stack_clients(params, n_clients: int):
     )
 
 
+def _client_global(ctx: RoundContext, env: RoundEnv):
+    """Each client's view of the global model at training time.
+
+    Under the synchronous barrier that is the broadcast server model; under
+    the async scheduler each client trains from the (possibly stale)
+    snapshot it was dispatched with, carried stacked in
+    ``ctx.dispatch_params``.
+    """
+    if ctx.dispatch_params is not None:
+        return ctx.dispatch_params
+    return _stack_clients(ctx.global_params, env.n_clients)
+
+
 # ---------------------------------------------------------------------------
 # Personalizer — builds train-time and eval-time per-client models
 # ---------------------------------------------------------------------------
@@ -124,10 +154,11 @@ class Personalizer:
 
 @dataclasses.dataclass(frozen=True)
 class NoPersonalizer(Personalizer):
-    """Everyone trains and evaluates the broadcast global model."""
+    """Everyone trains and evaluates the broadcast global model (under the
+    async scheduler: the dispatch-time snapshot)."""
 
     def train_model(self, ctx, env):
-        return _stack_clients(ctx.global_params, env.n_clients)
+        return _client_global(ctx, env)
 
     def eval_model(self, ctx, env):
         return _stack_clients(ctx.new_global, env.n_clients)
@@ -141,16 +172,23 @@ class FTPersonalizer(Personalizer):
     """Fine-tuning choice (Eq. 8): each client keeps whichever whole model
     (local vs global) has lower loss on its test shard."""
 
-    def _pick(self, local, global_, env):
+    def _pick(self, local, global_, env, stacked=False):
         loss_loc = jax.vmap(lambda p, x, y, m: env.loss_fn(p, x, y, m))(
             local, env.x_te, env.y_te, env.m_te
         )
-        loss_glob = jax.vmap(lambda x, y, m: env.loss_fn(global_, x, y, m))(
-            env.x_te, env.y_te, env.m_te
-        )
+        if stacked:  # async: per-client dispatch snapshots, leaves (C, ...)
+            loss_glob = jax.vmap(lambda p, x, y, m: env.loss_fn(p, x, y, m))(
+                global_, env.x_te, env.y_te, env.m_te
+            )
+        else:
+            loss_glob = jax.vmap(lambda x, y, m: env.loss_fn(global_, x, y, m))(
+                env.x_te, env.y_te, env.m_te
+            )
         return personalize_ft(local, global_, loss_loc, loss_glob)
 
     def train_model(self, ctx, env):
+        if ctx.dispatch_params is not None:
+            return self._pick(ctx.local_params, ctx.dispatch_params, env, stacked=True)
         return self._pick(ctx.local_params, ctx.global_params, env)
 
     def eval_model(self, ctx, env):
@@ -160,9 +198,13 @@ class FTPersonalizer(Personalizer):
 @dataclasses.dataclass(frozen=True)
 class ComposePersonalizer(Personalizer):
     """PMS/DLD: compose shared global layers with personalized local ones
-    along the (C, L) share mask."""
+    along the (C, L) share mask. ``compose_model`` broadcasts the global
+    side per leaf, so the async scheduler's stacked dispatch snapshots
+    compose exactly like the broadcast server model."""
 
     def train_model(self, ctx, env):
+        if ctx.dispatch_params is not None:
+            return compose_model(ctx.dispatch_params, ctx.local_params, ctx.share)
         return compose_model(ctx.global_params, ctx.local_params, ctx.share)
 
     def eval_model(self, ctx, env):
@@ -236,7 +278,8 @@ class SGDTrainer(LocalTrainer):
 
 def _client_sq_norms(stacked, reference):
     """(C,) sum of squared differences between stacked leaves (C, ...) and
-    the unstacked reference, reduced over every non-client axis."""
+    the reference (unstacked, or stacked per client), reduced over every
+    non-client axis."""
     total = 0.0
     for lc, lg in zip(jax.tree.leaves(stacked), jax.tree.leaves(reference)):
         d = lc - lg
@@ -255,6 +298,13 @@ class TransmitPhase:
     the server aggregates) this phase deposits the cost-aware selection
     signals: per-client prospective wire bytes, paid wire bytes, and the l2
     norm of the compressed uplink delta.
+
+    The uplink delta is measured against each client's view of the global
+    model: the broadcast server model under the synchronous barrier, or the
+    per-client dispatch snapshot (``ctx.dispatch_params``) under the async
+    scheduler — a stale client compresses and ships *its own* delta, and
+    the staleness-weighted aggregator replays it onto the newer server
+    model.
     """
 
     codec: Codec
@@ -265,6 +315,7 @@ class TransmitPhase:
 
     def transmit(self, ctx: RoundContext, env: RoundEnv) -> RoundContext:
         g, trained = ctx.global_params, ctx.trained
+        base = ctx.dispatch_params  # None under the synchronous barrier
         if self.codec.lossy and ctx.residual is None:
             raise ValueError(
                 "lossy codec requires RoundState.residual; initialize it with "
@@ -278,17 +329,30 @@ class TransmitPhase:
             agg_src, new_residual = [], []
             for j, (tr_j, g_j, res_j) in enumerate(zip(trained, g, ctx.residual)):
                 sent_j = ctx.select & ctx.share[:, j]  # (C,)
-
-                def client_ef(tr_c, res_c, key, g_j=g_j):
-                    delta = jax.tree.map(lambda t, gl: t - gl, tr_c, g_j)
-                    dec, new_r = ef_step(self.codec, delta, res_c, key)
-                    recon = jax.tree.map(lambda gl, d: gl + d, g_j, dec)
-                    return recon, new_r
-
                 keys = jax.random.split(
                     jax.random.fold_in(ctx.rng_codec, j), env.n_clients
                 )
-                recon_j, new_r_j = jax.vmap(client_ef)(tr_j, res_j, keys)
+
+                if base is not None:  # async: delta vs the dispatch snapshot
+
+                    def client_ef_stacked(tr_c, res_c, key, ref_c):
+                        delta = jax.tree.map(lambda t, gl: t - gl, tr_c, ref_c)
+                        dec, new_r = ef_step(self.codec, delta, res_c, key)
+                        recon = jax.tree.map(lambda gl, d: gl + d, ref_c, dec)
+                        return recon, new_r
+
+                    recon_j, new_r_j = jax.vmap(client_ef_stacked)(
+                        tr_j, res_j, keys, base[j]
+                    )
+                else:
+
+                    def client_ef(tr_c, res_c, key, g_j=g_j):
+                        delta = jax.tree.map(lambda t, gl: t - gl, tr_c, g_j)
+                        dec, new_r = ef_step(self.codec, delta, res_c, key)
+                        recon = jax.tree.map(lambda gl, d: gl + d, g_j, dec)
+                        return recon, new_r
+
+                    recon_j, new_r_j = jax.vmap(client_ef)(tr_j, res_j, keys)
                 agg_src.append(recon_j)
                 new_residual.append(
                     jax.tree.map(
@@ -314,7 +378,8 @@ class TransmitPhase:
         wire_paid = (share_f * ctx.select.astype(jnp.float32)[:, None]) @ layer_wire
         norm_sq = 0.0
         for j in range(len(g)):
-            norm_sq = norm_sq + share_f[:, j] * _client_sq_norms(agg_src[j], g[j])
+            ref_j = base[j] if base is not None else g[j]
+            norm_sq = norm_sq + share_f[:, j] * _client_sq_norms(agg_src[j], ref_j)
         return ctx._replace(
             agg_src=agg_src,
             residual=new_residual,
@@ -365,6 +430,89 @@ class MaskedPartialAggregator(Aggregator):
         return ctx._replace(
             new_global=masked_partial_aggregate(
                 ctx.agg_src, ctx.global_params, ctx.select, env.n_samples, ctx.share
+            )
+        )
+
+
+# --- staleness weighting (FedBuff, Nguyen et al. 2022) ----------------------
+
+def _stale_constant(s, exponent, threshold):
+    return jnp.ones_like(s)
+
+
+def _stale_polynomial(s, exponent, threshold):
+    return (1.0 + s) ** (-exponent)
+
+
+def _stale_hinge(s, exponent, threshold):
+    return jnp.where(s <= threshold, 1.0, 1.0 / (exponent * (s - threshold) + 1.0))
+
+
+STALENESS_FNS = {
+    "constant": _stale_constant,
+    "polynomial": _stale_polynomial,
+    "hinge": _stale_hinge,
+}
+
+
+def staleness_weight(
+    fn: str, staleness: jnp.ndarray, exponent: float = 0.5, threshold: float = 4.0
+) -> jnp.ndarray:
+    """(C,) merge discount for updates ``staleness`` aggregation events old.
+
+    ``constant`` ignores staleness (plain FedAvg weighting); ``polynomial``
+    is FedBuff's ``(1+s)^-a``; ``hinge`` is flat up to ``threshold`` then
+    decays as ``1/(a(s-b)+1)``. All return 1.0 at s=0.
+    """
+    if fn not in STALENESS_FNS:
+        raise KeyError(f"unknown staleness_fn {fn!r}; have {sorted(STALENESS_FNS)}")
+    return STALENESS_FNS[fn](jnp.asarray(staleness, jnp.float32), exponent, threshold)
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessAggregator(Aggregator):
+    """Buffered staleness-weighted merge (FedBuff-style): the server folds
+    each landing client's *delta* (vs its dispatch snapshot) into the
+    current global model, discounted by how many aggregation events passed
+    since that snapshot was cut.
+
+    ``new_g = g + sum_i v_i d_i / sum_i v_i`` per shared layer, with
+    ``v_i = select_i * |d_i| * s(staleness_i)``. With ``constant`` weights,
+    zero staleness, and full participation this reduces to FedAvg (the
+    sync-equivalence acceptance criterion). Works under the synchronous
+    barrier too (staleness defaults to zero there).
+    """
+
+    staleness_fn: str = "polynomial"
+    exponent: float = 0.5
+    threshold: float = 4.0
+
+    def aggregate(self, ctx, env):
+        if self.staleness_fn not in STALENESS_FNS:  # fail at trace time
+            raise KeyError(
+                f"unknown staleness_fn {self.staleness_fn!r}; have {sorted(STALENESS_FNS)}"
+            )
+        base = ctx.dispatch_params
+        n_layers = len(ctx.agg_src)
+        deltas = []
+        for j in range(n_layers):
+            ref_j = base[j] if base is not None else ctx.global_params[j]
+            deltas.append(
+                jax.tree.map(lambda a, r: a - r, ctx.agg_src[j], ref_j)
+            )
+        stale = (
+            ctx.staleness
+            if ctx.staleness is not None
+            else jnp.zeros(ctx.select.shape, jnp.int32)
+        )
+        w = (
+            ctx.select.astype(jnp.float32)
+            * env.n_samples.astype(jnp.float32)
+            * staleness_weight(self.staleness_fn, stale, self.exponent, self.threshold)
+        )
+        return ctx._replace(
+            new_global=staleness_weighted_merge(
+                deltas, ctx.global_params, w, ctx.share
             )
         )
 
@@ -466,7 +614,11 @@ _PHASE_REGISTRY: dict[str, dict[str, Callable]] = {
         "compose": ComposePersonalizer,
     },
     "trainer": {"sgd": SGDTrainer},
-    "aggregator": {"fedavg": FedAvgAggregator, "masked-partial": MaskedPartialAggregator},
+    "aggregator": {
+        "fedavg": FedAvgAggregator,
+        "masked-partial": MaskedPartialAggregator,
+        "staleness": StalenessAggregator,
+    },
     "evaluator": {"distributed": DistributedEvaluator},
     "layer-policy": {"full": FullShare, "static": StaticPMS, "dld": DLDPolicy},
 }

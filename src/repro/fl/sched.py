@@ -1,0 +1,572 @@
+"""Event-driven round schedulers — the host-side server loops.
+
+The round *pipeline* (repro.fl.api / repro.fl.phases) defines what one
+aggregation does; this module decides *when* aggregations happen on a
+simulated clock whose per-client completion times come from
+``CommModel.client_times`` (codec-compressed uplink + training flops,
+optionally scaled by a per-client heterogeneity lane):
+
+- ``SyncScheduler`` — the paper's Algorithm 1 barrier: every selected
+  client finishes before the server aggregates, so each round costs the
+  slowest straggler. Reproduces the pre-scheduler engine loop
+  bit-identically (guarded by the golden trajectories in
+  tests/test_fl_api.py and tests/test_sched.py).
+
+- ``AsyncScheduler`` — FedBuff-style buffered execution (Nguyen et al.
+  2022): clients are dispatched with a snapshot of the current global
+  model and finish after their simulated completion time; the server
+  aggregates as soon as ``buffer_k`` updates land, merging each delta with
+  a staleness discount (``phases.StalenessAggregator``), then re-dispatches
+  the landed clients the selector wants next. Wire traffic rides the same
+  codec path (per-client EF residuals included), so async + compression +
+  cost-aware selection compose.
+
+Both schedulers expose ``run(data, cfg, ...) -> FLHistory`` and are picked
+by ``make_scheduler(cfg)`` from ``cfg.scheduler.mode``;
+``repro.fl.engine.run_federated`` is the stable entry point that delegates
+here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import Codec, tree_wire_bytes
+from repro.core.aggregation import transmitted_parameters
+from repro.core.layersharing import layer_param_sizes, layer_share_mask
+from repro.core.metrics import BYTES_PER_PARAM, CommModel
+from repro.data.synthetic import FederatedDataset
+from repro.fl import phases
+from repro.fl.api import (
+    FLConfig,
+    RoundPipeline,
+    RoundState,
+    build_env,
+    build_round_step,
+    pipeline_from_config,
+)
+from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
+
+__all__ = [
+    "AsyncScheduler",
+    "AsyncState",
+    "ClientClock",
+    "SyncScheduler",
+    "build_async_step",
+    "make_scheduler",
+]
+
+
+# ---------------------------------------------------------------------------
+# simulated event clock
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ClientClock:
+    """Per-client completion-time sampler for the simulated event clock.
+
+    Durations are static per (codec, model, pms): cumulative per-layer
+    parameter and wire-byte prefixes turn the per-round
+    ``(pms > arange) @ sizes`` matmul the seed loop recomputed every round
+    into a single prefix lookup, computed once per experiment.
+    """
+
+    comm: CommModel
+    n_samples: np.ndarray      # (C,) float64 — |d_i|
+    epochs: int
+    params_prefix: np.ndarray  # (L+1,) — params in the first k layers
+    wire_prefix: np.ndarray    # (L+1,) float64 — codec uplink wire bytes
+    delay: np.ndarray          # (C,) float64 — multiplicative heterogeneity
+
+    @classmethod
+    def build(
+        cls,
+        global_params,
+        codec: Codec,
+        data: FederatedDataset,
+        cfg: FLConfig,
+        comm: CommModel,
+        client_delay: np.ndarray | None = None,
+    ) -> "ClientClock":
+        sizes = np.asarray(jax.device_get(layer_param_sizes(global_params)))
+        layer_wire = np.asarray(
+            [tree_wire_bytes(codec, layer) for layer in global_params], np.float64
+        )
+        if client_delay is None:
+            h = cfg.scheduler.heterogeneity
+            if h > 0.0:
+                client_delay = np.random.default_rng(cfg.seed + 4242).lognormal(
+                    0.0, h, data.n_clients
+                )
+            else:
+                client_delay = np.ones((data.n_clients,))
+        return cls(
+            comm=comm,
+            n_samples=np.asarray(data.n_samples, np.float64),
+            epochs=cfg.epochs,
+            params_prefix=np.concatenate([[0], np.cumsum(sizes)]),
+            wire_prefix=np.concatenate([[0.0], np.cumsum(layer_wire)]),
+            delay=np.asarray(client_delay, np.float64),
+        )
+
+    @property
+    def uniform(self) -> bool:
+        return bool(np.all(self.delay == 1.0))
+
+    def shared_params(self, pms: np.ndarray) -> np.ndarray:
+        """(C,) parameter count each client shares at depth ``pms``."""
+        return self.params_prefix[np.asarray(pms)]
+
+    def durations(self, pms: np.ndarray) -> np.ndarray:
+        """(C,) simulated seconds for one dispatch at share depth ``pms``:
+        uncompressed float32 downlink + local epochs + codec-compressed
+        uplink, scaled by the per-client delay lane."""
+        params = self.shared_params(pms)
+        flops = 6.0 * params * self.n_samples * self.epochs
+        return np.asarray(
+            self.comm.client_times(
+                self.wire_prefix[np.asarray(pms)],
+                flops,
+                rx_bytes_per_client=params * float(BYTES_PER_PARAM),
+                delay=self.delay,
+            ),
+            np.float64,
+        )
+
+
+# ---------------------------------------------------------------------------
+# shared scheduler initialization
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _RunSetup:
+    """Everything both schedulers need before their first event."""
+
+    pipeline: RoundPipeline
+    comm: CommModel
+    env: phases.RoundEnv
+    clock: ClientClock
+    g0: Any
+    loc0: Any          # g0 broadcast to every client lane
+    residual0: Any     # EF residuals (lossy codec) or None
+    pms0: int
+    n_layers: int
+    r_loop: jax.Array
+
+
+def _setup_run(
+    data: FederatedDataset,
+    cfg: FLConfig,
+    init_fn: Callable | None,
+    loss_fn: Callable,
+    acc_fn: Callable,
+    comm: CommModel | None,
+    pipeline: RoundPipeline | None,
+    client_delay: np.ndarray | None,
+) -> _RunSetup:
+    """Shared scheduler initialization. The rng split order matches the
+    pre-scheduler engine loop exactly (bit-identity depends on it)."""
+    pipeline = pipeline or pipeline_from_config(cfg)
+    comm = comm or CommModel()
+    rng = jax.random.PRNGKey(cfg.seed)
+    r_init, r_loop = jax.random.split(rng)
+    if init_fn is None:
+        init_fn = lambda r: init_mlp(r, data.n_features, data.n_classes)
+    g0 = init_fn(r_init)
+    n_layers = len(g0)
+    # every client starts from the same init (paper: server broadcasts w(0))
+    loc0 = jax.tree.map(
+        lambda gl: jnp.broadcast_to(gl, (data.n_clients,) + gl.shape), g0
+    )
+    # Algorithm 1: round 1 selects ALL clients; the shared piece is cut from
+    # the first round in PMS mode (DLD starts full: A=0 <= 0.25 -> all layers)
+    pms0 = cfg.pms_layers if cfg.personalization.mode == "pms" else n_layers
+    return _RunSetup(
+        pipeline=pipeline,
+        comm=comm,
+        env=build_env(data, cfg.seed, loss_fn=loss_fn, acc_fn=acc_fn),
+        clock=ClientClock.build(g0, pipeline.transmit.codec, data, cfg, comm, client_delay),
+        g0=g0,
+        loc0=loc0,
+        residual0=jax.tree.map(jnp.zeros_like, loc0) if pipeline.transmit.lossy else None,
+        pms0=pms0,
+        n_layers=n_layers,
+        r_loop=r_loop,
+    )
+
+
+# ---------------------------------------------------------------------------
+# SyncScheduler — Algorithm 1's barrier loop (bit-identical to the seed)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SyncScheduler:
+    """The synchronous barrier loop: one jitted round step per round, round
+    time = slowest selected client. This is the pre-scheduler engine loop
+    moved verbatim (same rng chain, same accounting) so the committed
+    golden trajectories stay bit-identical."""
+
+    def run(
+        self,
+        data: FederatedDataset,
+        cfg: FLConfig,
+        init_fn: Callable | None = None,
+        loss_fn: Callable = mlp_loss,
+        acc_fn: Callable = mlp_accuracy,
+        comm: CommModel | None = None,
+        progress: bool = False,
+        pipeline: RoundPipeline | None = None,
+        client_delay: np.ndarray | None = None,
+    ):
+        from repro.fl.engine import FLHistory
+
+        su = _setup_run(data, cfg, init_fn, loss_fn, acc_fn, comm, pipeline, client_delay)
+        comm, clock = su.comm, su.clock
+        state = RoundState(
+            global_params=su.g0,
+            local_params=su.loc0,
+            accuracy=jnp.zeros((data.n_clients,)),
+            select=jnp.ones((data.n_clients,), bool),
+            pms=jnp.full((data.n_clients,), su.pms0, jnp.int32),
+            rng=su.r_loop,
+            residual=su.residual0,
+            participation=jnp.zeros((data.n_clients,), jnp.int32),
+        )
+        round_step = jax.jit(build_round_step(su.env, su.pipeline))
+        n_samples = np.asarray(data.n_samples)
+        accs, sel_hist, tx_hist, pms_hist, times, wire_hist = [], [], [], [], [], []
+        for t in range(cfg.rounds):
+            state, out = round_step(state, jnp.asarray(t))
+            out = jax.device_get(out)
+            accs.append(out["acc"])
+            sel_hist.append(out["selected"])
+            tx_hist.append(float(out["tx_params"]))
+            pms_hist.append(out["pms"])
+            wire_pc = np.asarray(out["wire_per_client"], np.float64)  # (C,)
+            wire_hist.append(wire_pc.sum())
+            # simulated round time: slowest selected client — codec-compressed
+            # uplink, uncompressed float32 downlink (the server broadcasts the
+            # exact global model)
+            per_client_params = clock.shared_params(out["pms"])
+            flops = 6.0 * per_client_params * n_samples * cfg.epochs
+            times.append(
+                float(
+                    comm.round_time(
+                        jnp.asarray(wire_pc, jnp.float32),
+                        jnp.asarray(flops, jnp.float32),
+                        jnp.asarray(out["selected"]),
+                        rx_bytes_per_client=jnp.asarray(
+                            per_client_params * BYTES_PER_PARAM, jnp.float32
+                        ),
+                        # skipped entirely on the homogeneous default so the
+                        # seed trajectories stay bit-identical
+                        delay=None if clock.uniform else jnp.asarray(clock.delay, jnp.float32),
+                    )
+                )
+            )
+            if progress and (t % 10 == 0 or t == cfg.rounds - 1):
+                print(f"  round {t:3d}  acc={np.mean(out['acc']):.4f}  |S|={int(np.sum(out['selected']))}")
+
+        acc_pc = np.stack(accs)
+        tx = np.asarray(tx_hist)
+        wire = np.asarray(wire_hist)
+        times = np.asarray(times)
+        return FLHistory(
+            accuracy_mean=acc_pc.mean(axis=1),
+            accuracy_per_client=acc_pc,
+            selected=np.stack(sel_hist),
+            tx_params=tx,
+            tx_bytes_cum=np.cumsum(wire),
+            round_time=times,
+            pms=np.stack(pms_hist),
+            tx_wire_bytes=wire,
+            sim_clock=np.cumsum(times),
+            staleness_mean=np.zeros_like(times),
+        )
+
+
+# ---------------------------------------------------------------------------
+# AsyncScheduler — buffered staleness-weighted execution on an event queue
+# ---------------------------------------------------------------------------
+
+
+class AsyncState(NamedTuple):
+    """Carried async server state (a pytree; async-step input/output)."""
+
+    global_params: Any        # layered list, leaves (...) — current server model
+    dispatch_params: Any      # layered list, leaves (C, ...) — the snapshot
+                              # each client was dispatched with
+    local_params: Any         # layered list, leaves (C, ...)
+    pms: jnp.ndarray          # (C,) int32 — share depth frozen at dispatch
+    rng: jax.Array
+    residual: Any = None      # EF residuals (lossy codec only), (C, ...)
+    participation: Any = None  # (C,) int32 — cumulative landings
+
+
+def _lane(mask: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    return mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+def build_async_step(env: phases.RoundEnv, pipeline: RoundPipeline):
+    """Compose a RoundPipeline into the jitted buffered-aggregation step.
+
+    The step maps ``(AsyncState, t, land, staleness, idle, force, clock) ->
+    (AsyncState, out)``: the ``land`` cohort's updates (deltas vs their
+    dispatch snapshots, through the wire codec with EF) are merged into the
+    global model with staleness weights, everyone is evaluated, and the
+    selector decides which of the now-idle clients (this event's landers
+    plus previously parked ones) get re-dispatched with the new model.
+    ``force`` guards the event queue against draining: when nothing else is
+    in flight and the selector wants none of the idle clients, the landing
+    cohort is re-dispatched anyway.
+    """
+
+    def async_step(
+        state: AsyncState,
+        t: jnp.ndarray,
+        land: jnp.ndarray,        # (C,) bool — updates landing this event
+        staleness: jnp.ndarray,   # (C,) int32 — events since each snapshot
+        idle: jnp.ndarray,        # (C,) bool — parked before this event
+        force: jnp.ndarray,       # () bool — re-dispatch landers if no one else
+        clock: jnp.ndarray,       # (C,) float32 — latest landing time per client
+    ):
+        g = state.global_params
+        n_layers = len(g)
+        share = layer_share_mask(n_layers, state.pms)  # (C, L)
+
+        if pipeline.transmit.lossy:
+            rng, r_fit, r_sel, r_codec = jax.random.split(state.rng, 4)
+        else:
+            rng, r_fit, r_sel = jax.random.split(state.rng, 3)
+            r_codec = None
+
+        prev_part = (
+            state.participation
+            if state.participation is not None
+            else jnp.zeros(land.shape, jnp.int32)
+        )
+        participation = prev_part + land.astype(jnp.int32)
+        ctx = phases.RoundContext(
+            t=t,
+            global_params=g,
+            local_params=state.local_params,
+            select=land,
+            pms=state.pms,
+            share=share,
+            residual=state.residual,
+            participation=participation,
+            dispatch_params=state.dispatch_params,
+            staleness=staleness,
+            clock=clock,
+            rng_fit=r_fit,
+            rng_codec=r_codec,
+            rng_sel=r_sel,
+        )
+
+        # --- each lane trains from its own dispatch snapshot ---
+        ctx = ctx._replace(train_model=pipeline.personalizer.train_model(ctx, env))
+        ctx = pipeline.trainer.fit(ctx, env)
+        # lanes still in flight recompute the same deterministic result next
+        # event — only landing lanes commit their local model this event
+        ctx = ctx._replace(
+            new_local=jax.tree.map(
+                lambda new, old: jnp.where(_lane(land, new), new, old),
+                ctx.trained,
+                pipeline.personalizer.local_fallback(ctx, env),
+            )
+        )
+        # --- wire codec: landing clients' deltas vs their snapshots ---
+        ctx = pipeline.transmit.transmit(ctx, env)
+        # --- staleness-weighted buffered merge into the current model ---
+        ctx = pipeline.aggregator.aggregate(ctx, env)
+        # --- evaluation + next cohort, same phases as the barrier loop ---
+        ctx = ctx._replace(eval_model=pipeline.personalizer.eval_model(ctx, env))
+        ctx = pipeline.evaluator.evaluate(ctx, env)
+        ctx = pipeline.selector.select(ctx, env)
+        ctx = ctx._replace(next_pms=pipeline.layer_policy.next_pms(ctx, env, n_layers))
+
+        # --- re-dispatch: idle clients (landers + parked) the selector wants;
+        # never let the queue drain ---
+        idle_now = idle | land
+        redisp_sel = ctx.next_select & idle_now
+        need_force = force & ~jnp.any(redisp_sel)
+        redisp = redisp_sel | (land & need_force)
+        new_dispatch = jax.tree.map(
+            lambda d, gl: jnp.where(_lane(redisp, d), jnp.broadcast_to(gl, d.shape), d),
+            state.dispatch_params,
+            ctx.new_global,
+        )
+
+        land_f = land.astype(jnp.float32)
+        new_state = AsyncState(
+            global_params=ctx.new_global,
+            dispatch_params=new_dispatch,
+            local_params=ctx.new_local,
+            # pms is frozen at dispatch (like the snapshot): only re-dispatched
+            # lanes take the layer policy's new depth, so the share mask a
+            # client lands with is the one its completion time was charged for
+            pms=jnp.where(redisp, ctx.next_pms, state.pms),
+            rng=rng,
+            residual=ctx.residual,
+            participation=participation,
+        )
+        out = {
+            "acc": ctx.accuracy,
+            "selected": land,
+            "tx_params": transmitted_parameters(land, share, layer_param_sizes(g)),
+            "pms": state.pms,
+            "wire_per_client": ctx.wire_paid,
+            "redisp": redisp,
+            "next_pms": ctx.next_pms,
+            "staleness_mean": jnp.sum(land_f * staleness.astype(jnp.float32))
+            / jnp.maximum(jnp.sum(land_f), 1.0),
+        }
+        return new_state, out
+
+    return async_step
+
+
+@dataclasses.dataclass
+class AsyncScheduler:
+    """FedBuff-style event-driven server loop.
+
+    A host-side event queue tracks each in-flight client's simulated finish
+    time (``ClientClock``). Each of ``cfg.rounds`` aggregation events pops
+    the ``buffer_k`` earliest arrivals (fewer only if fewer are in flight),
+    advances the clock to the last of them plus server latency, and runs
+    the jitted async step: staleness-weighted merge, eval, selection,
+    re-dispatch. ``buffer_k=0`` (the config default) resolves to ``C // 2``.
+
+    The trajectory is a pure function of (data, cfg, pipeline, delays):
+    device work is deterministic, and the queue breaks finish-time ties by
+    client index (stable argsort) — same seed + config => identical
+    FLHistory.
+    """
+
+    buffer_k: int | None = None  # override; None -> cfg.scheduler.buffer_k
+
+    def run(
+        self,
+        data: FederatedDataset,
+        cfg: FLConfig,
+        init_fn: Callable | None = None,
+        loss_fn: Callable = mlp_loss,
+        acc_fn: Callable = mlp_accuracy,
+        comm: CommModel | None = None,
+        progress: bool = False,
+        pipeline: RoundPipeline | None = None,
+        client_delay: np.ndarray | None = None,
+    ):
+        from repro.fl.engine import FLHistory
+
+        su = _setup_run(data, cfg, init_fn, loss_fn, acc_fn, comm, pipeline, client_delay)
+        comm, clock_fn = su.comm, su.clock
+        # fail fast on a sync-built pipeline: the barrier aggregators average
+        # absolute parameters and would silently mis-merge stale snapshots
+        if isinstance(
+            su.pipeline.aggregator,
+            (phases.FedAvgAggregator, phases.MaskedPartialAggregator),
+        ):
+            raise ValueError(
+                "AsyncScheduler needs an aggregator that merges deltas against "
+                "dispatch snapshots, got "
+                f"{type(su.pipeline.aggregator).__name__}; build the pipeline "
+                "from an async-mode config (scheduler.mode='async') or swap in "
+                "phases.StalenessAggregator"
+            )
+        c = data.n_clients
+        state = AsyncState(
+            global_params=su.g0,
+            dispatch_params=su.loc0,  # Algorithm 1: everyone starts from w(0)
+            local_params=su.loc0,
+            pms=jnp.full((c,), su.pms0, jnp.int32),
+            rng=su.r_loop,
+            residual=su.residual0,
+            participation=jnp.zeros((c,), jnp.int32),
+        )
+        step = jax.jit(build_async_step(su.env, su.pipeline))
+        buffer_k = self.buffer_k or cfg.scheduler.buffer_k or max(1, c // 2)
+
+        # --- host event queue: everyone dispatched at t=0 with w(0) ---
+        pms_np = np.full((c,), su.pms0, np.int32)
+        finish = clock_fn.durations(pms_np)
+        in_flight = np.ones((c,), bool)
+        dispatch_version = np.zeros((c,), np.int64)
+        land_clock = np.zeros((c,), np.float32)
+        sim_clock = 0.0
+        version = 0
+
+        accs, sel_hist, tx_hist, pms_hist = [], [], [], []
+        times, wire_hist, clock_hist, stale_hist = [], [], [], []
+        for t in range(cfg.rounds):
+            k = max(1, min(buffer_k, int(in_flight.sum())))
+            order = np.argsort(np.where(in_flight, finish, np.inf), kind="stable")
+            landers = order[:k]
+            land = np.zeros((c,), bool)
+            land[landers] = True
+            new_clock = float(finish[landers].max()) + comm.server_latency_s
+            staleness = np.where(land, version - dispatch_version, 0).astype(np.int32)
+            idle = ~in_flight
+            force = bool(int(in_flight.sum()) - k == 0)
+            land_clock = np.where(land, np.float32(new_clock), land_clock)
+
+            state, out = step(
+                state,
+                jnp.asarray(t),
+                jnp.asarray(land),
+                jnp.asarray(staleness),
+                jnp.asarray(idle),
+                jnp.asarray(force),
+                jnp.asarray(land_clock),
+            )
+            out = jax.device_get(out)
+
+            redisp = np.asarray(out["redisp"])
+            pms_next = np.asarray(out["next_pms"], np.int32)
+            in_flight = (in_flight & ~land) | redisp
+            dispatch_version = np.where(redisp, version + 1, dispatch_version)
+            finish = np.where(redisp, new_clock + clock_fn.durations(pms_next), finish)
+
+            accs.append(out["acc"])
+            sel_hist.append(land)
+            tx_hist.append(float(out["tx_params"]))
+            pms_hist.append(out["pms"])
+            wire_hist.append(np.asarray(out["wire_per_client"], np.float64).sum())
+            times.append(new_clock - sim_clock)
+            clock_hist.append(new_clock)
+            stale_hist.append(float(out["staleness_mean"]))
+            sim_clock = new_clock
+            version += 1
+            if progress and (t % 10 == 0 or t == cfg.rounds - 1):
+                print(
+                    f"  event {t:3d}  acc={np.mean(out['acc']):.4f}  |K|={int(land.sum())}  "
+                    f"clock={new_clock:.2f}s  staleness={stale_hist[-1]:.2f}"
+                )
+
+        acc_pc = np.stack(accs)
+        wire = np.asarray(wire_hist)
+        return FLHistory(
+            accuracy_mean=acc_pc.mean(axis=1),
+            accuracy_per_client=acc_pc,
+            selected=np.stack(sel_hist),
+            tx_params=np.asarray(tx_hist),
+            tx_bytes_cum=np.cumsum(wire),
+            round_time=np.asarray(times),
+            pms=np.stack(pms_hist),
+            tx_wire_bytes=wire,
+            sim_clock=np.asarray(clock_hist),
+            staleness_mean=np.asarray(stale_hist),
+        )
+
+
+def make_scheduler(cfg: FLConfig):
+    """Scheduler for ``cfg.scheduler.mode`` (the engine's dispatch point)."""
+    return AsyncScheduler() if cfg.scheduler.mode == "async" else SyncScheduler()

@@ -1,0 +1,290 @@
+"""Scheduler layer (repro.fl.sched): SyncScheduler bit-identity against the
+committed golden trajectories, AsyncScheduler determinism and sync
+equivalence, staleness weighting, and the event clock."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SchedulerConfig
+from repro.core.metrics import BYTES_PER_PARAM, CommModel
+from repro.data import make_federated_classification
+from repro.fl import (
+    AsyncScheduler,
+    FLConfig,
+    SyncScheduler,
+    make_scheduler,
+    run_federated,
+)
+from repro.fl.phases import STALENESS_FNS, StalenessAggregator, get_phase, staleness_weight
+from repro.fl.sched import ClientClock
+
+from test_fl_api import _GOLDEN  # the 4 committed golden trajectories
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    return make_federated_classification(
+        n_clients=8, n_classes=4, n_features=20,
+        samples_per_client_range=(60, 90), dirichlet_alpha=50.0,
+        client_shift=0.05, class_sep=5.0, seed=1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# SchedulerConfig validation + plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_config_validation():
+    with pytest.raises(ValueError, match="scheduler mode"):
+        SchedulerConfig(mode="bogus")
+    with pytest.raises(ValueError, match="buffer_k"):
+        SchedulerConfig(buffer_k=-1)
+    with pytest.raises(ValueError, match="staleness_fn"):
+        SchedulerConfig(staleness_fn="exponential")
+    with pytest.raises(ValueError, match="heterogeneity"):
+        SchedulerConfig(heterogeneity=-0.5)
+    with pytest.raises(ValueError, match="staleness_exponent"):
+        SchedulerConfig(staleness_exponent=0.0)
+
+
+def test_flconfig_scheduler_group_flat_and_nested():
+    cfg = FLConfig(scheduler="async", buffer_k=4, staleness_fn="hinge")
+    assert cfg.scheduler == SchedulerConfig(mode="async", buffer_k=4, staleness_fn="hinge")
+    assert cfg.buffer_k == 4
+    cfg2 = FLConfig(scheduler=SchedulerConfig(mode="async", buffer_k=4, staleness_fn="hinge"))
+    assert cfg2.scheduler == cfg.scheduler
+    assert FLConfig().scheduler.mode == "sync"  # default stays the barrier
+    with pytest.raises(ValueError, match="not both"):
+        FLConfig(scheduler=SchedulerConfig(mode="async"), buffer_k=2)
+
+
+def test_make_scheduler_dispatch():
+    assert isinstance(make_scheduler(FLConfig()), SyncScheduler)
+    assert isinstance(make_scheduler(FLConfig(scheduler="async")), AsyncScheduler)
+
+
+def test_async_pipeline_uses_staleness_aggregator():
+    from repro.fl import pipeline_from_config
+
+    pipe = pipeline_from_config(FLConfig(scheduler="async", staleness_fn="hinge"))
+    assert isinstance(pipe.aggregator, StalenessAggregator)
+    assert pipe.aggregator.staleness_fn == "hinge"
+    assert isinstance(get_phase("aggregator", "staleness"), StalenessAggregator)
+
+
+# ---------------------------------------------------------------------------
+# staleness weight shapes
+# ---------------------------------------------------------------------------
+
+
+def test_staleness_weight_constant():
+    s = jnp.asarray([0, 1, 5, 100])
+    np.testing.assert_array_equal(np.asarray(staleness_weight("constant", s)), 1.0)
+
+
+def test_staleness_weight_polynomial():
+    s = jnp.asarray([0.0, 1.0, 3.0, 15.0])
+    w = np.asarray(staleness_weight("polynomial", s, exponent=0.5))
+    np.testing.assert_allclose(w, (1.0 + np.asarray(s)) ** -0.5, rtol=1e-6)
+    assert w[0] == 1.0 and np.all(np.diff(w) < 0)  # 1 at s=0, strictly decaying
+
+
+def test_staleness_weight_hinge():
+    s = jnp.asarray([0.0, 4.0, 5.0, 10.0])
+    w = np.asarray(staleness_weight("hinge", s, exponent=0.5, threshold=4.0))
+    np.testing.assert_allclose(w[:2], 1.0)              # flat up to the knee
+    np.testing.assert_allclose(w[2], 1.0 / 1.5, rtol=1e-6)
+    np.testing.assert_allclose(w[3], 1.0 / 4.0, rtol=1e-6)
+    assert set(STALENESS_FNS) == {"constant", "polynomial", "hinge"}
+
+
+def test_staleness_weight_unknown_raises():
+    with pytest.raises(KeyError, match="staleness_fn"):
+        staleness_weight("bogus", jnp.zeros(3))
+
+
+# ---------------------------------------------------------------------------
+# SyncScheduler: bit-identical to the pre-scheduler engine loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(_GOLDEN))
+def test_sync_scheduler_matches_goldens(small_ds, name):
+    """Driving SyncScheduler directly reproduces all 4 committed golden
+    trajectories bit-for-bit (the run_federated delegation path is covered
+    by tests/test_fl_api.py)."""
+    gold = _GOLDEN[name]
+    h = SyncScheduler().run(small_ds, FLConfig(rounds=5, epochs=1, **gold["cfg"]))
+    got_acc = np.asarray(h.accuracy_mean, np.float32)
+    want_acc = np.frombuffer(bytes.fromhex(gold["acc_hex"]), np.dtype("<f4"))
+    np.testing.assert_array_equal(got_acc, want_acc)
+    got_sel = ["".join("1" if b else "0" for b in row) for row in np.asarray(h.selected)]
+    assert got_sel == gold["selected"]
+
+
+def test_sync_history_has_clock_and_zero_staleness(small_ds):
+    h = run_federated(small_ds, FLConfig(rounds=4, epochs=1))
+    np.testing.assert_allclose(h.sim_clock, np.cumsum(h.round_time))
+    np.testing.assert_array_equal(h.staleness_mean, 0.0)
+
+
+def test_client_clock_prefix_matches_mask_matmul(small_ds):
+    """The hoisted prefix lookup equals the per-round (pms > arange) @ sizes
+    matmul the seed loop recomputed."""
+    from repro.core.layersharing import layer_param_sizes
+    from repro.models.mlp import init_mlp
+
+    g = init_mlp(jax.random.PRNGKey(0), small_ds.n_features, small_ds.n_classes)
+    clock = ClientClock.build(g, FLConfig().codec_obj(), small_ds, FLConfig(), CommModel())
+    sizes = np.asarray(jax.device_get(layer_param_sizes(g)))
+    for pms in ([4] * 8, [1, 2, 3, 4, 1, 2, 3, 4], [1] * 8):
+        pms = np.asarray(pms)
+        expect = (pms[:, None] > np.arange(len(sizes))[None, :]) @ sizes
+        np.testing.assert_array_equal(clock.shared_params(pms), expect)
+    # durations scale with the delay lane and include both directions + flops
+    d = clock.durations(np.full(8, 4))
+    assert (d > 0).all()
+    clock2 = dataclasses.replace(clock, delay=np.full(8, 3.0))
+    np.testing.assert_allclose(clock2.durations(np.full(8, 4)), 3.0 * d, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# AsyncScheduler: sync equivalence, determinism, codec composition
+# ---------------------------------------------------------------------------
+
+
+def test_async_full_buffer_matches_sync(small_ds):
+    """Acceptance criterion: AsyncScheduler(buffer_k=C_selected,
+    staleness_fn=constant) with uniform client clocks matches sync
+    aggregation within float tolerance."""
+    kw = dict(strategy="fedavg", personalization="none", fraction=1.0,
+              rounds=5, epochs=1)
+    sync = run_federated(small_ds, FLConfig(**kw))
+    asy = run_federated(
+        small_ds,
+        FLConfig(scheduler="async", buffer_k=small_ds.n_clients,
+                 staleness_fn="constant", **kw),
+    )
+    np.testing.assert_allclose(asy.accuracy_mean, sync.accuracy_mean, atol=1e-5)
+    np.testing.assert_allclose(asy.accuracy_per_client, sync.accuracy_per_client, atol=1e-5)
+    np.testing.assert_array_equal(asy.selected, sync.selected)
+    np.testing.assert_array_equal(asy.tx_params, sync.tx_params)
+    np.testing.assert_array_equal(asy.staleness_mean, 0.0)  # nobody is stale
+
+
+def test_async_deterministic(small_ds):
+    cfg = FLConfig(strategy="acsp-fl", personalization="dld", rounds=6, epochs=1,
+                   codec="int8", scheduler="async", buffer_k=4)
+    delay = np.ones(small_ds.n_clients)
+    delay[-1] = 25.0
+    a = run_federated(small_ds, cfg, client_delay=delay)
+    b = run_federated(small_ds, cfg, client_delay=delay)
+    for field_a, field_b in zip(a, b):
+        np.testing.assert_array_equal(field_a, field_b)
+
+
+def test_async_with_lossy_codec_and_straggler(small_ds):
+    """The new scenario family: async + compression (int8 + EF) + adaptive
+    selection, with a fat straggler. Updates land stale, the codec wire
+    accounting still flows, and the model still learns."""
+    cfg = FLConfig(strategy="acsp-fl", personalization="dld", rounds=8, epochs=1,
+                   codec="int8", scheduler="async", buffer_k=4)
+    delay = np.ones(small_ds.n_clients)
+    delay[:2] = 30.0
+    h = run_federated(small_ds, cfg, client_delay=delay)
+    assert np.isfinite(h.accuracy_mean).all()
+    assert h.accuracy_mean[-1] > h.accuracy_mean[0]
+    assert (h.staleness_mean > 0).any()          # buffered merges saw stale updates
+    assert (np.diff(h.sim_clock) >= 0).all()     # the event clock is monotone
+    # int8 wire accounting: strictly below the float32 analytic bytes
+    assert h.tx_bytes_cum[-1] < 4.0 * h.tx_params.sum() / 3.5
+
+
+def test_async_buffer_k_caps_landings(small_ds):
+    h = run_federated(
+        small_ds,
+        FLConfig(strategy="fedavg", personalization="none", fraction=1.0,
+                 rounds=6, epochs=1, scheduler="async", buffer_k=3,
+                 heterogeneity=0.8),
+    )
+    assert (h.selected.sum(axis=1) <= 3).all()
+    assert (h.selected.sum(axis=1) >= 1).all()
+
+
+def test_async_rejects_sync_built_pipeline(small_ds):
+    """Barrier aggregators average absolute params and would silently
+    mis-merge stale snapshots — the async scheduler fails fast instead."""
+    from repro.fl import pipeline_from_config
+
+    sync_pipe = pipeline_from_config(FLConfig())
+    with pytest.raises(ValueError, match="StalenessAggregator"):
+        run_federated(
+            small_ds, FLConfig(rounds=2, scheduler="async"), pipeline=sync_pipe
+        )
+
+
+def test_async_ft_personalization_runs(small_ds):
+    """FT personalization picks per-client against the dispatch snapshot."""
+    h = run_federated(
+        small_ds,
+        FLConfig(strategy="oort", personalization="ft", fraction=0.5,
+                 rounds=5, epochs=1, scheduler="async", buffer_k=4,
+                 heterogeneity=0.5),
+    )
+    assert np.isfinite(h.accuracy_mean).all()
+    assert h.accuracy_mean[-1] > h.accuracy_mean[0]
+
+
+@pytest.mark.slow
+def test_async_beats_sync_on_straggler_wall_clock(small_ds):
+    """The tentpole's point: with a fat straggler tail, buffered async
+    execution reaches a common accuracy target in far less simulated time
+    than the barrier loop (which pays the 40x straggler every round)."""
+    kw = dict(strategy="fedavg", personalization="none", fraction=1.0, epochs=2)
+    delay = np.ones(small_ds.n_clients)
+    delay[-2:] = 40.0
+    sync = run_federated(small_ds, FLConfig(rounds=6, **kw), client_delay=delay)
+    asy = run_federated(
+        small_ds,
+        FLConfig(rounds=12, scheduler="async", buffer_k=small_ds.n_clients // 2, **kw),
+        client_delay=delay,
+    )
+    # target both schedules reach: the sync run's second-round accuracy
+    target = float(sync.accuracy_mean[1])
+    t_sync = float(sync.sim_clock[1])
+    hit = np.nonzero(asy.accuracy_mean >= target)[0]
+    assert hit.size, "async never reached the common target"
+    assert float(asy.sim_clock[hit[0]]) < t_sync
+
+
+@pytest.mark.slow
+def test_async_codec_grid_end_to_end(small_ds):
+    """Async x codec composition across the lossy codec family."""
+    for codec in ("float32", "int8", "topk+int8"):
+        h = run_federated(
+            small_ds,
+            FLConfig(strategy="acsp-fl", personalization="dld", rounds=6, epochs=1,
+                     codec=codec, topk_fraction=0.25,
+                     scheduler="async", buffer_k=4, heterogeneity=0.6),
+        )
+        assert np.isfinite(h.accuracy_mean).all(), codec
+        assert h.accuracy_mean[-1] > h.accuracy_mean[0], codec
+
+
+# ---------------------------------------------------------------------------
+# oort-fair end-to-end (participation-aware fairness, ROADMAP item)
+# ---------------------------------------------------------------------------
+
+
+def test_oort_fair_runs_and_spreads_participation(small_ds):
+    cfg = dict(personalization="none", fraction=0.25, rounds=12, epochs=1)
+    fair = run_federated(small_ds, FLConfig(strategy="oort-fair", **cfg))
+    plain = run_federated(small_ds, FLConfig(strategy="oort", **cfg))
+    assert np.isfinite(fair.accuracy_mean).all()
+    # the fairness bonus spreads selections over more distinct clients
+    assert (fair.selected.any(axis=0).sum()) >= (plain.selected.any(axis=0).sum())

@@ -112,3 +112,31 @@ def test_get_strategy_registry():
         assert get_strategy(name) is not None
     with pytest.raises(KeyError):
         get_strategy("nope")
+
+
+def test_oort_fair_requires_participation_count():
+    from repro.core.selection import OortFair
+
+    with pytest.raises(ValueError, match="participation_count"):
+        OortFair().select(metrics(jnp.zeros(8)), jnp.asarray(0), jax.random.PRNGKey(0))
+
+
+def test_oort_fair_boosts_rarely_selected_clients():
+    """Equal utility otherwise, clients with low participation counts win."""
+    from repro.core.selection import OortFair
+
+    c = 8
+    m = metrics(jnp.zeros(c))._replace(
+        participation_count=jnp.asarray([20, 20, 20, 20, 0, 0, 0, 0], jnp.int32)
+    )
+    mask = np.asarray(
+        OortFair(fraction=0.5, epsilon=0.0).select(m, jnp.asarray(10), jax.random.PRNGKey(0))
+    )
+    assert mask.tolist() == [False] * 4 + [True] * 4
+
+
+def test_oort_fair_registry_entry():
+    from repro.core.selection import OortFair
+
+    strat = get_strategy("oort-fair", fraction=0.25, fairness=2.0)
+    assert isinstance(strat, OortFair) and strat.fairness == 2.0
