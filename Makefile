@@ -1,7 +1,9 @@
 # CI/dev entry points. `make ci` is what a pipeline should run: the full
 # test set (including tests marked slow, which tier-1 `make test` skips via
 # pytest.ini addopts) plus the benchmark smoke so perf entry points can't
-# rot (kernel + codec + selection grid + sync/async scheduler grid).
+# rot (kernel + codec + selection grid + sync/async scheduler grid + the
+# cohort-vs-dense scale bench, which rewrites BENCH_scale.json each run so
+# the O(K)-execution speedup is tracked as a trajectory).
 
 PY := PYTHONPATH=src python
 

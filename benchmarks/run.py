@@ -31,6 +31,7 @@ def main() -> None:
         comm_overhead,
         kernel_bench,
         roofline,
+        scale_bench,
         selection_bench,
         selection_frequency,
         table3_variants,
@@ -47,12 +48,14 @@ def main() -> None:
         ("codec_bench (comm subsystem)", codec_bench.run),
         ("selection_bench (strategy x codec grid)", selection_bench.run),
         ("async_bench (sync vs async scheduler grid)", async_bench.run),
+        ("scale_bench (cohort O(K) vs dense O(C) rounds)", scale_bench.run),
         ("roofline (deliverable g)", roofline.run),
     ]
     if args.smoke:  # CI smoke: the perf + pipeline entry points, tiny sizes
         suites = [
             s for s in suites
-            if s[0].split(" ")[0] in ("kernel_bench", "codec_bench", "selection_bench", "async_bench")
+            if s[0].split(" ")[0]
+            in ("kernel_bench", "codec_bench", "selection_bench", "async_bench", "scale_bench")
         ]
     t00 = time.time()
     for name, fn in suites:

@@ -1,0 +1,151 @@
+"""Scale bench — cohort execution O(K) vs dense O(C) population compute.
+
+The tentpole claim of the cohort runtime: with adaptive selection training
+a small cohort K out of a population C, per-round wall-clock and
+trained-state memory should scale with K, not C. For each population size
+this bench runs the same synchronous round step three ways —
+
+  dense   : cohort_size=0  -> K = C lanes (the seed's dense execution)
+  cohort  : cohort_size=K  -> K gathered lanes, full-population eval
+  cohort+eval5 : cohort_size=K, eval_every=5 -> the O(C) distributed eval
+                 thinned too, so the remaining population cost amortizes
+
+— at fixed K = 50 (fraction = K/C, the ISSUE's 0.025 at C=2000) and
+reports mean per-round step wall-clock plus the analytic trained-state
+slab (lanes x model bytes, the live per-lane training copy). Acceptance:
+>=5x dense/cohort step-time ratio at C=2000.
+
+Emits experiments/bench/scale_bench.csv and BENCH_scale.json (repo root,
+committed — the bench trajectory is tracked from PR 4 onward). Smoke mode
+(REPRO_BENCH_SMOKE=1, via ``benchmarks.run --smoke``) sweeps a C=200 quick
+grid; run standalone with
+``PYTHONPATH=src python -m benchmarks.scale_bench [--smoke]``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import write_csv
+from repro.data import make_federated_classification
+from repro.fl import FLConfig, api
+from repro.models.mlp import init_mlp
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+HIDDEN = (64, 64)          # small MLP: (C, P) dense slabs stay CPU-friendly
+EPOCHS = 3                 # make local training the dominant per-lane cost
+TARGET_SPEEDUP_C2000 = 5.0
+
+
+def _bench_case(ds, k: int, cohort_size: int, eval_every: int, rounds: int) -> dict:
+    """Mean per-round step wall-clock + analytic trained-state slab."""
+    c = ds.n_clients
+    cfg = FLConfig(
+        strategy="fedavg", personalization="none", fraction=k / c,
+        epochs=EPOCHS, rounds=rounds,
+        cohort_size=cohort_size, eval_every=eval_every,
+    )
+    env = api.build_env(ds, cfg.seed)
+    pipe = api.pipeline_from_config(cfg)
+    g0 = init_mlp(jax.random.PRNGKey(0), ds.n_features, ds.n_classes, hidden=HIDDEN)
+    state = api.RoundState(
+        global_params=g0,
+        local_params=None,  # NoPersonalizer is stateless: no (C, P) carry
+        accuracy=jnp.zeros((c,)),
+        select=jnp.ones((c,), bool),
+        pms=jnp.full((c,), len(g0), jnp.int32),
+        rng=jax.random.PRNGKey(1),
+        participation=jnp.zeros((c,), jnp.int32),  # non-None: keeps the
+        loss=jnp.zeros((c,)),                      # carried pytree structure
+        update_norm=jnp.zeros((c,)),               # stable (no re-jit at t=1)
+    )
+    step = jax.jit(api.build_round_step(env, pipe, cfg.execution))
+    state, _ = step(state, jnp.asarray(0))  # compile + warm start (selects all)
+    jax.block_until_ready(state)
+    times = []
+    for t in range(1, rounds + 1):
+        t0 = time.perf_counter()
+        state, _ = step(state, jnp.asarray(t))
+        jax.block_until_ready(state)
+        times.append(time.perf_counter() - t0)
+    lanes = cfg.execution.resolved_cohort(c)
+    model_bytes = sum(
+        leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(g0)
+    )
+    return {
+        "step_ms": 1e3 * float(np.mean(times)),
+        "lanes": lanes,
+        "trained_state_mb": lanes * model_bytes / 1e6,
+    }
+
+
+def run():
+    k = 16 if SMOKE else 50
+    pops = [100, 200] if SMOKE else [100, 1000, 2000, 5000]
+    rounds = 2 if SMOKE else 3
+    ev_rounds = rounds if SMOKE else 5  # include one eval event at eval_every=5
+
+    header = ["C", "K", "mode", "lanes", "step_ms", "trained_state_mb", "speedup_vs_dense"]
+    rows, records = [], []
+    speedup_at_2000 = None
+    for c in pops:
+        ds = make_federated_classification(
+            n_clients=c, n_classes=5, n_features=20,
+            samples_per_client_range=(24, 32), dirichlet_alpha=50.0, seed=0,
+        )
+        cases = {
+            "dense": _bench_case(ds, k, 0, 1, rounds),
+            "cohort": _bench_case(ds, k, k, 1, rounds),
+            "cohort+eval5": _bench_case(ds, k, k, 5, ev_rounds),
+        }
+        for mode, r in cases.items():
+            speed = cases["dense"]["step_ms"] / r["step_ms"]
+            rows.append([
+                c, k, mode, r["lanes"],
+                f"{r['step_ms']:.2f}", f"{r['trained_state_mb']:.4f}", f"{speed:.2f}",
+            ])
+            records.append({"C": c, "K": k, "mode": mode, **r, "speedup_vs_dense": speed})
+            print(
+                f"  C={c:5d} {mode:>12s}: lanes={r['lanes']:5d}  "
+                f"step={r['step_ms']:8.2f}ms  slab={r['trained_state_mb']:8.4f}MB  "
+                f"{speed:5.2f}x vs dense"
+            )
+        if c == 2000:
+            speedup_at_2000 = cases["dense"]["step_ms"] / cases["cohort"]["step_ms"]
+
+    path = write_csv("scale_bench", header, rows)
+    summary = {
+        "bench": "scale_bench",
+        "smoke": SMOKE,
+        "K": k,
+        "populations": pops,
+        "hidden": list(HIDDEN),
+        "epochs": EPOCHS,
+        "rows": records,
+        "target_speedup_at_C2000": TARGET_SPEEDUP_C2000,
+        "speedup_at_C2000": speedup_at_2000,
+    }
+    with open("BENCH_scale.json", "w") as f:
+        json.dump(summary, f, indent=2)
+    if speedup_at_2000 is not None and speedup_at_2000 < TARGET_SPEEDUP_C2000:
+        print(
+            f"!! speedup at C=2000 {speedup_at_2000:.2f}x below the "
+            f"{TARGET_SPEEDUP_C2000}x acceptance bar"
+        )
+        sys.exit(1)
+    return path
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        SMOKE = True
+    run()

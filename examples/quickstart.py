@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python examples/quickstart.py [--codec int8] [--strategy oort-wire]
                                                  [--mode async --buffer-k 8]
+                                                 [--n-clients 2000 --cohort-size 50]
 
 Reproduces the paper's headline behaviour in ~a minute on CPU: adaptive
 selection shrinks the cohort, DLD shrinks the shared piece, accuracy stays
@@ -13,7 +14,9 @@ and the participation-fair ``oort-fair``. ``--mode async`` swaps the
 barrier loop for the event-driven FedBuff-style scheduler
 (repro.fl.sched): the server merges as soon as ``--buffer-k`` updates
 land, weighting stale updates down, so a straggler no longer pins the
-simulated round clock.
+simulated round clock. ``--n-clients`` scales the population up and
+``--cohort-size`` bounds how many client lanes a round physically
+gathers/trains (cohort execution: compute is O(K), not O(C)).
 """
 
 import argparse
@@ -27,6 +30,23 @@ from repro.data import make_har_dataset
 from repro.fl import FLConfig, SchedulerConfig, run_federated
 
 CUSTOM_ROUND_HELP = """
+cohort execution (O(K) rounds):
+  The round step executes as gather -> compute -> scatter: selection
+  resolves to at most --cohort-size client ids, only those clients' data
+  shards / local params / EF residuals are gathered into (K, ...) lanes
+  with jnp.take, the compute phases run on K lanes, and results scatter
+  back into the (C, ...) server state with .at[idx].set. Per-round compute
+  and trained-state memory are O(K) regardless of the population, so
+
+    PYTHONPATH=src python examples/quickstart.py --n-clients 2000 --cohort-size 50
+
+  trains at most 50 lanes per round against a 2000-client population (>=5x
+  step time vs dense; see benchmarks/scale_bench.py + BENCH_scale.json).
+  --cohort-size 0 (default) executes the full population, bit-identical to
+  the dense engine. ExecutionConfig(eval_every=n) additionally thins the
+  O(C) distributed eval to every n-th round; SchedulerConfig
+  (max_concurrency=M) caps async in-flight dispatch slots at M.
+
 composing a custom round:
   A federated round is a pipeline of swappable phases (repro.fl.phases):
 
@@ -40,7 +60,8 @@ composing a custom round:
     from repro.core.selection import get_strategy
     from repro.fl import api, phases, run_federated
 
-    cfg = api.FLConfig(strategy="acsp-fl", personalization="dld", rounds=30)
+    cfg = api.FLConfig(strategy="acsp-fl", personalization="dld", rounds=30,
+                       cohort_size=16)
     pipe = api.pipeline_from_config(cfg)
     pipe = dataclasses.replace(
         pipe,
@@ -72,6 +93,12 @@ def main():
                     help="async: aggregate once this many updates land (0 = C//2)")
     ap.add_argument("--heterogeneity", type=float, default=0.0,
                     help="lognormal sigma of per-client delay multipliers (stragglers)")
+    ap.add_argument("--n-clients", type=int, default=0,
+                    help="override the dataset's population size (0 = paper's 30; "
+                         ">=2000 uses the vectorized population generator)")
+    ap.add_argument("--cohort-size", type=int, default=0,
+                    help="max client lanes a round gathers/trains (0 = full "
+                         "population, the dense-equivalent path)")
     args = ap.parse_args()
     # fail fast on a bad codec spec or strategy name before the
     # (minutes-long) baseline runs
@@ -80,15 +107,18 @@ def main():
     make_codec(args.codec, topk_fraction=args.topk_fraction)
     get_strategy(args.strategy)
 
-    ds = make_har_dataset("uci-har", seed=0)
-    print(f"dataset: {ds.name} — {ds.n_clients} clients, {ds.n_features} features, {ds.n_classes} classes")
+    ds = make_har_dataset("uci-har", seed=0, n_clients=args.n_clients or None)
+    print(f"dataset: {ds.name} — {ds.n_clients} clients, {ds.n_features} features, {ds.n_classes} classes"
+          + (f" (cohort_size={args.cohort_size})" if args.cohort_size else ""))
 
     print("\n[1/2] FedAvg baseline (100% participation, full model, float32 wire)")
     # same heterogeneity lane as the adaptive run (seed-derived), so the
-    # simulated-clock comparison sees identical stragglers on both sides
+    # simulated-clock comparison sees identical stragglers on both sides;
+    # the baseline shares the cohort bound so both runs pay comparable compute
     fedavg = run_federated(
         ds, FLConfig(strategy="fedavg", personalization="none", fraction=1.0,
-                     rounds=args.rounds, epochs=2, heterogeneity=args.heterogeneity),
+                     rounds=args.rounds, epochs=2, heterogeneity=args.heterogeneity,
+                     cohort_size=args.cohort_size),
         progress=True,
     )
 
@@ -96,6 +126,7 @@ def main():
           + (f" + async buffer_k={args.buffer_k or ds.n_clients // 2}" if args.mode == "async" else "")
           + ")")
     cfg = fl_defaults()  # the paper's recipe (configs.har_mlp), tailored by flags
+    from repro.fl import ExecutionConfig
     cfg = dataclasses.replace(
         cfg,
         selection=dataclasses.replace(cfg.selection, strategy=args.strategy),
@@ -103,6 +134,7 @@ def main():
         train=dataclasses.replace(cfg.train, rounds=args.rounds),
         scheduler=SchedulerConfig(mode=args.mode, buffer_k=args.buffer_k,
                                   heterogeneity=args.heterogeneity),
+        execution=ExecutionConfig(cohort_size=args.cohort_size),
     )
     acsp = run_federated(ds, cfg, progress=True)
 

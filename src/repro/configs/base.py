@@ -6,8 +6,8 @@ never allocated); ``reduced()`` yields the smoke-test variant (<=2 layers,
 d_model<=512, <=4 experts) that runs a real forward/train step on CPU.
 
 The FL sub-configs (SelectionConfig, PersonalizationConfig, CodecConfig,
-SchedulerConfig, TrainConfig) are pure-dataclass, validated at
-construction, and build their runtime objects lazily
+SchedulerConfig, ExecutionConfig, TrainConfig) are pure-dataclass,
+validated at construction, and build their runtime objects lazily
 (``strategy_obj``/``codec_obj``) so this module stays import-light.
 """
 
@@ -299,6 +299,44 @@ STALENESS_FN_NAMES = ("constant", "polynomial", "hinge")
 
 
 @dataclasses.dataclass(frozen=True)
+class ExecutionConfig:
+    """How much compute a round physically touches (repro.fl cohort runtime).
+
+    ``cohort_size`` bounds the number of client lanes the round step
+    actually gathers, trains, and scatters back: selection still scores the
+    full population, but only the first ``cohort_size`` selected clients
+    (ascending client id) are materialized as ``(K, ...)`` compute lanes.
+    ``0`` means the full population (dense-equivalent execution — the seed
+    behaviour, and bit-identical to it). When a strategy selects more
+    clients than ``cohort_size`` the cohort is truncated, so per-round
+    compute and trained-state memory are O(K) regardless of C. Under the
+    async scheduler the compute lanes are the dispatch slots:
+    ``cohort_size`` bounds the slot count there too, unless the
+    async-specific ``SchedulerConfig.max_concurrency`` overrides it.
+
+    ``eval_every`` thins the O(C) distributed evaluation: accuracy/loss are
+    recomputed on rounds (aggregation events) where ``t % eval_every == 0``
+    and carried as last-known values in between. Selection strategies that
+    read accuracy/loss see the carried values on skipped rounds.
+    """
+
+    cohort_size: int = 0        # 0 -> full population (dense-equivalent)
+    eval_every: int = 1         # evaluate when t % eval_every == 0
+
+    def __post_init__(self):
+        if self.cohort_size < 0:
+            raise ValueError(f"cohort_size must be >= 0, got {self.cohort_size!r}")
+        if self.eval_every < 1:
+            raise ValueError(f"eval_every must be >= 1, got {self.eval_every!r}")
+
+    def resolved_cohort(self, n_clients: int) -> int:
+        """Static cohort lane count K for a population of ``n_clients``."""
+        if self.cohort_size <= 0:
+            return n_clients
+        return min(self.cohort_size, n_clients)
+
+
+@dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
     """How the server loop executes rounds (repro.fl.sched).
 
@@ -311,6 +349,8 @@ class SchedulerConfig:
 
     mode: str = "sync"            # sync | async
     buffer_k: int = 0             # async: updates per aggregation; 0 -> C//2
+    max_concurrency: int = 0      # async: in-flight dispatch slots M_c
+                                  # (FedBuff's concurrency cap); 0 -> C
     staleness_fn: str = "polynomial"   # constant | polynomial | hinge
     staleness_exponent: float = 0.5    # a in (1+s)^-a / hinge slope
     staleness_threshold: float = 4.0   # hinge knee b
@@ -324,6 +364,10 @@ class SchedulerConfig:
             )
         if self.buffer_k < 0:
             raise ValueError(f"buffer_k must be >= 0, got {self.buffer_k!r}")
+        if self.max_concurrency < 0:
+            raise ValueError(
+                f"max_concurrency must be >= 0, got {self.max_concurrency!r}"
+            )
         if self.staleness_fn not in STALENESS_FN_NAMES:
             raise ValueError(
                 f"unknown staleness_fn {self.staleness_fn!r}; have {list(STALENESS_FN_NAMES)}"
@@ -352,6 +396,11 @@ class TrainConfig:
     lr: float = 0.1
     momentum: float = 0.0
     seed: int = 0
+    remainder: str = "drop"     # drop | pad — what SGDTrainer does with the
+                                # tail when the data slab is not a whole
+                                # number of batches ("drop" is the seed's
+                                # remainder-truncation; "pad" trains on
+                                # every valid sample via a masked tail batch)
 
     def __post_init__(self):
         for field in ("rounds", "epochs", "batch_size"):
@@ -359,3 +408,7 @@ class TrainConfig:
                 raise ValueError(f"{field} must be >= 1, got {getattr(self, field)!r}")
         if self.lr <= 0.0:
             raise ValueError(f"lr must be > 0, got {self.lr!r}")
+        if self.remainder not in ("drop", "pad"):
+            raise ValueError(
+                f"remainder must be 'drop' or 'pad', got {self.remainder!r}"
+            )

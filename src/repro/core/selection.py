@@ -1,9 +1,12 @@
 """Client-selection strategies (paper §3.2-3.3 + literature baselines §4).
 
 Every strategy is a pure, jit-compatible function from per-client metrics to
-a boolean selection mask of static shape (C,). Unselected clients are masked
-out of aggregation (and, in the analytic accounting, out of communication) —
-this keeps shapes static so the entire federated round can live inside jit.
+a boolean selection mask of static shape (C,), with an index-based twin
+(``select_cohort`` -> ``CohortSelection``): a fixed-size top-K index set plus
+validity mask that the cohort execution runtime (repro.fl) gathers so only
+K client lanes are materialized per round. Both forms keep shapes static so
+the entire federated round lives inside jit; unselected clients are masked
+out of aggregation (and, in the analytic accounting, out of communication).
 
 Strategies:
   FedAvgRandom   — uniform random fraction (McMahan et al. 2017)
@@ -61,6 +64,43 @@ class ClientObservations(NamedTuple):
 ClientMetrics = ClientObservations
 
 
+class CohortSelection(NamedTuple):
+    """Fixed-size cohort: the index form of a selection decision.
+
+    ``idx`` holds ``K`` client ids — selected clients first in ascending id
+    order, padded with unselected ids when fewer than ``K`` are selected
+    (their ``valid`` lanes are False, so they are masked out of every
+    merge). The cohort execution runtime (repro.fl) gathers exactly these
+    lanes, so per-round compute is O(K) regardless of the population size.
+    """
+
+    idx: jnp.ndarray    # (K,) int — client ids, selected-first ascending
+    valid: jnp.ndarray  # (K,) bool — True where idx points at a selected client
+
+
+def cohort_from_mask(mask: jnp.ndarray, cohort_size: int) -> CohortSelection:
+    """Convert a (C,) boolean selection mask into a fixed-size cohort.
+
+    Stable argsort keeps ids ascending within the selected and unselected
+    groups; if more than ``cohort_size`` clients are selected the cohort
+    truncates to the first ``cohort_size`` selected ids.
+    """
+    idx = jnp.argsort(~mask, stable=True)[:cohort_size]
+    return CohortSelection(idx=idx, valid=jnp.take(mask, idx))
+
+
+def cohort_from_scores(
+    scores: jnp.ndarray, within: jnp.ndarray, k: jnp.ndarray, cohort_size: int
+) -> CohortSelection:
+    """Top-``k`` highest ``scores`` among ``within``, as a fixed-size cohort.
+
+    The index-native form of ``_keep_highest``: strategies whose decision is
+    a score ranking can emit cohort indices directly instead of routing
+    through a dense mask.
+    """
+    return cohort_from_mask(_keep_highest(scores, within, k), cohort_size)
+
+
 def _keep_lowest(values: jnp.ndarray, within: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
     """Boolean mask keeping the ``k`` lowest ``values`` among ``within``.
 
@@ -83,6 +123,16 @@ class SelectionStrategy:
 
     def select(self, metrics: ClientMetrics, t: jnp.ndarray, rng: jax.Array) -> jnp.ndarray:
         raise NotImplementedError
+
+    def select_cohort(
+        self, metrics: ClientMetrics, t: jnp.ndarray, rng: jax.Array, cohort_size: int
+    ) -> CohortSelection:
+        """Index-based form of ``select``: the ``cohort_size`` client ids to
+        gather next round (selected-first ascending, with a validity mask).
+        The default derives the cohort from the boolean mask; score-ranked
+        strategies may override to emit top-K indices directly
+        (``cohort_from_scores``)."""
+        return cohort_from_mask(self.select(metrics, t, rng), cohort_size)
 
     @property
     def name(self) -> str:

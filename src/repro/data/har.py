@@ -36,15 +36,22 @@ DATASETS = {
 }
 
 
-def make_har_dataset(name: str, seed: int = 0, scale: float = 1.0) -> FederatedDataset:
+def make_har_dataset(
+    name: str, seed: int = 0, scale: float = 1.0, n_clients: int | None = None
+) -> FederatedDataset:
     """Build one of the paper's three datasets (synthetic stand-in).
 
     ``scale`` < 1 shrinks per-client sample counts proportionally (CPU runs).
+    ``n_clients`` overrides the paper's client count — population scale-up
+    for the cohort execution runtime (>= 2000 clients routes through the
+    vectorized population generator automatically).
     """
     key = name.lower()
     if key not in DATASETS:
         raise KeyError(f"unknown dataset {name!r}; have {sorted(DATASETS)}")
     spec = dict(DATASETS[key])
+    if n_clients is not None:
+        spec["n_clients"] = n_clients
     lo, hi = spec["samples_per_client_range"]
     spec["samples_per_client_range"] = (max(8, int(lo * scale)), max(9, int(hi * scale)))
     return make_federated_classification(seed=seed, name=key, **spec)

@@ -5,6 +5,7 @@ distributed runtime over a TPU mesh (repro.fl.cross_silo)."""
 
 from repro.fl.api import (
     CodecConfig,
+    ExecutionConfig,
     FLConfig,
     PersonalizationConfig,
     RoundPipeline,
@@ -23,6 +24,7 @@ __all__ = [
     "PersonalizationConfig",
     "CodecConfig",
     "SchedulerConfig",
+    "ExecutionConfig",
     "TrainConfig",
     "FLHistory",
     "RoundPipeline",

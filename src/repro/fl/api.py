@@ -46,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import (
     CodecConfig,
+    ExecutionConfig,
     PersonalizationConfig,
     SchedulerConfig,
     SelectionConfig,
@@ -55,6 +56,7 @@ from repro.core.aggregation import transmitted_parameters
 from repro.core.layersharing import layer_param_sizes, layer_share_mask
 from repro.data.synthetic import FederatedDataset
 from repro.fl import phases
+from repro.fl.cohort import cohort_indices, tree_scatter, tree_take
 from repro.models.mlp import mlp_accuracy, mlp_loss
 
 __all__ = [
@@ -63,6 +65,7 @@ __all__ = [
     "PersonalizationConfig",
     "CodecConfig",
     "SchedulerConfig",
+    "ExecutionConfig",
     "TrainConfig",
     "RoundPipeline",
     "RoundState",
@@ -91,10 +94,14 @@ _FLAT_KEYS = {
     "lr": ("train", "lr"),
     "momentum": ("train", "momentum"),
     "seed": ("train", "seed"),
+    "remainder": ("train", "remainder"),
     "scheduler": ("scheduler", "mode"),
     "buffer_k": ("scheduler", "buffer_k"),
+    "max_concurrency": ("scheduler", "max_concurrency"),
     "staleness_fn": ("scheduler", "staleness_fn"),
     "heterogeneity": ("scheduler", "heterogeneity"),
+    "cohort_size": ("execution", "cohort_size"),
+    "eval_every": ("execution", "eval_every"),
 }
 
 _GROUP_TYPES = {
@@ -103,17 +110,19 @@ _GROUP_TYPES = {
     "codec": CodecConfig,
     "train": TrainConfig,
     "scheduler": SchedulerConfig,
+    "execution": ExecutionConfig,
 }
 
 
 @dataclasses.dataclass(frozen=True, init=False)
 class FLConfig:
-    """Federated experiment config: five nested validated sub-configs.
+    """Federated experiment config: six nested validated sub-configs.
 
     Accepts either the nested objects (``selection=SelectionConfig(...)``)
     or the seed's flat kwargs (``strategy="oort", fraction=0.5, rounds=30,
-    codec="int8"``) — but not both forms for the same group. The seed's flat
-    attributes (``cfg.strategy``, ``cfg.rounds``, ...) remain readable.
+    codec="int8", cohort_size=64``) — but not both forms for the same
+    group. The seed's flat attributes (``cfg.strategy``, ``cfg.rounds``,
+    ...) remain readable.
     """
 
     selection: SelectionConfig
@@ -121,9 +130,10 @@ class FLConfig:
     codec: CodecConfig
     train: TrainConfig
     scheduler: SchedulerConfig
+    execution: ExecutionConfig
 
     def __init__(self, selection=None, personalization=None, codec=None,
-                 train=None, scheduler=None, **flat):
+                 train=None, scheduler=None, execution=None, **flat):
         # string conveniences on the group params themselves: the seed's
         # FLConfig(personalization="dld", codec="int8") spelled the mode/spec
         # directly, so route strings into the flat namespace
@@ -144,7 +154,8 @@ class FLConfig:
                 f"{sorted(_GROUP_TYPES)} sub-configs)"
             )
         given = {"selection": selection, "personalization": personalization,
-                 "codec": codec, "train": train, "scheduler": scheduler}
+                 "codec": codec, "train": train, "scheduler": scheduler,
+                 "execution": execution}
         grouped: dict[str, dict[str, Any]] = {g: {} for g in _GROUP_TYPES}
         for key, value in flat.items():
             group, attr = _FLAT_KEYS[key]
@@ -217,6 +228,18 @@ class FLConfig:
     def buffer_k(self) -> int:
         return self.scheduler.buffer_k
 
+    @property
+    def max_concurrency(self) -> int:
+        return self.scheduler.max_concurrency
+
+    @property
+    def cohort_size(self) -> int:
+        return self.execution.cohort_size
+
+    @property
+    def eval_every(self) -> int:
+        return self.execution.eval_every
+
     def strategy_obj(self):
         return self.selection.strategy_obj()
 
@@ -277,11 +300,14 @@ def pipeline_from_config(cfg: FLConfig) -> RoundPipeline:
         personalizer=personalizer,
         trainer=phases.get_phase(
             "trainer", "sgd",
-            epochs=cfg.train.epochs, batch_size=cfg.train.batch_size, lr=cfg.train.lr,
+            epochs=cfg.train.epochs, batch_size=cfg.train.batch_size,
+            lr=cfg.train.lr, remainder=cfg.train.remainder,
         ),
         transmit=phases.TransmitPhase(cfg.codec_obj()),
         aggregator=aggregator,
-        evaluator=phases.get_phase("evaluator", "distributed"),
+        evaluator=phases.get_phase(
+            "evaluator", "distributed", eval_every=cfg.execution.eval_every
+        ),
         selector=phases.SelectorPhase(cfg.strategy_obj()),
         layer_policy=layer_policy,
     )
@@ -296,13 +322,16 @@ class RoundState(NamedTuple):
     """Carried server-loop state (a pytree; jit round-step input/output)."""
 
     global_params: Any            # layered list, leaves (...)
-    local_params: Any             # layered list, leaves (C, ...)
+    local_params: Any             # layered list, leaves (C, ...); None when
+                                  # the personalizer is stateless
     accuracy: jnp.ndarray         # (C,)
     select: jnp.ndarray           # (C,) bool
     pms: jnp.ndarray              # (C,) int32 — layers each client will share
     rng: jax.Array
     residual: Any = None          # EF residuals (lossy codec only), (C, ...)
     participation: Any = None     # (C,) int32 — cumulative selection counts
+    loss: Any = None              # (C,) last-known eval loss (eval_every)
+    update_norm: Any = None       # (C,) last-known compressed-delta norm
 
 
 def build_env(
@@ -327,18 +356,38 @@ def build_env(
         n_clients=data.n_clients,
         loss_fn=loss_fn,
         acc_fn=acc_fn,
+        population=data.n_clients,
     )
 
 
-def build_round_step(env: phases.RoundEnv, pipeline: RoundPipeline):
-    """Compose a RoundPipeline into the jitted round step.
+def build_round_step(
+    env: phases.RoundEnv,
+    pipeline: RoundPipeline,
+    execution: ExecutionConfig | None = None,
+):
+    """Compose a RoundPipeline into the jitted cohort-gathered round step.
 
     The step maps ``(RoundState, t) -> (RoundState, out)`` where ``out``
-    holds the host-side history records. Phase order and rng-lane splits
-    reproduce the pre-refactor monolithic engine exactly: lossless codecs
-    draw no codec randomness, keeping default float32 trajectories
-    bit-identical to the seed.
+    holds the host-side history records. Execution is gather -> compute ->
+    scatter: the (C,) selection mask resolves to a fixed-size index set
+    ``idx (K,)`` (``execution.cohort_size``; 0 -> K = C), the cohort's data
+    slabs, local params, and EF residuals are gathered with ``jnp.take``,
+    the compute phases (personalize/train/transmit/aggregate) run on
+    ``(K, ...)`` lanes, and results scatter back into the ``(C, ...)``
+    server state with ``.at[idx].set`` — so per-round training compute and
+    trained-state memory are O(K). Evaluation and selection stay
+    population-wide (thinned by ``DistributedEvaluator(eval_every=n)``).
+
+    Bit-identity: at K = C the gathered lanes compute exactly the numbers
+    the dense pre-refactor engine computed — per-client rng keys are
+    population-anchored (``phases.client_keys``), cohort lanes keep
+    ascending client-id order so every masked-aggregation sum reduces its
+    nonzero terms in the dense order, and phase order / rng-lane splits are
+    unchanged (guarded by the committed golden trajectories).
     """
+    execution = execution or ExecutionConfig()
+    cohort_k = execution.resolved_cohort(env.n_clients)
+    stateful = pipeline.personalizer.stateful
 
     def round_step(state: RoundState, t: jnp.ndarray):
         g = state.global_params
@@ -351,6 +400,15 @@ def build_round_step(env: phases.RoundEnv, pipeline: RoundPipeline):
             rng, r_fit, r_sel = jax.random.split(state.rng, 3)
             r_codec = None
 
+        # --- gather: selection mask -> fixed-size cohort (K,) ---
+        idx = cohort_indices(state.select, cohort_k)
+        cmask = jnp.take(state.select, idx)
+        # executed = selected AND inside the cohort bound; when the strategy
+        # selects more than K clients the overflow neither trains nor pays
+        # wire (at K = C executed == select exactly)
+        executed = (
+            jnp.zeros(state.select.shape, bool).at[idx].set(cmask)
+        )
         # participation defaults to None on hand-built states (the exported
         # RoundState mirrors the old _RoundState shape) — treat as zeros
         prev_part = (
@@ -358,66 +416,112 @@ def build_round_step(env: phases.RoundEnv, pipeline: RoundPipeline):
             if state.participation is not None
             else jnp.zeros(state.select.shape, jnp.int32)
         )
-        participation = prev_part + state.select.astype(jnp.int32)
-        ctx = phases.RoundContext(
+        participation = prev_part + executed.astype(jnp.int32)
+        cenv = env.take(idx)
+        cctx = phases.RoundContext(
             t=t,
             global_params=g,
-            local_params=state.local_params,
-            select=state.select,
-            pms=state.pms,
-            share=share,
-            residual=state.residual,
-            participation=participation,
+            local_params=tree_take(state.local_params, idx) if stateful else None,
+            select=cmask,
+            pms=jnp.take(state.pms, idx),
+            share=jnp.take(share, idx, axis=0),
+            residual=tree_take(state.residual, idx),
+            participation=jnp.take(participation, idx),
+            cohort_idx=idx,
+            cohort_mask=cmask,
             rng_fit=r_fit,
             rng_codec=r_codec,
             rng_sel=r_sel,
         )
 
-        # --- personalization: build each client's training model ---
-        ctx = ctx._replace(train_model=pipeline.personalizer.train_model(ctx, env))
-        # --- local training (all lanes compute; unselected discarded) ---
-        ctx = pipeline.trainer.fit(ctx, env)
-        sel_f = ctx.select
-        ctx = ctx._replace(
-            new_local=jax.tree.map(
-                lambda new, old: jnp.where(
-                    sel_f.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
-                ),
-                ctx.trained,
-                pipeline.personalizer.local_fallback(ctx, env),
+        # --- personalization: build each cohort lane's training model ---
+        cctx = cctx._replace(train_model=pipeline.personalizer.train_model(cctx, cenv))
+        # --- local training on K lanes (invalid lanes discarded below) ---
+        cctx = pipeline.trainer.fit(cctx, cenv)
+        if stateful:
+            cctx = cctx._replace(
+                new_local=jax.tree.map(
+                    lambda new, old: jnp.where(
+                        cmask.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
+                    ),
+                    cctx.trained,
+                    pipeline.personalizer.local_fallback(cctx, cenv),
+                )
             )
+        # --- wire codec: compress each cohort lane's shared delta (uplink) ---
+        cctx = pipeline.transmit.transmit(cctx, cenv)
+        # --- aggregation of shared pieces (Eq. 1, masked/partial), K lanes ---
+        cctx = pipeline.aggregator.aggregate(cctx, cenv)
+
+        # --- scatter: cohort results back into the (C, ...) server state ---
+        new_local = (
+            tree_scatter(state.local_params, idx, cctx.new_local) if stateful else None
         )
-        # --- wire codec: compress each client's shared delta (uplink) ---
-        ctx = pipeline.transmit.transmit(ctx, env)
-        # --- aggregation of shared pieces (Eq. 1, masked/partial) ---
-        ctx = pipeline.aggregator.aggregate(ctx, env)
-        # --- evaluation: distributed accuracy on composed models ---
-        ctx = ctx._replace(eval_model=pipeline.personalizer.eval_model(ctx, env))
-        ctx = pipeline.evaluator.evaluate(ctx, env)
+        new_residual = tree_scatter(state.residual, idx, cctx.residual)
+        prev_norm = (
+            state.update_norm
+            if state.update_norm is not None
+            else jnp.zeros(state.select.shape, jnp.float32)
+        )
+        update_norm = prev_norm.at[idx].set(cctx.update_norm)
+        wire_prospective, wire_paid = pipeline.transmit.wire_costs(
+            g, share, executed
+        )
+
+        # --- population phases: eval, selection, layer policy on (C,) ---
+        pctx = cctx._replace(
+            local_params=state.local_params,
+            select=executed,
+            pms=state.pms,
+            share=share,
+            residual=new_residual,
+            participation=participation,
+            cohort_idx=None,
+            cohort_mask=None,
+            new_local=new_local,
+            wire_bytes=wire_prospective,
+            wire_paid=wire_paid,
+            update_norm=update_norm,
+            prev_accuracy=state.accuracy,
+            prev_loss=state.loss,
+        )
+        # --- evaluation: distributed accuracy on composed models; on the
+        # eval_every-thinned path the personalizer's O(C) model build runs
+        # inside the evaluator's cond, so skipped rounds pay nothing ---
+        if getattr(pipeline.evaluator, "eval_every", 1) == 1:
+            pctx = pctx._replace(eval_model=pipeline.personalizer.eval_model(pctx, env))
+            pctx = pipeline.evaluator.evaluate(pctx, env)
+        else:
+            pctx = pipeline.evaluator.evaluate(
+                pctx, env,
+                model_fn=lambda ctx=pctx: pipeline.personalizer.eval_model(ctx, env),
+            )
         # --- client selection for next round (Algorithm 1 l.12) ---
-        ctx = pipeline.selector.select(ctx, env)
+        pctx = pipeline.selector.select(pctx, env)
         # --- next round's PMS (layers to share) ---
-        ctx = ctx._replace(next_pms=pipeline.layer_policy.next_pms(ctx, env, n_layers))
+        pctx = pctx._replace(next_pms=pipeline.layer_policy.next_pms(pctx, env, n_layers))
 
         # --- communication accounting for THIS round (uplink) ---
-        tx = transmitted_parameters(state.select, share, layer_param_sizes(g))
+        tx = transmitted_parameters(executed, share, layer_param_sizes(g))
 
         new_state = RoundState(
-            global_params=ctx.new_global,
-            local_params=ctx.new_local,
-            accuracy=ctx.accuracy,
-            select=ctx.next_select,
-            pms=ctx.next_pms,
+            global_params=pctx.new_global,
+            local_params=new_local,
+            accuracy=pctx.accuracy,
+            select=pctx.next_select,
+            pms=pctx.next_pms,
             rng=rng,
-            residual=ctx.residual,
+            residual=new_residual,
             participation=participation,
+            loss=pctx.loss,
+            update_norm=update_norm,
         )
         out = {
-            "acc": ctx.accuracy,
-            "selected": state.select,
+            "acc": pctx.accuracy,
+            "selected": executed,
             "tx_params": tx,
             "pms": state.pms,
-            "wire_per_client": ctx.wire_paid,
+            "wire_per_client": wire_paid,
         }
         return new_state, out
 

@@ -1,0 +1,71 @@
+"""Cohort gather/scatter primitives for O(K) round execution.
+
+The cohort runtime turns the round step from dense population compute
+(every phase vmapped over all C client lanes, unselected lanes masked out)
+into gather -> compute -> scatter: selection yields a fixed-size index set
+``idx (K,)`` of client ids plus a validity mask, the engine gathers the
+cohort's slabs (data shards, local/personalized params, EF residuals,
+dispatch snapshots) with ``jnp.take``, every compute phase runs on
+``(K, ...)`` lanes, and the results scatter back into the ``(C, ...)``
+server state with ``.at[idx].set`` — so per-round compute and trained-state
+memory are bounded by the cohort, not the population.
+
+Invariants (property-tested in tests/test_property.py):
+
+- ``tree_scatter(state, idx, tree_take(state, idx))`` is the identity;
+- ``tree_scatter`` touches exactly the ``idx`` lanes and leaves every other
+  lane bit-identical, for pytree leaves of any dtype.
+
+``cohort_indices`` orders the cohort by *ascending client id* (stable
+argsort), which keeps the nonzero summands of every masked aggregation in
+the same relative order as the dense path — the reason the gathered sync
+step stays bit-identical to dense execution when the cohort covers the
+selection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.selection import cohort_from_mask
+
+__all__ = ["cohort_indices", "tree_take", "tree_scatter"]
+
+
+def cohort_indices(select: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(K,) client ids of this round's cohort from a (C,) selection mask.
+
+    Selected clients come first in ascending id order; if fewer than ``k``
+    are selected the tail is padded with unselected ids (ascending), whose
+    lanes compute but are masked out of every merge (``select[idx]`` is the
+    validity mask). If more than ``k`` are selected the cohort truncates to
+    the first ``k`` selected ids. Thin wrapper over
+    ``repro.core.selection.cohort_from_mask`` (the strategy-facing API).
+    """
+    return cohort_from_mask(select, k).idx
+
+
+def tree_take(tree, idx: jnp.ndarray):
+    """Gather cohort lanes: every leaf ``(C, ...)`` -> ``(K, ...)``.
+
+    ``None`` passes through so optional state (EF residuals, stateless
+    personalizer locals) needs no special-casing at call sites.
+    """
+    if tree is None:
+        return None
+    return jax.tree.map(lambda leaf: jnp.take(leaf, idx, axis=0), tree)
+
+
+def tree_scatter(tree, idx: jnp.ndarray, update, mode: str | None = None):
+    """Scatter cohort lanes back: ``tree.at[idx].set(update)`` per leaf.
+
+    ``idx`` entries must be unique (cohort_indices guarantees it: they come
+    from an argsort permutation); out-of-range entries combined with
+    ``mode='drop'`` let callers skip lanes (the async scheduler points
+    non-landing slots at index C to leave those clients untouched).
+    ``None`` passes through like tree_take.
+    """
+    if tree is None:
+        return None
+    return jax.tree.map(lambda leaf, u: leaf.at[idx].set(u, mode=mode), tree, update)

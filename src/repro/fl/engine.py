@@ -6,15 +6,32 @@ repro.fl.phases):
   Personalizer -> LocalTrainer -> TransmitPhase (wire codec + EF)
                -> Aggregator -> Evaluator -> SelectorPhase -> LayerPolicy
 
-and the server loop that drives it lives in the scheduler layer
+executed through the **cohort runtime** (repro.fl.cohort): selection
+resolves to a fixed-size index set of at most
+``ExecutionConfig.cohort_size`` client ids, the engine gathers exactly
+those clients' data shards, local/personalized params, and EF residuals
+into ``(K, ...)`` lanes with ``jnp.take``, runs the compute phases on
+them, and scatters the results back into the ``(C, ...)`` server state
+with ``.at[idx].set`` — per-round training compute and trained-state
+memory are O(cohort), not O(population), which is what lets adaptive
+selection's shrinking cohorts (the paper's §4 headline) translate into
+real step-time and memory wins at large C (see benchmarks/scale_bench.py).
+``cohort_size=0`` (default) executes the full population and is
+bit-identical to the dense pre-cohort engine. Full-population evaluation
+can be thinned with ``ExecutionConfig.eval_every`` (last-known
+accuracy/loss carried between evals).
+
+The server loop that drives the step lives in the scheduler layer
 (repro.fl.sched): ``cfg.scheduler.mode`` picks between the paper's
 synchronous barrier (``SyncScheduler`` — Algorithm 1, round time = slowest
 selected client) and FedBuff-style event-driven buffered execution
 (``AsyncScheduler`` — aggregate as soon as ``buffer_k`` updates land, with
-staleness-weighted merging). ``run_federated`` is the stable entry point
-that builds the default pipeline from an ``FLConfig`` and delegates to the
-configured scheduler; ``make_round_step`` exposes the jitted synchronous
-round step for callers that drive it themselves.
+staleness-weighted merging, over at most
+``SchedulerConfig.max_concurrency`` in-flight dispatch slots).
+``run_federated`` is the stable entry point that builds the default
+pipeline from an ``FLConfig`` and delegates to the configured scheduler;
+``make_round_step`` exposes the jitted synchronous round step for callers
+that drive it themselves.
 
 Uplink traffic goes through a wire codec (repro.comm): each selected
 client's shared delta is encode/decode round-tripped (with per-client
@@ -67,6 +84,10 @@ class FLHistory(NamedTuple):
     sim_clock: np.ndarray          # (T,) simulated clock at each aggregation
     staleness_mean: np.ndarray     # (T,) mean staleness of merged updates
                                    # (identically 0 under the sync barrier)
+    in_flight: np.ndarray = None   # (T,) executing client lanes: the cohort
+                                   # size K under the sync barrier, clients
+                                   # in flight after dispatch under async
+                                   # (never exceeds max_concurrency)
 
 
 def make_round_step(
@@ -77,10 +98,11 @@ def make_round_step(
     pipeline: RoundPipeline | None = None,
 ):
     """Build the jitted synchronous round step: the cfg's default pipeline
-    (or a custom one) composed over the static data/config environment."""
+    (or a custom one) composed over the static data/config environment,
+    executing on ``cfg.execution.cohort_size`` gathered lanes."""
     pipeline = pipeline or pipeline_from_config(cfg)
     env = build_env(data, cfg.seed, loss_fn=loss_fn, acc_fn=acc_fn)
-    return build_round_step(env, pipeline)
+    return build_round_step(env, pipeline, cfg.execution)
 
 
 def run_federated(

@@ -12,6 +12,22 @@ phase deposits for the ones downstream. ``RoundEnv`` is the static
 per-experiment environment (data shards, sample counts, loss/acc fns)
 closed over by the jitted round step — phases read it, never mutate it.
 
+**Lane convention (cohort execution).** Phases are written against *lanes*,
+not the population: every stacked leaf they touch has a leading axis of
+``env.n_clients`` lanes, and the engine decides what a lane is. The compute
+phases (Personalizer.train_model, LocalTrainer, TransmitPhase, Aggregator)
+receive a *cohort* context/env — ``env.take(idx)``-gathered ``(K, ...)``
+slabs of the K clients selection picked, with ``ctx.cohort_idx`` naming
+which client each lane is and ``ctx.cohort_mask`` its validity — while the
+population phases (Personalizer.eval_model, Evaluator, SelectorPhase,
+LayerPolicy) see the full ``(C, ...)`` state. Per-client randomness is
+derived from ``env.population`` and gathered by ``ctx.cohort_idx``
+(``client_keys``), so a client's rng stream does not depend on which lane
+it lands in. This is what makes rounds O(K) in compute and trained-state
+memory: the engine (repro.fl.api.build_round_step) gathers the cohort with
+``jnp.take``, runs the phases on K lanes, and scatters results back into
+the ``(C, ...)`` server state with ``.at[idx].set``.
+
 Every phase kind has a string registry mirroring ``get_strategy`` /
 ``make_codec`` (``get_phase('aggregator', 'fedavg')``), so configs address
 phases by name and custom components drop in via ``register_phase``.
@@ -21,8 +37,9 @@ quantized all-reduce so both runtimes share one wire-format definition.
 
 Phases are scheduler-agnostic: ``repro.fl.sched.SyncScheduler`` drives them
 with the broadcast global model (``ctx.dispatch_params is None``), while
-``AsyncScheduler`` supplies per-client dispatch snapshots plus the
-``staleness``/``clock`` lanes, and swaps the aggregator for
+``AsyncScheduler`` supplies per-slot dispatch snapshots plus the
+``staleness`` lane (its cohort lanes are the (M,) in-flight dispatch slots,
+``cohort_idx`` the client id each slot holds), and swaps the aggregator for
 ``StalenessAggregator`` (registry name ``'staleness'``) — a FedBuff-style
 buffered delta merge discounted by ``staleness_weight``.
 """
@@ -52,8 +69,12 @@ class RoundEnv:
     """Static per-experiment environment every phase can read.
 
     Held by the round-step closure (not traced): data shards stacked on the
-    client axis, per-client sample counts, the analytic delay lane for
-    Oort's systemic term, and the model's loss/accuracy functions.
+    lane axis, per-lane sample counts, the analytic delay lane for Oort's
+    systemic term, and the model's loss/accuracy functions. ``n_clients``
+    is the number of *lanes* this env carries — the population C for the
+    env ``build_env`` returns, the cohort size K for the gathered view
+    ``take`` returns; ``population`` always names the true population so
+    per-client rng streams stay lane-independent.
     """
 
     x_tr: jnp.ndarray
@@ -62,11 +83,52 @@ class RoundEnv:
     x_te: jnp.ndarray
     y_te: jnp.ndarray
     m_te: jnp.ndarray
-    n_samples: jnp.ndarray   # (C,) float — |d_i|
-    delay: jnp.ndarray       # (C,) float — analytic systemic delay (Oort)
-    n_clients: int
+    n_samples: jnp.ndarray   # (lanes,) float — |d_i|
+    delay: jnp.ndarray       # (lanes,) float — analytic systemic delay (Oort)
+    n_clients: int           # number of lanes (C, or K after .take)
     loss_fn: Callable
     acc_fn: Callable
+    population: int = 0      # true population C; 0 -> n_clients
+
+    @property
+    def pop(self) -> int:
+        return self.population or self.n_clients
+
+    def take(self, idx: jnp.ndarray) -> "RoundEnv":
+        """Cohort view: gather the ``idx`` client lanes of every data slab.
+
+        The result has ``n_clients == len(idx)`` lanes but remembers the
+        original ``population``, so rng derivation and wire accounting stay
+        anchored to true client ids.
+        """
+        k = int(idx.shape[0])
+        return dataclasses.replace(
+            self,
+            x_tr=jnp.take(self.x_tr, idx, axis=0),
+            y_tr=jnp.take(self.y_tr, idx, axis=0),
+            m_tr=jnp.take(self.m_tr, idx, axis=0),
+            x_te=jnp.take(self.x_te, idx, axis=0),
+            y_te=jnp.take(self.y_te, idx, axis=0),
+            m_te=jnp.take(self.m_te, idx, axis=0),
+            n_samples=jnp.take(self.n_samples, idx),
+            delay=jnp.take(self.delay, idx),
+            n_clients=k,
+            population=self.pop,
+        )
+
+
+def client_keys(rng: jax.Array, ctx: "RoundContext", env: RoundEnv) -> jax.Array:
+    """(lanes,) per-client rng keys, stable under cohort gathering.
+
+    Keys are split over the *population* and gathered by ``ctx.cohort_idx``,
+    so client i consumes the same stream whether it runs in a dense lane or
+    a gathered cohort lane (bit-identity of the cohort runtime depends on
+    this).
+    """
+    keys = jax.random.split(rng, env.pop)
+    if ctx.cohort_idx is not None:
+        keys = jnp.take(keys, ctx.cohort_idx, axis=0)
+    return keys
 
 
 class RoundContext(NamedTuple):
@@ -74,37 +136,47 @@ class RoundContext(NamedTuple):
 
     The first block comes from the carried round state; later fields start
     as ``None`` and are filled by the phase that owns them (``_replace``
-    returns an updated copy — phases never mutate in place).
+    returns an updated copy — phases never mutate in place). Stacked fields
+    are *lane*-shaped (see the module docstring): during the compute phases
+    a lane is one gathered cohort member (K lanes, or M dispatch slots
+    under the async scheduler), during eval/selection a lane is one client
+    of the population (C lanes).
     """
 
     t: Any = None                 # round index (traced scalar)
     global_params: Any = None     # layered list, leaves (...)
-    local_params: Any = None      # layered list, leaves (C, ...)
-    select: Any = None            # (C,) bool — THIS round's cohort
-    pms: Any = None               # (C,) int32 — layers each client shares
-    share: Any = None             # (C, L) bool — layer_share_mask(pms)
-    residual: Any = None          # EF residuals (lossy codec), leaves (C, ...)
-    participation: Any = None     # (C,) int32 — selections so far (incl. now)
+    local_params: Any = None      # layered list, leaves (lanes, ...)
+    select: Any = None            # (lanes,) bool — cohort: validity mask;
+                                  # population: THIS round's selection
+    pms: Any = None               # (lanes,) int32 — layers each client shares
+    share: Any = None             # (lanes, L) bool — layer_share_mask(pms)
+    residual: Any = None          # EF residuals (lossy codec), leaves (lanes, ...)
+    participation: Any = None     # (lanes,) int32 — selections so far (incl. now)
+    # cohort lane (set while the compute phases run on gathered lanes):
+    cohort_idx: Any = None        # (lanes,) int32 — client id behind each lane
+    cohort_mask: Any = None       # (lanes,) bool — lane holds a selected client
     # scheduler lane (async mode; None under the synchronous barrier):
-    dispatch_params: Any = None   # per-client model snapshot each client
-                                  # trained from, leaves (C, ...) — deltas and
-                                  # EF are computed against it, not the
+    dispatch_params: Any = None   # per-slot model snapshot each client
+                                  # trained from, leaves (lanes, ...) — deltas
+                                  # and EF are computed against it, not the
                                   # (newer) server model
-    staleness: Any = None         # (C,) int32 — aggregation events since each
-                                  # client's snapshot was cut
-    clock: Any = None             # (C,) float32 — sim time each client's
-                                  # latest result landed at the server
+    staleness: Any = None         # (lanes,) int32 — aggregation events since
+                                  # each client's snapshot was cut
     rng_fit: Any = None
     rng_codec: Any = None
     rng_sel: Any = None
+    # last-known eval results carried in (population phases; eval_every > 1
+    # reuses them on skipped rounds):
+    prev_accuracy: Any = None     # (C,)
+    prev_loss: Any = None         # (C,)
     # filled by phases, in pipeline order:
     train_model: Any = None       # Personalizer
     trained: Any = None           # LocalTrainer
     new_local: Any = None         # engine (selected lanes keep training)
     agg_src: Any = None           # TransmitPhase — what the server receives
-    wire_bytes: Any = None        # (C,) prospective uplink cost (codec)
-    wire_paid: Any = None         # (C,) wire bytes actually paid this round
-    update_norm: Any = None       # (C,) l2 norm of the compressed delta
+    wire_bytes: Any = None        # (lanes,) prospective uplink cost (codec)
+    wire_paid: Any = None         # (lanes,) wire bytes actually paid this round
+    update_norm: Any = None       # (lanes,) l2 norm of the compressed delta
     new_global: Any = None        # Aggregator
     eval_model: Any = None        # Personalizer.eval_model
     accuracy: Any = None          # Evaluator
@@ -139,7 +211,15 @@ def _client_global(ctx: RoundContext, env: RoundEnv):
 
 
 class Personalizer:
-    """Decides what model each client trains and is evaluated on."""
+    """Decides what model each client trains and is evaluated on.
+
+    ``stateful`` declares whether the personalizer reads/writes per-client
+    local parameters: stateless personalizers let the engine drop the
+    ``(C, ...)`` local-params carry entirely, so the only model state that
+    scales with the population is the cheap per-client vectors.
+    """
+
+    stateful: bool = True
 
     def train_model(self, ctx: RoundContext, env: RoundEnv):
         raise NotImplementedError
@@ -148,14 +228,17 @@ class Personalizer:
         raise NotImplementedError
 
     def local_fallback(self, ctx: RoundContext, env: RoundEnv):
-        """What unselected clients keep as their local model this round."""
+        """What unselected cohort lanes keep as their local model this round."""
         return ctx.local_params
 
 
 @dataclasses.dataclass(frozen=True)
 class NoPersonalizer(Personalizer):
     """Everyone trains and evaluates the broadcast global model (under the
-    async scheduler: the dispatch-time snapshot)."""
+    async scheduler: the dispatch-time snapshot). Reads no local params, so
+    the engine skips the per-client model carry (``stateful = False``)."""
+
+    stateful: bool = False
 
     def train_model(self, ctx, env):
         return _client_global(ctx, env)
@@ -216,17 +299,34 @@ class ComposePersonalizer(Personalizer):
 # ---------------------------------------------------------------------------
 
 
-def _batched(x, y, m, batch_size: int):
-    """Trim to a whole number of batches and reshape to (nb, B, ...)."""
+def _batched(x, y, m, batch_size: int, remainder: str = "drop"):
+    """Reshape a client's data slab to (nb, B, ...) minibatches.
+
+    ``remainder='drop'`` trims to a whole number of batches (the seed
+    behaviour — any *valid* samples in the trimmed tail are silently never
+    trained on); ``remainder='pad'`` appends a masked tail batch instead so
+    every valid sample is seen (the padding rows carry ``mask=False`` and
+    contribute nothing to the masked loss).
+    """
     n = x.shape[0]
-    nb = max(1, n // batch_size)
-    take = nb * batch_size
-    if take > n:  # dataset smaller than one batch: single ragged batch
-        nb, take, batch_size = 1, n, n
+    if remainder == "pad":
+        nb = -(-n // batch_size)
+        take = nb * batch_size
+        if take > n:
+            pad = take - n
+            x = jnp.concatenate([x, jnp.zeros((pad, *x.shape[1:]), x.dtype)])
+            y = jnp.concatenate([y, jnp.zeros((pad,), y.dtype)])
+            m = jnp.concatenate([m, jnp.zeros((pad,), m.dtype)])
+    else:
+        nb = max(1, n // batch_size)
+        take = nb * batch_size
+        if take > n:  # dataset smaller than one batch: single ragged batch
+            nb, take, batch_size = 1, n, n
+        x, y, m = x[:take], y[:take], m[:take]
     return (
-        x[:take].reshape(nb, batch_size, *x.shape[1:]),
-        y[:take].reshape(nb, batch_size),
-        m[:take].reshape(nb, batch_size),
+        x.reshape(nb, batch_size, *x.shape[1:]),
+        y.reshape(nb, batch_size),
+        m.reshape(nb, batch_size),
     )
 
 
@@ -240,16 +340,26 @@ class LocalTrainer:
 @dataclasses.dataclass(frozen=True)
 class SGDTrainer(LocalTrainer):
     """Algorithm 2 LocalTrain: tau epochs of minibatch SGD, vmapped over
-    the client axis (all lanes compute; unselected results are discarded
-    by the engine's select mask)."""
+    the lane axis — the gathered (K, ...) cohort under the cohort runtime,
+    so training compute is O(K) not O(C); any invalid lanes' results are
+    discarded by the engine's cohort mask.
+
+    ``remainder`` controls what happens when the data slab is not a whole
+    number of batches: ``'drop'`` truncates (seed behaviour — tail samples
+    of large clients are silently never trained), ``'pad'`` adds a masked
+    tail batch so every valid sample is seen. Padded/masked-out batches
+    rely on the loss masking its mean (``mlp_loss`` guards the all-padded
+    denominator); custom ``loss_fn``s must do the same.
+    """
 
     epochs: int = 1
     batch_size: int = 32
     lr: float = 0.1
+    remainder: str = "drop"
 
     def fit(self, ctx: RoundContext, env: RoundEnv) -> RoundContext:
         def local_fit(params, x, y, m, rng):
-            xb, yb, mb = _batched(x, y, m, self.batch_size)
+            xb, yb, mb = _batched(x, y, m, self.batch_size, self.remainder)
 
             def epoch(params, _):
                 def step(params, batch):
@@ -264,7 +374,7 @@ class SGDTrainer(LocalTrainer):
             params, _ = jax.lax.scan(epoch, params, None, length=self.epochs)
             return params
 
-        fit_rngs = jax.random.split(ctx.rng_fit, env.n_clients)
+        fit_rngs = client_keys(ctx.rng_fit, ctx, env)
         trained = jax.vmap(local_fit)(
             ctx.train_model, env.x_tr, env.y_tr, env.m_tr, fit_rngs
         )
@@ -328,10 +438,8 @@ class TransmitPhase:
             # personalized layers never hit the wire, so their residuals stay.
             agg_src, new_residual = [], []
             for j, (tr_j, g_j, res_j) in enumerate(zip(trained, g, ctx.residual)):
-                sent_j = ctx.select & ctx.share[:, j]  # (C,)
-                keys = jax.random.split(
-                    jax.random.fold_in(ctx.rng_codec, j), env.n_clients
-                )
+                sent_j = ctx.select & ctx.share[:, j]  # (lanes,)
+                keys = client_keys(jax.random.fold_in(ctx.rng_codec, j), ctx, env)
 
                 if base is not None:  # async: delta vs the dispatch snapshot
 
@@ -367,15 +475,11 @@ class TransmitPhase:
             agg_src, new_residual = trained, ctx.residual
 
         # --- cost signals for selection + accounting ------------------------
-        # static per-layer cost one client pays to ship layer j through the
-        # codec; (C,) products with the share/select masks give prospective
-        # (share only) vs paid (share & select) per-client wire bytes
-        layer_wire = jnp.asarray(
-            [tree_wire_bytes(self.codec, layer) for layer in g], jnp.float32
-        )
+        # lane-level (cohort) versions; the engine computes the population
+        # (C,) views via wire_costs and scatters update_norm back into the
+        # carried per-client lane
+        wire_prospective, wire_paid = self.wire_costs(g, ctx.share, ctx.select)
         share_f = ctx.share.astype(jnp.float32)
-        wire_prospective = share_f @ layer_wire
-        wire_paid = (share_f * ctx.select.astype(jnp.float32)[:, None]) @ layer_wire
         norm_sq = 0.0
         for j in range(len(g)):
             ref_j = base[j] if base is not None else g[j]
@@ -387,6 +491,22 @@ class TransmitPhase:
             wire_paid=wire_paid,
             update_norm=jnp.sqrt(norm_sq),
         )
+
+    def layer_wire(self, global_params) -> jnp.ndarray:
+        """(L,) static wire bytes one client pays per layer through the codec."""
+        return jnp.asarray(
+            [tree_wire_bytes(self.codec, layer) for layer in global_params],
+            jnp.float32,
+        )
+
+    def wire_costs(self, global_params, share: jnp.ndarray, select: jnp.ndarray):
+        """Population wire-cost signals: ``(prospective, paid)`` per-client
+        bytes from the (C, L) share mask and (C,) selection — prospective
+        counts every shared layer, paid only those a selected client
+        actually shipped this round."""
+        lw = self.layer_wire(global_params)
+        share_f = share.astype(jnp.float32)
+        return share_f @ lw, (share_f * select.astype(jnp.float32)[:, None]) @ lw
 
     def silo_transmit(self, x: jnp.ndarray, residual: jnp.ndarray, rng: jax.Array):
         """Cross-silo lane: EF-compress each silo's stacked contribution.
@@ -523,22 +643,58 @@ class StalenessAggregator(Aggregator):
 
 
 class Evaluator:
-    def evaluate(self, ctx: RoundContext, env: RoundEnv) -> RoundContext:
+    def evaluate(self, ctx: RoundContext, env: RoundEnv, model_fn=None) -> RoundContext:
         raise NotImplementedError
 
 
 @dataclasses.dataclass(frozen=True)
 class DistributedEvaluator(Evaluator):
     """Distributed eval (paper §4.3): each client scores its composed model
-    on its own test shard; accuracy and loss feed the selector."""
+    on its own test shard; accuracy and loss feed the selector.
 
-    def evaluate(self, ctx, env):
-        acc = jax.vmap(lambda p, x, y, m: env.acc_fn(p, x, y, m))(
-            ctx.eval_model, env.x_te, env.y_te, env.m_te
-        )
-        loss = jax.vmap(lambda p, x, y, m: env.loss_fn(p, x, y, m))(
-            ctx.eval_model, env.x_te, env.y_te, env.m_te
-        )
+    Full-population eval is itself O(C) every round; ``eval_every=n``
+    recomputes it only on rounds (aggregation events) where
+    ``t % n == 0`` and carries the last-known accuracy/loss
+    (``ctx.prev_accuracy``/``prev_loss``) in between, so large-population
+    async runs are not eval-bound. Selection reads the carried values on
+    skipped rounds. ``eval_every=1`` (default) keeps the seed's
+    every-round eval with no conditional in the traced step.
+
+    ``model_fn`` (when given) builds the per-client eval models *inside*
+    the fresh branch, so the personalizer's O(C) composed-model work is
+    also skipped on carried rounds — the engine passes it on the thinned
+    path instead of pre-filling ``ctx.eval_model``.
+    """
+
+    eval_every: int = 1
+
+    def __post_init__(self):
+        if self.eval_every < 1:
+            raise ValueError(f"eval_every must be >= 1, got {self.eval_every!r}")
+
+    def evaluate(self, ctx, env, model_fn=None):
+        def fresh(_):
+            model = model_fn() if model_fn is not None else ctx.eval_model
+            acc = jax.vmap(lambda p, x, y, m: env.acc_fn(p, x, y, m))(
+                model, env.x_te, env.y_te, env.m_te
+            )
+            loss = jax.vmap(lambda p, x, y, m: env.loss_fn(p, x, y, m))(
+                model, env.x_te, env.y_te, env.m_te
+            )
+            return acc, loss
+
+        if self.eval_every == 1:
+            acc, loss = fresh(None)
+        else:
+            zeros = jnp.zeros((env.n_clients,), jnp.float32)
+            prev_acc = ctx.prev_accuracy if ctx.prev_accuracy is not None else zeros
+            prev_loss = ctx.prev_loss if ctx.prev_loss is not None else zeros
+            acc, loss = jax.lax.cond(
+                (ctx.t % self.eval_every) == 0,
+                fresh,
+                lambda _: (prev_acc, prev_loss),
+                None,
+            )
         return ctx._replace(accuracy=acc, loss=loss)
 
 

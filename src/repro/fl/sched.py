@@ -13,16 +13,23 @@ optionally scaled by a per-client heterogeneity lane):
   tests/test_fl_api.py and tests/test_sched.py).
 
 - ``AsyncScheduler`` — FedBuff-style buffered execution (Nguyen et al.
-  2022): clients are dispatched with a snapshot of the current global
-  model and finish after their simulated completion time; the server
-  aggregates as soon as ``buffer_k`` updates land, merging each delta with
-  a staleness discount (``phases.StalenessAggregator``), then re-dispatches
-  the landed clients the selector wants next. Wire traffic rides the same
-  codec path (per-client EF residuals included), so async + compression +
-  cost-aware selection compose.
+  2022) over a fixed pool of ``M = SchedulerConfig.max_concurrency``
+  dispatch slots (0 -> M = C): each slot holds one in-flight client's id,
+  model snapshot, and share depth, so dispatch state and per-event compute
+  are O(M) regardless of the population. Clients finish after their
+  simulated completion time; the server aggregates as soon as ``buffer_k``
+  updates land, merging each delta with a staleness discount
+  (``phases.StalenessAggregator``), then assigns freed slots to the idle
+  clients the selector wants next — at most M clients are ever in flight
+  (the FedBuff concurrency cap), decoupled from how many clients selection
+  scores. Wire traffic rides the same codec path (per-client EF residuals
+  included), so async + compression + cost-aware selection compose.
 
-Both schedulers expose ``run(data, cfg, ...) -> FLHistory`` and are picked
-by ``make_scheduler(cfg)`` from ``cfg.scheduler.mode``;
+Both schedulers execute rounds through the cohort runtime (repro.fl.cohort
+gather/scatter): the sync step gathers the ``cohort_size`` selected
+clients' lanes per round, the async step's cohort lanes *are* the M
+dispatch slots. Both expose ``run(data, cfg, ...) -> FLHistory`` and are
+picked by ``make_scheduler(cfg)`` from ``cfg.scheduler.mode``;
 ``repro.fl.engine.run_federated`` is the stable entry point that delegates
 here.
 """
@@ -50,6 +57,7 @@ from repro.fl.api import (
     build_round_step,
     pipeline_from_config,
 )
+from repro.fl.cohort import tree_scatter, tree_take
 from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
 
 __all__ = [
@@ -154,7 +162,8 @@ class _RunSetup:
     env: phases.RoundEnv
     clock: ClientClock
     g0: Any
-    loc0: Any          # g0 broadcast to every client lane
+    loc0: Any          # g0 broadcast to every client lane; None when the
+                       # personalizer is stateless (no per-client model carry)
     residual0: Any     # EF residuals (lossy codec) or None
     pms0: int
     n_layers: int
@@ -181,9 +190,22 @@ def _setup_run(
         init_fn = lambda r: init_mlp(r, data.n_features, data.n_classes)
     g0 = init_fn(r_init)
     n_layers = len(g0)
-    # every client starts from the same init (paper: server broadcasts w(0))
-    loc0 = jax.tree.map(
-        lambda gl: jnp.broadcast_to(gl, (data.n_clients,) + gl.shape), g0
+    # every client starts from the same init (paper: server broadcasts w(0));
+    # stateless personalizers never read per-client locals, so the O(C)
+    # model carry is skipped entirely
+    loc0 = (
+        jax.tree.map(
+            lambda gl: jnp.broadcast_to(gl, (data.n_clients,) + gl.shape), g0
+        )
+        if pipeline.personalizer.stateful
+        else None
+    )
+    residual0 = (
+        jax.tree.map(
+            lambda gl: jnp.zeros((data.n_clients,) + gl.shape, gl.dtype), g0
+        )
+        if pipeline.transmit.lossy
+        else None
     )
     # Algorithm 1: round 1 selects ALL clients; the shared piece is cut from
     # the first round in PMS mode (DLD starts full: A=0 <= 0.25 -> all layers)
@@ -195,7 +217,7 @@ def _setup_run(
         clock=ClientClock.build(g0, pipeline.transmit.codec, data, cfg, comm, client_delay),
         g0=g0,
         loc0=loc0,
-        residual0=jax.tree.map(jnp.zeros_like, loc0) if pipeline.transmit.lossy else None,
+        residual0=residual0,
         pms0=pms0,
         n_layers=n_layers,
         r_loop=r_loop,
@@ -209,10 +231,13 @@ def _setup_run(
 
 @dataclasses.dataclass
 class SyncScheduler:
-    """The synchronous barrier loop: one jitted round step per round, round
-    time = slowest selected client. This is the pre-scheduler engine loop
-    moved verbatim (same rng chain, same accounting) so the committed
-    golden trajectories stay bit-identical."""
+    """The synchronous barrier loop: one jitted cohort-gathered round step
+    per round, round time = slowest selected client. The rng chain and
+    accounting match the pre-scheduler engine loop, and at
+    ``cohort_size=0`` (K = C) the gathered step computes the dense path's
+    numbers exactly, so the committed golden trajectories stay
+    bit-identical; with ``cohort_size=K`` the round's training compute and
+    trained-state memory drop to O(K)."""
 
     def run(
         self,
@@ -239,8 +264,11 @@ class SyncScheduler:
             rng=su.r_loop,
             residual=su.residual0,
             participation=jnp.zeros((data.n_clients,), jnp.int32),
+            loss=jnp.zeros((data.n_clients,), jnp.float32),
+            update_norm=jnp.zeros((data.n_clients,), jnp.float32),
         )
-        round_step = jax.jit(build_round_step(su.env, su.pipeline))
+        round_step = jax.jit(build_round_step(su.env, su.pipeline, cfg.execution))
+        lanes = cfg.execution.resolved_cohort(data.n_clients)
         n_samples = np.asarray(data.n_samples)
         accs, sel_hist, tx_hist, pms_hist, times, wire_hist = [], [], [], [], [], []
         for t in range(cfg.rounds):
@@ -290,22 +318,37 @@ class SyncScheduler:
             tx_wire_bytes=wire,
             sim_clock=np.cumsum(times),
             staleness_mean=np.zeros_like(times),
+            in_flight=np.full(times.shape, lanes, np.int64),
         )
 
 
 # ---------------------------------------------------------------------------
-# AsyncScheduler — buffered staleness-weighted execution on an event queue
+# AsyncScheduler — buffered staleness-weighted execution over dispatch slots
 # ---------------------------------------------------------------------------
 
 
 class AsyncState(NamedTuple):
-    """Carried async server state (a pytree; async-step input/output)."""
+    """Carried async server state (a pytree; async-step input/output).
+
+    In-flight work lives in ``M`` fixed dispatch *slots* keyed by client id
+    (``slot_client``): each slot carries the model snapshot and share depth
+    its client was dispatched with, so dispatch state is O(M) — the
+    population only pays for the cheap per-client vectors (plus the
+    personalized-model / EF-residual carries when those features are on).
+    """
 
     global_params: Any        # layered list, leaves (...) — current server model
-    dispatch_params: Any      # layered list, leaves (C, ...) — the snapshot
-                              # each client was dispatched with
-    local_params: Any         # layered list, leaves (C, ...)
-    pms: jnp.ndarray          # (C,) int32 — share depth frozen at dispatch
+    slot_params: Any          # layered list, leaves (M, ...) — the snapshot
+                              # each in-flight slot's client trains from
+    slot_client: jnp.ndarray  # (M,) int32 — client id occupying each slot
+    slot_pms: jnp.ndarray     # (M,) int32 — share depth frozen at dispatch
+    client_pms: jnp.ndarray   # (C,) int32 — share depth each client was last
+                              # dispatched with (accounting + wire signals)
+    local_params: Any         # layered list, leaves (C, ...); None when the
+                              # personalizer is stateless
+    accuracy: jnp.ndarray     # (C,) last-known distributed-eval accuracy
+    loss: jnp.ndarray         # (C,) last-known eval loss
+    update_norm: jnp.ndarray  # (C,) last-known compressed-delta norm
     rng: jax.Array
     residual: Any = None      # EF residuals (lossy codec only), (C, ...)
     participation: Any = None  # (C,) int32 — cumulative landings
@@ -318,29 +361,38 @@ def _lane(mask: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
 def build_async_step(env: phases.RoundEnv, pipeline: RoundPipeline):
     """Compose a RoundPipeline into the jitted buffered-aggregation step.
 
-    The step maps ``(AsyncState, t, land, staleness, idle, force, clock) ->
-    (AsyncState, out)``: the ``land`` cohort's updates (deltas vs their
-    dispatch snapshots, through the wire codec with EF) are merged into the
-    global model with staleness weights, everyone is evaluated, and the
-    selector decides which of the now-idle clients (this event's landers
-    plus previously parked ones) get re-dispatched with the new model.
-    ``force`` guards the event queue against draining: when nothing else is
-    in flight and the selector wants none of the idle clients, the landing
-    cohort is re-dispatched anyway.
+    The step maps ``(AsyncState, t, land, staleness, active, idle_now,
+    force) -> (AsyncState, out)``. Its cohort lanes are the M dispatch
+    slots: every slot trains its client's gathered data shard from the
+    slot's snapshot (in-flight lanes recompute the same deterministic
+    result each event; only ``land`` lanes commit), the landing deltas ride
+    the wire codec with EF and merge into the global model with staleness
+    weights, the population is evaluated (thinned by ``eval_every``), and
+    the selector's pick among ``idle_now`` clients is assigned to the freed
+    slots in ascending client-id order — at most ``min(free slots, wanted
+    clients)`` dispatches, so in-flight work never exceeds M. ``force``
+    guards the event queue against draining: when nothing else is in
+    flight and the selector wants none of the idle clients, the landing
+    slots re-dispatch their own clients.
     """
+
+    c = env.n_clients
+    stateful = pipeline.personalizer.stateful
 
     def async_step(
         state: AsyncState,
         t: jnp.ndarray,
-        land: jnp.ndarray,        # (C,) bool — updates landing this event
-        staleness: jnp.ndarray,   # (C,) int32 — events since each snapshot
-        idle: jnp.ndarray,        # (C,) bool — parked before this event
+        land: jnp.ndarray,        # (M,) bool — slots whose updates land now
+        staleness: jnp.ndarray,   # (M,) int32 — events since slot dispatch
+        active: jnp.ndarray,      # (M,) bool — slot holds an in-flight client
+        idle_now: jnp.ndarray,    # (C,) bool — clients idle after landing
         force: jnp.ndarray,       # () bool — re-dispatch landers if no one else
-        clock: jnp.ndarray,       # (C,) float32 — latest landing time per client
     ):
         g = state.global_params
         n_layers = len(g)
-        share = layer_share_mask(n_layers, state.pms)  # (C, L)
+        cids = state.slot_client
+        land = land & active
+        share_m = layer_share_mask(n_layers, state.slot_pms)  # (M, L)
 
         if pipeline.transmit.lossy:
             rng, r_fit, r_sel, r_codec = jax.random.split(state.rng, 4)
@@ -351,81 +403,141 @@ def build_async_step(env: phases.RoundEnv, pipeline: RoundPipeline):
         prev_part = (
             state.participation
             if state.participation is not None
-            else jnp.zeros(land.shape, jnp.int32)
+            else jnp.zeros((c,), jnp.int32)
         )
-        participation = prev_part + land.astype(jnp.int32)
-        ctx = phases.RoundContext(
+        # scatter via an out-of-range sentinel so non-landing (and inactive,
+        # possibly duplicate-id) slots touch nothing
+        land_cid = jnp.where(land, cids, c)
+        participation = prev_part.at[land_cid].add(1, mode="drop")
+
+        menv = env.take(cids)
+        cctx = phases.RoundContext(
             t=t,
             global_params=g,
-            local_params=state.local_params,
+            local_params=tree_take(state.local_params, cids) if stateful else None,
             select=land,
-            pms=state.pms,
-            share=share,
-            residual=state.residual,
-            participation=participation,
-            dispatch_params=state.dispatch_params,
+            pms=state.slot_pms,
+            share=share_m,
+            residual=tree_take(state.residual, cids),
+            participation=jnp.take(participation, cids),
+            cohort_idx=cids,
+            cohort_mask=land,
+            dispatch_params=state.slot_params,
             staleness=staleness,
-            clock=clock,
             rng_fit=r_fit,
             rng_codec=r_codec,
             rng_sel=r_sel,
         )
 
-        # --- each lane trains from its own dispatch snapshot ---
-        ctx = ctx._replace(train_model=pipeline.personalizer.train_model(ctx, env))
-        ctx = pipeline.trainer.fit(ctx, env)
-        # lanes still in flight recompute the same deterministic result next
-        # event — only landing lanes commit their local model this event
-        ctx = ctx._replace(
-            new_local=jax.tree.map(
-                lambda new, old: jnp.where(_lane(land, new), new, old),
-                ctx.trained,
-                pipeline.personalizer.local_fallback(ctx, env),
+        # --- each slot lane trains from its own dispatch snapshot ---
+        cctx = cctx._replace(train_model=pipeline.personalizer.train_model(cctx, menv))
+        cctx = pipeline.trainer.fit(cctx, menv)
+        if stateful:
+            cctx = cctx._replace(
+                new_local=jax.tree.map(
+                    lambda new, old: jnp.where(_lane(land, new), new, old),
+                    cctx.trained,
+                    pipeline.personalizer.local_fallback(cctx, menv),
+                )
             )
-        )
-        # --- wire codec: landing clients' deltas vs their snapshots ---
-        ctx = pipeline.transmit.transmit(ctx, env)
+        # --- wire codec: landing slots' deltas vs their snapshots ---
+        cctx = pipeline.transmit.transmit(cctx, menv)
         # --- staleness-weighted buffered merge into the current model ---
-        ctx = pipeline.aggregator.aggregate(ctx, env)
-        # --- evaluation + next cohort, same phases as the barrier loop ---
-        ctx = ctx._replace(eval_model=pipeline.personalizer.eval_model(ctx, env))
-        ctx = pipeline.evaluator.evaluate(ctx, env)
-        ctx = pipeline.selector.select(ctx, env)
-        ctx = ctx._replace(next_pms=pipeline.layer_policy.next_pms(ctx, env, n_layers))
+        cctx = pipeline.aggregator.aggregate(cctx, menv)
 
-        # --- re-dispatch: idle clients (landers + parked) the selector wants;
-        # never let the queue drain ---
-        idle_now = idle | land
-        redisp_sel = ctx.next_select & idle_now
-        need_force = force & ~jnp.any(redisp_sel)
-        redisp = redisp_sel | (land & need_force)
-        new_dispatch = jax.tree.map(
-            lambda d, gl: jnp.where(_lane(redisp, d), jnp.broadcast_to(gl, d.shape), d),
-            state.dispatch_params,
-            ctx.new_global,
+        # --- scatter landing lanes into the (C, ...) client state ---
+        new_local = (
+            tree_scatter(state.local_params, land_cid, cctx.new_local, mode="drop")
+            if stateful
+            else None
+        )
+        new_residual = tree_scatter(state.residual, land_cid, cctx.residual, mode="drop")
+        update_norm = state.update_norm.at[land_cid].set(cctx.update_norm, mode="drop")
+        land_c = jnp.zeros((c,), bool).at[land_cid].set(True, mode="drop")
+        wire_paid_c = (
+            jnp.zeros((c,), jnp.float32).at[land_cid].set(cctx.wire_paid, mode="drop")
+        )
+        share_c = layer_share_mask(n_layers, state.client_pms)  # (C, L)
+        wire_prospective, _ = pipeline.transmit.wire_costs(g, share_c, land_c)
+
+        # --- population phases: eval (eval_every-thinned), selection ---
+        pctx = cctx._replace(
+            local_params=state.local_params,
+            select=land_c,
+            pms=state.client_pms,
+            share=share_c,
+            residual=new_residual,
+            participation=participation,
+            cohort_idx=None,
+            cohort_mask=None,
+            dispatch_params=None,
+            staleness=None,
+            new_local=new_local,
+            wire_bytes=wire_prospective,
+            wire_paid=wire_paid_c,
+            update_norm=update_norm,
+            prev_accuracy=state.accuracy,
+            prev_loss=state.loss,
+        )
+        if getattr(pipeline.evaluator, "eval_every", 1) == 1:
+            pctx = pctx._replace(eval_model=pipeline.personalizer.eval_model(pctx, env))
+            pctx = pipeline.evaluator.evaluate(pctx, env)
+        else:  # thinned: the O(C) composed-model build runs inside the cond
+            pctx = pipeline.evaluator.evaluate(
+                pctx, env,
+                model_fn=lambda ctx=pctx: pipeline.personalizer.eval_model(ctx, env),
+            )
+        pctx = pipeline.selector.select(pctx, env)
+        pctx = pctx._replace(next_pms=pipeline.layer_policy.next_pms(pctx, env, n_layers))
+
+        # --- slot assignment: wanted idle clients -> freed slots, ascending
+        # ids on both sides; never let the queue drain ---
+        want = pctx.next_select & idle_now         # (C,)
+        free = land | ~active                      # (M,)
+        n_assign = jnp.minimum(jnp.sum(want), jnp.sum(free))
+        slot_rank = jnp.cumsum(free.astype(jnp.int32)) - 1
+        cand_order = jnp.argsort(~want, stable=True)  # wanted ids first, ascending
+        assigned = free & (slot_rank < n_assign)
+        new_cid = jnp.take(cand_order, jnp.clip(slot_rank, 0, c - 1))
+        need_force = force & (n_assign == 0)
+        dispatched = jnp.where(need_force, land, assigned)
+        new_slot_client = jnp.where(assigned, new_cid, cids)
+        # pms is frozen at dispatch (like the snapshot): the share mask a
+        # client lands with is the one its completion time was charged for
+        disp_pms = jnp.take(pctx.next_pms, new_slot_client)
+        new_slot_pms = jnp.where(dispatched, disp_pms, state.slot_pms)
+        disp_cid = jnp.where(dispatched, new_slot_client, c)
+        new_client_pms = state.client_pms.at[disp_cid].set(disp_pms, mode="drop")
+        new_slot_params = jax.tree.map(
+            lambda s, gl: jnp.where(_lane(dispatched, s), jnp.broadcast_to(gl, s.shape), s),
+            state.slot_params,
+            pctx.new_global,
         )
 
         land_f = land.astype(jnp.float32)
         new_state = AsyncState(
-            global_params=ctx.new_global,
-            dispatch_params=new_dispatch,
-            local_params=ctx.new_local,
-            # pms is frozen at dispatch (like the snapshot): only re-dispatched
-            # lanes take the layer policy's new depth, so the share mask a
-            # client lands with is the one its completion time was charged for
-            pms=jnp.where(redisp, ctx.next_pms, state.pms),
+            global_params=pctx.new_global,
+            slot_params=new_slot_params,
+            slot_client=new_slot_client,
+            slot_pms=new_slot_pms,
+            client_pms=new_client_pms,
+            local_params=new_local,
+            accuracy=pctx.accuracy,
+            loss=pctx.loss,
+            update_norm=update_norm,
             rng=rng,
-            residual=ctx.residual,
+            residual=new_residual,
             participation=participation,
         )
         out = {
-            "acc": ctx.accuracy,
-            "selected": land,
-            "tx_params": transmitted_parameters(land, share, layer_param_sizes(g)),
-            "pms": state.pms,
-            "wire_per_client": ctx.wire_paid,
-            "redisp": redisp,
-            "next_pms": ctx.next_pms,
+            "acc": pctx.accuracy,
+            "selected": land_c,
+            "tx_params": transmitted_parameters(land, share_m, layer_param_sizes(g)),
+            "pms": state.client_pms,
+            "wire_per_client": wire_paid_c,
+            "dispatched": dispatched,
+            "slot_client": new_slot_client,
+            "client_pms": new_client_pms,
             "staleness_mean": jnp.sum(land_f * staleness.astype(jnp.float32))
             / jnp.maximum(jnp.sum(land_f), 1.0),
         }
@@ -436,18 +548,22 @@ def build_async_step(env: phases.RoundEnv, pipeline: RoundPipeline):
 
 @dataclasses.dataclass
 class AsyncScheduler:
-    """FedBuff-style event-driven server loop.
+    """FedBuff-style event-driven server loop over M dispatch slots.
 
-    A host-side event queue tracks each in-flight client's simulated finish
-    time (``ClientClock``). Each of ``cfg.rounds`` aggregation events pops
-    the ``buffer_k`` earliest arrivals (fewer only if fewer are in flight),
+    A host-side event queue tracks each slot's simulated finish time
+    (``ClientClock``). Each of ``cfg.rounds`` aggregation events pops the
+    ``buffer_k`` earliest arrivals (fewer only if fewer are in flight),
     advances the clock to the last of them plus server latency, and runs
-    the jitted async step: staleness-weighted merge, eval, selection,
-    re-dispatch. ``buffer_k=0`` (the config default) resolves to ``C // 2``.
+    the jitted async step: staleness-weighted merge, eval, selection, slot
+    re-assignment. ``buffer_k=0`` (the config default) resolves to
+    ``C // 2``; ``max_concurrency=0`` resolves to M = C (every client can
+    be in flight, the pre-slot behaviour). With ``max_concurrency=M_c`` at
+    most ``M_c`` clients are ever in flight — FedBuff's concurrency cap,
+    tunable independently of how many clients the selector scores.
 
     The trajectory is a pure function of (data, cfg, pipeline, delays):
     device work is deterministic, and the queue breaks finish-time ties by
-    client index (stable argsort) — same seed + config => identical
+    (finish, client id) lexsort — same seed + config => identical
     FLHistory.
     """
 
@@ -483,11 +599,27 @@ class AsyncScheduler:
                 "phases.StalenessAggregator"
             )
         c = data.n_clients
+        # slot count: max_concurrency is the async-specific knob; when unset,
+        # ExecutionConfig.cohort_size bounds the lanes here too (the cohort
+        # promise — O(K) compute — holds in both scheduler modes)
+        m = min(
+            cfg.scheduler.max_concurrency or cfg.execution.cohort_size or c, c
+        )
+        slot_client0 = np.arange(m, dtype=np.int32)
         state = AsyncState(
             global_params=su.g0,
-            dispatch_params=su.loc0,  # Algorithm 1: everyone starts from w(0)
+            # Algorithm 1: the warm start dispatches w(0) — to the first M
+            # clients (everyone when max_concurrency=0)
+            slot_params=jax.tree.map(
+                lambda gl: jnp.broadcast_to(gl, (m,) + gl.shape), su.g0
+            ),
+            slot_client=jnp.asarray(slot_client0),
+            slot_pms=jnp.full((m,), su.pms0, jnp.int32),
+            client_pms=jnp.full((c,), su.pms0, jnp.int32),
             local_params=su.loc0,
-            pms=jnp.full((c,), su.pms0, jnp.int32),
+            accuracy=jnp.zeros((c,), jnp.float32),
+            loss=jnp.zeros((c,), jnp.float32),
+            update_norm=jnp.zeros((c,), jnp.float32),
             rng=su.r_loop,
             residual=su.residual0,
             participation=jnp.zeros((c,), jnp.int32),
@@ -495,54 +627,64 @@ class AsyncScheduler:
         step = jax.jit(build_async_step(su.env, su.pipeline))
         buffer_k = self.buffer_k or cfg.scheduler.buffer_k or max(1, c // 2)
 
-        # --- host event queue: everyone dispatched at t=0 with w(0) ---
-        pms_np = np.full((c,), su.pms0, np.int32)
-        finish = clock_fn.durations(pms_np)
-        in_flight = np.ones((c,), bool)
-        dispatch_version = np.zeros((c,), np.int64)
-        land_clock = np.zeros((c,), np.float32)
+        # --- host event queue over the M slots ---
+        slot_client = slot_client0.copy()
+        client_pms = np.full((c,), su.pms0, np.int32)
+        finish = clock_fn.durations(client_pms)[slot_client]  # (M,)
+        active = np.ones((m,), bool)
+        in_flight_clients = np.zeros((c,), bool)
+        in_flight_clients[slot_client0] = True
+        dispatch_version = np.zeros((m,), np.int64)
         sim_clock = 0.0
         version = 0
 
         accs, sel_hist, tx_hist, pms_hist = [], [], [], []
-        times, wire_hist, clock_hist, stale_hist = [], [], [], []
+        times, wire_hist, clock_hist, stale_hist, flight_hist = [], [], [], [], []
         for t in range(cfg.rounds):
-            k = max(1, min(buffer_k, int(in_flight.sum())))
-            order = np.argsort(np.where(in_flight, finish, np.inf), kind="stable")
+            n_active = int(active.sum())
+            k = max(1, min(buffer_k, n_active))
+            # earliest finishers land; ties break by client id (deterministic)
+            order = np.lexsort((slot_client, np.where(active, finish, np.inf)))
             landers = order[:k]
-            land = np.zeros((c,), bool)
+            land = np.zeros((m,), bool)
             land[landers] = True
             new_clock = float(finish[landers].max()) + comm.server_latency_s
             staleness = np.where(land, version - dispatch_version, 0).astype(np.int32)
-            idle = ~in_flight
-            force = bool(int(in_flight.sum()) - k == 0)
-            land_clock = np.where(land, np.float32(new_clock), land_clock)
+            landed_clients = slot_client[landers]
+            idle_now = ~in_flight_clients
+            idle_now[landed_clients] = True
+            force = bool(n_active - k == 0)
 
             state, out = step(
                 state,
                 jnp.asarray(t),
                 jnp.asarray(land),
                 jnp.asarray(staleness),
-                jnp.asarray(idle),
+                jnp.asarray(active),
+                jnp.asarray(idle_now),
                 jnp.asarray(force),
-                jnp.asarray(land_clock),
             )
             out = jax.device_get(out)
 
-            redisp = np.asarray(out["redisp"])
-            pms_next = np.asarray(out["next_pms"], np.int32)
-            in_flight = (in_flight & ~land) | redisp
-            dispatch_version = np.where(redisp, version + 1, dispatch_version)
-            finish = np.where(redisp, new_clock + clock_fn.durations(pms_next), finish)
+            dispatched = np.asarray(out["dispatched"])
+            slot_client = np.asarray(out["slot_client"], np.int32)
+            client_pms = np.asarray(out["client_pms"], np.int32)
+            active = (active & ~land) | dispatched
+            in_flight_clients[landed_clients] = False
+            in_flight_clients[slot_client[dispatched]] = True
+            d_all = clock_fn.durations(client_pms)
+            finish = np.where(dispatched, new_clock + d_all[slot_client], finish)
+            dispatch_version = np.where(dispatched, version + 1, dispatch_version)
 
             accs.append(out["acc"])
-            sel_hist.append(land)
+            sel_hist.append(np.asarray(out["selected"]))
             tx_hist.append(float(out["tx_params"]))
             pms_hist.append(out["pms"])
             wire_hist.append(np.asarray(out["wire_per_client"], np.float64).sum())
             times.append(new_clock - sim_clock)
             clock_hist.append(new_clock)
             stale_hist.append(float(out["staleness_mean"]))
+            flight_hist.append(int(in_flight_clients.sum()))
             sim_clock = new_clock
             version += 1
             if progress and (t % 10 == 0 or t == cfg.rounds - 1):
@@ -564,6 +706,7 @@ class AsyncScheduler:
             tx_wire_bytes=wire,
             sim_clock=np.asarray(clock_hist),
             staleness_mean=np.asarray(stale_hist),
+            in_flight=np.asarray(flight_hist, np.int64),
         )
 
 

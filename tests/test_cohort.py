@@ -1,0 +1,358 @@
+"""Cohort execution runtime: gather/scatter primitives, ExecutionConfig
+plumbing, cohort-vs-dense step equivalence, eval_every thinning, the async
+max_concurrency cap, and the SGDTrainer remainder fix."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ExecutionConfig, SchedulerConfig
+from repro.core.selection import CohortSelection, cohort_from_mask, cohort_from_scores, get_strategy
+from repro.data import make_federated_classification
+from repro.fl import FLConfig, api, phases, run_federated
+from repro.fl.cohort import cohort_indices, tree_scatter, tree_take
+from repro.models.mlp import init_mlp, mlp_loss
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    return make_federated_classification(
+        n_clients=16, n_classes=4, n_features=20,
+        samples_per_client_range=(40, 60), dirichlet_alpha=50.0,
+        client_shift=0.05, class_sep=5.0, seed=3,
+    )
+
+
+# ---------------------------------------------------------------------------
+# ExecutionConfig: validation, flat kwargs, cohort resolution
+# ---------------------------------------------------------------------------
+
+
+def test_execution_config_validation():
+    with pytest.raises(ValueError, match="cohort_size"):
+        ExecutionConfig(cohort_size=-1)
+    with pytest.raises(ValueError, match="eval_every"):
+        ExecutionConfig(eval_every=0)
+    with pytest.raises(ValueError, match="max_concurrency"):
+        SchedulerConfig(max_concurrency=-1)
+
+
+def test_execution_flat_and_nested_kwargs():
+    cfg = FLConfig(cohort_size=32, eval_every=4, max_concurrency=8)
+    assert cfg.execution == ExecutionConfig(cohort_size=32, eval_every=4)
+    assert cfg.cohort_size == 32 and cfg.eval_every == 4
+    assert cfg.scheduler.max_concurrency == 8 and cfg.max_concurrency == 8
+    cfg2 = FLConfig(execution=ExecutionConfig(cohort_size=32, eval_every=4))
+    assert cfg2.execution == cfg.execution
+    assert FLConfig().execution == ExecutionConfig()  # default: dense-equivalent
+    with pytest.raises(ValueError, match="not both"):
+        FLConfig(execution=ExecutionConfig(cohort_size=4), eval_every=2)
+
+
+def test_resolved_cohort():
+    assert ExecutionConfig().resolved_cohort(100) == 100
+    assert ExecutionConfig(cohort_size=16).resolved_cohort(100) == 16
+    assert ExecutionConfig(cohort_size=200).resolved_cohort(100) == 100
+
+
+def test_pipeline_from_config_wires_eval_every_and_remainder():
+    pipe = api.pipeline_from_config(FLConfig(eval_every=3, remainder="pad"))
+    assert pipe.evaluator.eval_every == 3
+    assert pipe.trainer.remainder == "pad"
+    with pytest.raises(ValueError, match="remainder"):
+        FLConfig(remainder="truncate")
+
+
+# ---------------------------------------------------------------------------
+# cohort index API (core.selection) + gather/scatter primitives (fl.cohort)
+# ---------------------------------------------------------------------------
+
+
+def test_cohort_from_mask_orders_and_masks():
+    mask = jnp.asarray([False, True, False, True, True, False])
+    sel = cohort_from_mask(mask, 4)
+    assert isinstance(sel, CohortSelection)
+    # selected ids ascending first, then unselected padding ascending
+    assert np.asarray(sel.idx).tolist() == [1, 3, 4, 0]
+    assert np.asarray(sel.valid).tolist() == [True, True, True, False]
+    # truncation keeps the first K selected ids
+    sel2 = cohort_from_mask(mask, 2)
+    assert np.asarray(sel2.idx).tolist() == [1, 3]
+    assert np.asarray(sel2.valid).all()
+    assert np.asarray(cohort_indices(mask, 4)).tolist() == [1, 3, 4, 0]
+
+
+def test_cohort_from_scores_matches_mask_form():
+    scores = jnp.asarray([0.1, 5.0, 3.0, 0.2])
+    sel = cohort_from_scores(scores, jnp.ones(4, bool), jnp.asarray(2), 3)
+    assert np.asarray(sel.idx).tolist()[:2] == [1, 2]
+    assert np.asarray(sel.valid).tolist() == [True, True, False]
+
+
+def test_select_cohort_default_matches_mask():
+    strat = get_strategy("fedavg", fraction=0.5)
+    obs_mask = np.random.default_rng(0)
+    m = jnp.zeros(8)
+    from repro.core.selection import ClientObservations
+
+    obs = ClientObservations(m, m, jnp.ones(8), jnp.ones(8))
+    rng = jax.random.PRNGKey(4)
+    mask = np.asarray(strat.select(obs, jnp.asarray(1), rng))
+    sel = strat.select_cohort(obs, jnp.asarray(1), rng, 4)
+    assert sorted(np.asarray(sel.idx)[np.asarray(sel.valid)].tolist()) == np.nonzero(mask)[0].tolist()
+
+
+def test_tree_take_scatter_roundtrip_and_none():
+    tree = {"w": jnp.arange(12.0).reshape(6, 2), "n": jnp.arange(6, dtype=jnp.int32)}
+    idx = jnp.asarray([4, 1])
+    taken = tree_take(tree, idx)
+    assert np.asarray(taken["w"]).tolist() == [[8.0, 9.0], [2.0, 3.0]]
+    # scatter-back of the gathered lanes is the identity
+    back = tree_scatter(tree, idx, taken)
+    for leaf, orig in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(leaf), np.asarray(orig))
+    # modified lanes land only at idx
+    mod = jax.tree.map(lambda l: l + 1, taken)
+    out = tree_scatter(tree, idx, mod)
+    assert np.asarray(out["n"]).tolist() == [0, 2, 2, 3, 5, 5]
+    # None passes through (stateless local params / lossless residuals)
+    assert tree_take(None, idx) is None and tree_scatter(None, idx, None) is None
+    # drop mode: out-of-range sentinel lanes touch nothing (async scheduler)
+    idx_drop = jnp.asarray([4, 6])
+    out2 = tree_scatter(tree, idx_drop, mod, mode="drop")
+    assert np.asarray(out2["n"]).tolist() == [0, 1, 2, 3, 5, 5]
+
+
+# ---------------------------------------------------------------------------
+# cohort-vs-dense equivalence + O(K) execution end-to-end
+# ---------------------------------------------------------------------------
+
+
+def _init_state(ds, g0, select, stateful=True):
+    c = ds.n_clients
+    loc0 = (
+        jax.tree.map(lambda l: jnp.broadcast_to(l, (c,) + l.shape), g0)
+        if stateful
+        else None
+    )
+    return api.RoundState(
+        global_params=g0, local_params=loc0,
+        accuracy=jnp.zeros((c,)), select=select,
+        pms=jnp.full((c,), len(g0), jnp.int32), rng=jax.random.PRNGKey(7),
+        participation=jnp.zeros((c,), jnp.int32),
+        loss=jnp.zeros((c,)), update_norm=jnp.zeros((c,)),
+    )
+
+
+@pytest.mark.parametrize("personalization", ["ft", "none"])
+def test_cohort_step_matches_dense_when_selection_fits(small_ds, personalization):
+    """Gathered (K,) lanes compute the dense path's numbers exactly when the
+    cohort covers the selection (the tentpole's bit-identity claim at K<C)."""
+    c = small_ds.n_clients
+    cfg = FLConfig(strategy="fedavg", personalization=personalization,
+                   fraction=0.25, rounds=3, epochs=1)
+    env = api.build_env(small_ds, 0)
+    pipe = api.pipeline_from_config(cfg)
+    g0 = init_mlp(jax.random.PRNGKey(0), small_ds.n_features, small_ds.n_classes)
+    sel0 = jnp.asarray([True] * 4 + [False] * (c - 4))
+    stateful = pipe.personalizer.stateful
+    dense = jax.jit(api.build_round_step(env, pipe))
+    cohort = jax.jit(api.build_round_step(env, pipe, ExecutionConfig(cohort_size=4)))
+    sd = _init_state(small_ds, g0, sel0, stateful)
+    sc = _init_state(small_ds, g0, sel0, stateful)
+    for t in range(3):
+        sd, od = dense(sd, jnp.asarray(t))
+        sc, oc = cohort(sc, jnp.asarray(t))
+        np.testing.assert_array_equal(np.asarray(od["selected"]), np.asarray(oc["selected"]))
+        np.testing.assert_array_equal(np.asarray(od["acc"]), np.asarray(oc["acc"]))
+        np.testing.assert_array_equal(
+            np.asarray(od["wire_per_client"]), np.asarray(oc["wire_per_client"])
+        )
+
+
+def test_cohort_run_end_to_end_stateless(small_ds):
+    """cohort_size bounds the trained lanes; the stateless personalizer
+    drops the (C, P) local carry; history records the lane count."""
+    h = run_federated(
+        small_ds,
+        FLConfig(strategy="fedavg", personalization="none", fraction=0.25,
+                 rounds=4, epochs=1, cohort_size=4),
+    )
+    assert np.isfinite(h.accuracy_mean).all()
+    np.testing.assert_array_equal(h.in_flight, 4)
+    # steady-state cohorts (after the truncated warm start) hold 4 clients
+    assert (h.selected[1:].sum(axis=1) == 4).all()
+
+
+def test_cohort_run_with_lossy_codec_and_dld(small_ds):
+    """Cohort execution composes with EF residual state + partial sharing."""
+    h = run_federated(
+        small_ds,
+        FLConfig(strategy="acsp-fl", personalization="dld", rounds=5, epochs=1,
+                 codec="int8", cohort_size=8),
+    )
+    assert np.isfinite(h.accuracy_mean).all()
+    assert h.accuracy_mean[-1] > h.accuracy_mean[0]
+    assert (h.selected.sum(axis=1) <= 8).all()
+
+
+# ---------------------------------------------------------------------------
+# eval_every: thinned distributed eval carries last-known accuracy
+# ---------------------------------------------------------------------------
+
+
+def test_eval_every_carries_last_known_accuracy(small_ds):
+    kw = dict(strategy="fedavg", personalization="none", fraction=0.5,
+              rounds=6, epochs=1)
+    every = run_federated(small_ds, FLConfig(**kw))
+    thinned = run_federated(small_ds, FLConfig(eval_every=2, **kw))
+    acc = thinned.accuracy_per_client
+    # skipped rounds repeat the previous row; eval rounds match the
+    # every-round run exactly (selection is rng-driven, not accuracy-driven)
+    for t in range(6):
+        if t % 2 == 0:
+            np.testing.assert_array_equal(acc[t], every.accuracy_per_client[t])
+        else:
+            np.testing.assert_array_equal(acc[t], acc[t - 1])
+
+
+def test_eval_every_async(small_ds):
+    h = run_federated(
+        small_ds,
+        FLConfig(strategy="fedavg", personalization="none", fraction=1.0,
+                 rounds=6, epochs=1, scheduler="async", buffer_k=4,
+                 heterogeneity=0.5, eval_every=3),
+    )
+    assert np.isfinite(h.accuracy_mean).all()
+    # between eval events the history rows are carried verbatim
+    assert (h.accuracy_per_client[1] == h.accuracy_per_client[0]).all()
+    assert (h.accuracy_per_client[2] == h.accuracy_per_client[0]).all()
+
+
+# ---------------------------------------------------------------------------
+# async max_concurrency: at most M_c clients in flight (FedBuff cap)
+# ---------------------------------------------------------------------------
+
+
+def test_async_max_concurrency_caps_in_flight(small_ds):
+    m_c = 3
+    h = run_federated(
+        small_ds,
+        FLConfig(strategy="fedavg", personalization="none", fraction=1.0,
+                 rounds=10, epochs=1, scheduler="async", buffer_k=2,
+                 max_concurrency=m_c, heterogeneity=0.8),
+    )
+    assert (h.in_flight <= m_c).all()
+    assert (h.in_flight >= 1).all()          # the queue never drains
+    assert (h.selected.sum(axis=1) <= m_c).all()
+    assert np.isfinite(h.accuracy_mean).all()
+
+
+def test_async_max_concurrency_decoupled_from_selection(small_ds):
+    """Selection may want half the population; the slot pool still bounds
+    in-flight work (concurrency and selection tunable independently)."""
+    h = run_federated(
+        small_ds,
+        FLConfig(strategy="oort", personalization="none", fraction=0.5,
+                 rounds=8, epochs=1, scheduler="async", buffer_k=2,
+                 max_concurrency=4, heterogeneity=0.5),
+    )
+    assert (h.in_flight <= 4).all()
+    assert np.isfinite(h.accuracy_mean).all()
+
+
+def test_async_cohort_size_bounds_slots_when_concurrency_unset(small_ds):
+    """The O(K) promise holds in async mode too: with max_concurrency=0,
+    ExecutionConfig.cohort_size caps the dispatch-slot pool."""
+    h = run_federated(
+        small_ds,
+        FLConfig(strategy="fedavg", personalization="none", fraction=1.0,
+                 rounds=6, epochs=1, scheduler="async", buffer_k=2,
+                 cohort_size=5, heterogeneity=0.5),
+    )
+    assert (h.in_flight <= 5).all()
+    assert np.isfinite(h.accuracy_mean).all()
+
+
+def test_async_default_concurrency_matches_population(small_ds):
+    h = run_federated(
+        small_ds,
+        FLConfig(strategy="fedavg", personalization="none", fraction=1.0,
+                 rounds=3, epochs=1, scheduler="async",
+                 buffer_k=small_ds.n_clients),
+    )
+    # M=0 -> C slots: the warm start dispatches everyone
+    np.testing.assert_array_equal(h.in_flight, small_ds.n_clients)
+
+
+# ---------------------------------------------------------------------------
+# SGDTrainer remainder: the tiny-client / truncated-tail fix
+# ---------------------------------------------------------------------------
+
+
+def _tiny_client_ds():
+    """C=2 slab of 40 slots: client 0 has 3 valid samples, client 1 has 40.
+    With batch_size=32 the seed's remainder truncation trains on slots
+    [0, 32) only — client 1 silently loses 8 real samples."""
+    rng = np.random.default_rng(0)
+    c, n, f = 2, 40, 5
+    x = rng.normal(size=(c, n, f)).astype(np.float32)
+    y = rng.integers(0, 3, size=(c, n)).astype(np.int32)
+    m = np.zeros((c, n), bool)
+    m[0, :3] = True
+    m[1, :] = True
+    return x, y, m
+
+
+@pytest.mark.parametrize("remainder", ["drop", "pad"])
+def test_sgd_trainer_three_sample_client_is_finite(remainder):
+    x, y, m = _tiny_client_ds()
+    trainer = phases.SGDTrainer(epochs=2, batch_size=32, lr=0.1, remainder=remainder)
+    g0 = init_mlp(jax.random.PRNGKey(0), 5, 3, hidden=(8,))
+    train_model = jax.tree.map(lambda l: jnp.broadcast_to(l, (2,) + l.shape), g0)
+    env = phases.RoundEnv(
+        x_tr=jnp.asarray(x), y_tr=jnp.asarray(y), m_tr=jnp.asarray(m),
+        x_te=jnp.asarray(x), y_te=jnp.asarray(y), m_te=jnp.asarray(m),
+        n_samples=jnp.asarray(m.sum(1), jnp.float32), delay=jnp.ones((2,)),
+        n_clients=2, loss_fn=mlp_loss, acc_fn=mlp_loss, population=2,
+    )
+    ctx = phases.RoundContext(
+        t=jnp.asarray(0), train_model=train_model, rng_fit=jax.random.PRNGKey(1),
+        cohort_idx=jnp.arange(2), cohort_mask=jnp.ones((2,), bool),
+    )
+    out = trainer.fit(ctx, env)
+    for leaf in jax.tree.leaves(out.trained):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_sgd_trainer_pad_trains_the_truncated_tail():
+    x, y, m = _tiny_client_ds()
+    g0 = init_mlp(jax.random.PRNGKey(0), 5, 3, hidden=(8,))
+    train_model = jax.tree.map(lambda l: jnp.broadcast_to(l, (2,) + l.shape), g0)
+    env = phases.RoundEnv(
+        x_tr=jnp.asarray(x), y_tr=jnp.asarray(y), m_tr=jnp.asarray(m),
+        x_te=jnp.asarray(x), y_te=jnp.asarray(y), m_te=jnp.asarray(m),
+        n_samples=jnp.asarray(m.sum(1), jnp.float32), delay=jnp.ones((2,)),
+        n_clients=2, loss_fn=mlp_loss, acc_fn=mlp_loss, population=2,
+    )
+    ctx = phases.RoundContext(
+        t=jnp.asarray(0), train_model=train_model, rng_fit=jax.random.PRNGKey(1),
+        cohort_idx=jnp.arange(2), cohort_mask=jnp.ones((2,), bool),
+    )
+    results = {}
+    for remainder in ("drop", "pad"):
+        trainer = phases.SGDTrainer(epochs=1, batch_size=32, lr=0.1, remainder=remainder)
+        results[remainder] = trainer.fit(ctx, env).trained
+    # the 3-sample client fits in batch 0 either way: its extra all-masked
+    # tail batch must be a no-op (guarded masked loss), params identical
+    for d, p in zip(jax.tree.leaves(results["drop"]), jax.tree.leaves(results["pad"])):
+        np.testing.assert_array_equal(np.asarray(d)[0], np.asarray(p)[0])
+    # the 40-sample client's dropped tail (slots 32..39) now trains: differs
+    diffs = [
+        np.abs(np.asarray(d)[1] - np.asarray(p)[1]).max()
+        for d, p in zip(jax.tree.leaves(results["drop"]), jax.tree.leaves(results["pad"]))
+    ]
+    assert max(diffs) > 0.0

@@ -101,6 +101,46 @@ def test_share_mask_prefix_structure(pms, n_layers):
     assert m.sum() == min(pms, n_layers)
 
 
+@given(
+    c=st.integers(min_value=1, max_value=24),
+    k_frac=st.floats(min_value=0.01, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_cohort_gather_scatter_roundtrip(c, k_frac, seed):
+    """Cohort runtime invariant: scatter(gather(state, idx), idx) == state on
+    the selected lanes and leaves unselected lanes bit-identical, for pytree
+    leaves of mixed dtypes including EF residuals."""
+    from repro.fl.cohort import cohort_indices, tree_scatter, tree_take
+
+    rng = np.random.default_rng(seed)
+    k = max(1, int(round(k_frac * c)))
+    select = jnp.asarray(rng.random(c) > 0.5)
+    # mixed-dtype layered state: f32 params, f16 EF residuals, i32 counters
+    state = [
+        {"w": jnp.asarray(rng.normal(size=(c, 3, 2)), jnp.float32),
+         "b": jnp.asarray(rng.normal(size=(c, 2)), jnp.float32)},
+        {"residual": jnp.asarray(rng.normal(size=(c, 4)), jnp.float16),
+         "count": jnp.asarray(rng.integers(0, 100, (c,)), jnp.int32)},
+    ]
+    idx = cohort_indices(select, k)
+    # idx is a valid, duplicate-free id set of the requested size
+    idx_np = np.asarray(idx)
+    assert idx_np.shape == (k,) and len(set(idx_np.tolist())) == k
+    assert ((0 <= idx_np) & (idx_np < c)).all()
+    # round-trip identity on every leaf
+    back = tree_scatter(state, idx, tree_take(state, idx))
+    for leaf, orig in zip(jax.tree.leaves(back), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(leaf), np.asarray(orig))
+    # a modified scatter touches exactly the idx lanes
+    update = jax.tree.map(lambda l: l + jnp.ones((), l.dtype), tree_take(state, idx))
+    out = tree_scatter(state, idx, update)
+    untouched = np.setdiff1d(np.arange(c), idx_np)
+    for leaf, orig in zip(jax.tree.leaves(out), jax.tree.leaves(state)):
+        leaf, orig = np.asarray(leaf), np.asarray(orig)
+        np.testing.assert_array_equal(leaf[untouched], orig[untouched])
+        np.testing.assert_array_equal(leaf[idx_np], (orig + 1)[idx_np])
+
+
 @given(seed=st.integers(min_value=0, max_value=2**16))
 def test_partial_aggregate_idempotent_on_identical_clients(seed):
     rng = np.random.default_rng(seed)
