@@ -2,8 +2,10 @@
 # test set (including tests marked slow, which tier-1 `make test` skips via
 # pytest.ini addopts) plus the benchmark smoke so perf entry points can't
 # rot (kernel + codec + selection grid + sync/async scheduler grid + the
-# cohort-vs-dense scale bench, which rewrites BENCH_scale.json each run so
-# the O(K)-execution speedup is tracked as a trajectory).
+# cohort-vs-dense scale bench + the round-fused loop bench, which rewrite
+# BENCH_scale.json / BENCH_loop.json each run so the O(K)-execution and
+# fused-loop speedups are tracked as trajectories; loop_bench's smoke
+# guard fails CI if the fused executor regresses vs per-round dispatch).
 
 PY := PYTHONPATH=src python
 

@@ -1,0 +1,327 @@
+"""Loop bench — round-fused executor vs per-round dispatch.
+
+The tentpole claim of the round-fused executor: with ``scan_chunk`` rounds
+fused into one on-device ``lax.scan`` (donated carry, one ``device_get`` +
+one vectorized accounting pass per chunk), server-loop throughput
+(rounds/sec) should track device compute, not per-round host overhead.
+For each population size this bench runs the same synchronous rounds two
+ways —
+
+  per-round : the pre-fusion server loop, replicated faithfully — one
+              jitted round-step dispatch, one blocking ``device_get``, and
+              one numpy->jnp->float ``comm.round_time`` accounting pass
+              PER ROUND (what ``SyncScheduler.run`` did before the fused
+              executor + vectorized ``CommModel.round_times`` landed)
+  fused     : ``api.build_chunk_step`` chunks at a few ``scan_chunk``
+              sizes, driven exactly like ``SyncScheduler.run`` drives them
+              (the best chunk is reported)
+
+— at fixed K = 50 against the small HAR MLP, plus a donation audit: after
+a donated chunk step the input ``RoundState`` buffers must be deleted
+(updated in place), so live trained-state memory is ONE slab, not two.
+
+Backend honesty: the >=3x small-config target assumes an accelerator-style
+async device, where the per-round host sync (dispatch + blocking fetch +
+accounting) serializes against ~sub-ms device steps. On the CPU backend
+the round executable itself costs milliseconds of in-process op overhead
+that fusing cannot remove (and large unrolled chunks get *slower* from
+code-size effects), so the achievable win is the eliminated per-round
+accounting/sync slice only. The bench therefore always enforces the
+no-regression bound, and enforces the 3x target only off-CPU; measured
+numbers and the backend are recorded in BENCH_loop.json either way.
+
+Emits experiments/bench/loop_bench.csv and BENCH_loop.json (repo root,
+committed — tracked as a trajectory like BENCH_scale.json). Smoke mode
+(REPRO_BENCH_SMOKE=1, via ``benchmarks.run --smoke``) runs the small
+config only and applies the smoke regression guard (>=1.5x off-CPU,
+no-regression on CPU). Run standalone with
+``PYTHONPATH=src python -m benchmarks.loop_bench [--smoke]``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import write_csv
+from repro.core.metrics import BYTES_PER_PARAM, CommModel
+from repro.data import make_har_dataset
+from repro.fl import FLConfig, api
+from repro.fl.sched import ClientClock
+from repro.models.mlp import init_mlp
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+HIDDEN = (64, 64)              # the small HAR MLP (561 features in)
+K = 50
+TARGET_SPEEDUP_SMALL = 3.0     # accelerator backends: host sync dominates
+SMOKE_GUARD_SPEEDUP = 1.5      # smoke regression guard (off-CPU)
+NO_REGRESSION = 0.90           # every backend: fused must not lose rounds/sec
+
+
+def _setup(c: int, rounds: int, eval_every: int):
+    ds = make_har_dataset("uci-har", seed=0, scale=0.02, n_clients=c)
+    cfg = FLConfig(
+        strategy="fedavg", personalization="none", fraction=K / c,
+        epochs=1, rounds=rounds, cohort_size=K, eval_every=eval_every,
+    )
+    env = api.build_env(ds, cfg.seed)
+    pipe = api.pipeline_from_config(cfg)
+    g0 = init_mlp(jax.random.PRNGKey(0), ds.n_features, ds.n_classes, hidden=HIDDEN)
+    comm = CommModel()
+    clock = ClientClock.build(g0, pipe.transmit.codec, ds, cfg, comm)
+    round_step = api.build_round_step(env, pipe, cfg.execution)
+
+    def mkstate():
+        return api.RoundState(
+            global_params=jax.tree.map(jnp.array, g0),
+            local_params=None,  # NoPersonalizer is stateless: no (C, P) carry
+            accuracy=jnp.zeros((c,)),
+            select=jnp.ones((c,), bool),
+            pms=jnp.full((c,), len(g0), jnp.int32),
+            rng=jax.random.PRNGKey(1),
+            participation=jnp.zeros((c,), jnp.int32),
+            loss=jnp.zeros((c,)),
+            update_norm=jnp.zeros((c,)),
+        )
+
+    return ds, cfg, comm, clock, round_step, mkstate
+
+
+def _time_interleaved(fns: dict, reps: int) -> dict:
+    """Best-of-``reps`` wall-clock per mode, measured round-robin so a
+    transient machine-load spike hits every mode equally instead of
+    skewing whichever happened to be timed during it (the speedup is a
+    RATIO of these — sequential timing makes the CI guard flaky on a
+    loaded box)."""
+    for fn in fns.values():
+        fn()  # warm (compiles cached executables)
+    best = {k: np.inf for k in fns}
+    for _ in range(reps):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            fn()
+            best[k] = min(best[k], time.perf_counter() - t0)
+    return best
+
+
+def _per_round_loop(ds, cfg, comm, clock, round_step, mkstate):
+    """The pre-fusion ``SyncScheduler.run`` inner loop, accounting churn
+    included: per-round numpy->jnp conversions into an eager
+    ``comm.round_time`` call and a blocking ``float()``."""
+    step = jax.jit(round_step)
+
+    def run():
+        state = mkstate()
+        for t in range(cfg.rounds):
+            state, out = step(state, jnp.asarray(t))
+            out = jax.device_get(out)
+            wire_pc = np.asarray(out["wire_per_client"], np.float64)
+            per_client_params = clock.shared_params(out["pms"])
+            float(
+                comm.round_time(
+                    jnp.asarray(wire_pc, jnp.float32),
+                    jnp.asarray(clock.round_flops(out["pms"]), jnp.float32),
+                    jnp.asarray(out["selected"]),
+                    rx_bytes_per_client=jnp.asarray(
+                        per_client_params * BYTES_PER_PARAM, jnp.float32
+                    ),
+                    delay=None,
+                )
+            )
+
+    return run
+
+
+def _fused_loop(ds, cfg, comm, clock, round_step, mkstate, chunk: int):
+    """The fused executor loop exactly as ``SyncScheduler.run`` drives it:
+    one donated chunk dispatch, one ``device_get``, one vectorized
+    ``round_times`` pass per chunk."""
+    rounds = cfg.rounds
+    lens = sorted({min(chunk, rounds - t0) for t0 in range(0, rounds, chunk)})
+    steps = {n: api.build_chunk_step(round_step, n) for n in lens}
+
+    def run():
+        state = mkstate()
+        for t0 in range(0, rounds, chunk):
+            n = min(chunk, rounds - t0)
+            state, outs = steps[n](state, jnp.arange(t0, t0 + n, dtype=jnp.int32))
+            outs = jax.device_get(outs)
+            pms = np.asarray(outs["pms"])
+            wire = np.asarray(outs["wire_per_client"], np.float64)
+            comm.round_times(
+                wire, clock.round_flops(pms), np.asarray(outs["selected"]),
+                rx_bytes=clock.shared_params(pms) * float(BYTES_PER_PARAM),
+            )
+
+    return run
+
+
+def _donation_audit(round_step, mkstate, chunk: int) -> dict:
+    """Donated chunk steps must update the carried state in place — and
+    that has to be MEASURED, not inferred: ``is_deleted()`` on the input
+    is jax-side bookkeeping that reads True even when XLA could not reuse
+    a donated buffer and silently double-allocated. So compare total live
+    device bytes (``jax.live_arrays``) after a non-donated chunk step
+    (input + output both alive) against a donated one (same ambient
+    buffers, input consumed): the donated run must hold one carried-state
+    copy less."""
+    plain = jax.jit(lambda s, t: jax.lax.scan(round_step, s, t, unroll=chunk))
+    donated = api.build_chunk_step(round_step, chunk)
+    ts = jnp.arange(chunk, dtype=jnp.int32)
+
+    def live_mb():
+        return sum(
+            a.size * a.dtype.itemsize for a in jax.live_arrays()
+            if not a.is_deleted()
+        ) / 1e6
+
+    state = mkstate()
+    state_mb = sum(
+        leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(state)
+    ) / 1e6
+    out_state, outs = plain(state, ts)
+    jax.block_until_ready(jax.tree.leaves(out_state))
+    live_no_donation = live_mb()
+    del state, out_state, outs
+
+    state = mkstate()
+    out_state, outs = donated(state, ts)
+    jax.block_until_ready(jax.tree.leaves(out_state))
+    live_donated = live_mb()
+    input_deleted = all(leaf.is_deleted() for leaf in jax.tree.leaves(state))
+    del state, out_state, outs
+
+    return {
+        "state_mb": state_mb,
+        "input_deleted": input_deleted,
+        "live_state_mb_no_donation": live_no_donation,
+        "live_state_mb_donated": live_donated,
+        # the in-place claim: donation frees (at least) one full state copy
+        "in_place": bool(
+            input_deleted and live_donated <= live_no_donation - 0.9 * state_mb
+        ),
+    }
+
+
+def _bench_case(c: int, rounds: int, eval_every: int, chunks, reps: int) -> dict:
+    su = _setup(c, rounds, eval_every)
+    ds, cfg, comm, clock, round_step, mkstate = su
+    fns = {"per-round": _per_round_loop(*su)}
+    for chunk in chunks:
+        fns[chunk] = _fused_loop(*su, chunk=chunk)
+    best = _time_interleaved(fns, reps)
+    base_rps = rounds / best.pop("per-round")
+    fused = {chunk: rounds / t for chunk, t in best.items()}
+    best_chunk = max(fused, key=fused.get)
+    audit = _donation_audit(round_step, mkstate, min(best_chunk, rounds))
+    return {
+        "C": c,
+        "K": K,
+        "rounds": rounds,
+        "eval_every": eval_every,
+        "per_round_rps": base_rps,
+        "fused_rps_by_chunk": {str(k): v for k, v in fused.items()},
+        "best_chunk": best_chunk,
+        "fused_rps": fused[best_chunk],
+        "speedup": fused[best_chunk] / base_rps,
+        **{f"donation_{k}": v for k, v in audit.items()},
+    }
+
+
+def run():
+    backend = jax.default_backend()
+    on_cpu = backend == "cpu"
+    if SMOKE:
+        cases = [_bench_case(100, rounds=24, eval_every=1, chunks=(2, 4, 6), reps=3)]
+    else:
+        cases = [
+            _bench_case(100, rounds=60, eval_every=1, chunks=(2, 4, 6, 10), reps=5),
+            _bench_case(5000, rounds=8, eval_every=1, chunks=(2, 4), reps=2),
+        ]
+
+    header = ["C", "K", "rounds", "per_round_rps", "fused_rps", "best_chunk",
+              "speedup", "donation_in_place"]
+    rows = []
+    for r in cases:
+        rows.append([
+            r["C"], r["K"], r["rounds"], f"{r['per_round_rps']:.1f}",
+            f"{r['fused_rps']:.1f}", r["best_chunk"], f"{r['speedup']:.2f}",
+            r["donation_in_place"],
+        ])
+        print(
+            f"  C={r['C']:5d} K={r['K']}: per-round {r['per_round_rps']:8.1f} r/s"
+            f"  fused(chunk={r['best_chunk']}) {r['fused_rps']:8.1f} r/s"
+            f"  {r['speedup']:5.2f}x  donated-in-place={r['donation_in_place']}"
+            f"  live {r['donation_live_state_mb_no_donation']:.2f}->"
+            f"{r['donation_live_state_mb_donated']:.2f}MB"
+        )
+
+    path = write_csv("loop_bench", header, rows)
+    small = cases[0]
+    summary = {
+        "bench": "loop_bench",
+        "smoke": SMOKE,
+        "backend": backend,
+        "hidden": list(HIDDEN),
+        "rows": cases,
+        "target_speedup_small": TARGET_SPEEDUP_SMALL,
+        "speedup_small": small["speedup"],
+        "target_met_small": small["speedup"] >= TARGET_SPEEDUP_SMALL,
+        "note": (
+            "per-round baseline replicates the pre-fusion SyncScheduler loop "
+            "(per-round dispatch + blocking device_get + numpy<->jnp "
+            "round_time churn); the >=3x target is enforced off-CPU only — "
+            "on the CPU backend the round executable's in-process op "
+            "overhead dominates and fusing can only reclaim the per-round "
+            "host-sync slice, so CI enforces the no-regression bound there"
+        ),
+    }
+    with open("BENCH_loop.json", "w") as f:
+        json.dump(summary, f, indent=2)
+
+    guard = (SMOKE_GUARD_SPEEDUP if SMOKE else TARGET_SPEEDUP_SMALL) if not on_cpu else NO_REGRESSION
+    failures = []
+    if small["speedup"] < guard:
+        failures.append(
+            f"small-config fused speedup {small['speedup']:.2f}x below the "
+            f"{guard}x bar (backend={backend})"
+        )
+    for r in cases[1:]:
+        if r["speedup"] < NO_REGRESSION:
+            failures.append(
+                f"C={r['C']} fused speedup {r['speedup']:.2f}x is a regression "
+                f"(< {NO_REGRESSION}x)"
+            )
+    for r in cases:
+        if not r["donation_in_place"]:
+            failures.append(
+                f"C={r['C']}: donated chunk step did NOT update the carried "
+                f"state in place (live {r['donation_live_state_mb_donated']:.2f}MB "
+                f"vs {r['donation_live_state_mb_no_donation']:.2f}MB without "
+                "donation — server slabs not capped at one copy)"
+            )
+    if on_cpu and small["speedup"] < TARGET_SPEEDUP_SMALL:
+        print(
+            f"  (cpu backend: {small['speedup']:.2f}x measured; the "
+            f"{TARGET_SPEEDUP_SMALL}x target applies to async accelerator "
+            "backends where per-round host sync dominates)"
+        )
+    if failures:
+        for msg in failures:
+            print(f"!! {msg}")
+        sys.exit(1)
+    return path
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        SMOKE = True
+    run()

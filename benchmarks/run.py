@@ -30,6 +30,7 @@ def main() -> None:
         codec_bench,
         comm_overhead,
         kernel_bench,
+        loop_bench,
         roofline,
         scale_bench,
         selection_bench,
@@ -49,13 +50,15 @@ def main() -> None:
         ("selection_bench (strategy x codec grid)", selection_bench.run),
         ("async_bench (sync vs async scheduler grid)", async_bench.run),
         ("scale_bench (cohort O(K) vs dense O(C) rounds)", scale_bench.run),
+        ("loop_bench (round-fused executor vs per-round dispatch)", loop_bench.run),
         ("roofline (deliverable g)", roofline.run),
     ]
     if args.smoke:  # CI smoke: the perf + pipeline entry points, tiny sizes
         suites = [
             s for s in suites
             if s[0].split(" ")[0]
-            in ("kernel_bench", "codec_bench", "selection_bench", "async_bench", "scale_bench")
+            in ("kernel_bench", "codec_bench", "selection_bench", "async_bench",
+                "scale_bench", "loop_bench")
         ]
     t00 = time.time()
     for name, fn in suites:

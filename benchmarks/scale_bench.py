@@ -15,6 +15,14 @@ reports mean per-round step wall-clock plus the analytic trained-state
 slab (lanes x model bytes, the live per-lane training copy). Acceptance:
 >=5x dense/cohort step-time ratio at C=2000.
 
+It also audits buffer donation for the round-fused executor
+(``api.build_chunk_step``): with a *stateful* personalizer the round state
+carries a real ``(C, P)`` local-model slab, and a donated chunk step must
+update it in place — measured from live buffers (``jax.live_arrays``), the
+slab count must drop from two copies (input + output, the non-donated
+before) to at most one (after), with the before/after MB reported in the
+BENCH_scale.json rows.
+
 Emits experiments/bench/scale_bench.csv and BENCH_scale.json (repo root,
 committed — the bench trajectory is tracked from PR 4 onward). Smoke mode
 (REPRO_BENCH_SMOKE=1, via ``benchmarks.run --smoke``) sweeps a C=200 quick
@@ -87,6 +95,89 @@ def _bench_case(ds, k: int, cohort_size: int, eval_every: int, rounds: int) -> d
     }
 
 
+def _live_slab_mb(leaf_specs) -> float:
+    """MB of live device buffers matching the given (shape, dtype) specs —
+    the per-client model slabs, counted with multiplicity (data slabs and
+    scalars never collide with a (C, ...) parameter leaf's exact spec)."""
+    total = 0
+    for a in jax.live_arrays():
+        if not a.is_deleted() and (a.shape, a.dtype) in leaf_specs:
+            total += a.size * a.dtype.itemsize
+    return total / 1e6
+
+
+def _donation_audit(ds, k: int, chunk: int = 2) -> dict:
+    """Live-buffer audit of the donated chunk step: with FT personalization
+    the carried state holds a (C, P) local-model slab; without donation the
+    chunk step materializes input + output (two slabs live), with donation
+    the input is consumed and at most ONE slab stays live."""
+    c = ds.n_clients
+    cfg = FLConfig(
+        strategy="fedavg", personalization="ft", fraction=k / c,
+        epochs=1, rounds=chunk, cohort_size=k,
+    )
+    env = api.build_env(ds, cfg.seed)
+    pipe = api.pipeline_from_config(cfg)
+    g0 = init_mlp(jax.random.PRNGKey(0), ds.n_features, ds.n_classes, hidden=HIDDEN)
+    # specs/sizes derived from shapes only — holding a (C, P) template alive
+    # here would show up in every live-buffer measurement below
+    specs = {
+        ((c,) + leaf.shape, leaf.dtype) for leaf in jax.tree.leaves(g0)
+    }
+    slab_mb = c * sum(
+        l.size * l.dtype.itemsize for l in jax.tree.leaves(g0)
+    ) / 1e6
+
+    def mkstate():
+        return api.RoundState(
+            global_params=jax.tree.map(jnp.array, g0),
+            local_params=jax.tree.map(
+                lambda gl: jnp.broadcast_to(gl, (c,) + gl.shape) + 0.0, g0
+            ),
+            accuracy=jnp.zeros((c,)),
+            select=jnp.ones((c,), bool),
+            pms=jnp.full((c,), len(g0), jnp.int32),
+            rng=jax.random.PRNGKey(1),
+            participation=jnp.zeros((c,), jnp.int32),
+            loss=jnp.zeros((c,)),
+            update_norm=jnp.zeros((c,)),
+        )
+
+    round_step = api.build_round_step(env, pipe, cfg.execution)
+    ts = jnp.arange(chunk, dtype=jnp.int32)
+
+    # before: no donation — the input state stays alive next to the output
+    plain = jax.jit(lambda s, t: jax.lax.scan(round_step, s, t, unroll=chunk))
+    state = mkstate()
+    out_state, _ = plain(state, ts)
+    jax.block_until_ready(jax.tree.leaves(out_state))
+    before_mb = _live_slab_mb(specs)
+    del state, out_state
+
+    # after: donated — the input slab is consumed, one live copy remains
+    donated = api.build_chunk_step(round_step, chunk)
+    state = mkstate()
+    out_state, _ = donated(state, ts)
+    jax.block_until_ready(jax.tree.leaves(out_state))
+    after_mb = _live_slab_mb(specs)
+    input_deleted = all(
+        leaf.is_deleted() for leaf in jax.tree.leaves(state.local_params)
+    )
+    del state, out_state
+
+    # the donated step must hold at most ONE (C, P) server slab live
+    assert input_deleted and after_mb <= slab_mb * 1.01, (
+        f"donation audit failed: {after_mb:.2f}MB live vs one "
+        f"{slab_mb:.2f}MB slab (input_deleted={input_deleted})"
+    )
+    return {
+        "slab_mb": slab_mb,
+        "donation_live_mb_before": before_mb,
+        "donation_live_mb_after": after_mb,
+        "donation_input_deleted": input_deleted,
+    }
+
+
 def run():
     k = 16 if SMOKE else 50
     pops = [100, 200] if SMOKE else [100, 1000, 2000, 5000]
@@ -106,18 +197,27 @@ def run():
             "cohort": _bench_case(ds, k, k, 1, rounds),
             "cohort+eval5": _bench_case(ds, k, k, 5, ev_rounds),
         }
+        audit = _donation_audit(ds, k)
         for mode, r in cases.items():
             speed = cases["dense"]["step_ms"] / r["step_ms"]
             rows.append([
                 c, k, mode, r["lanes"],
                 f"{r['step_ms']:.2f}", f"{r['trained_state_mb']:.4f}", f"{speed:.2f}",
             ])
-            records.append({"C": c, "K": k, "mode": mode, **r, "speedup_vs_dense": speed})
+            records.append(
+                {"C": c, "K": k, "mode": mode, **r, "speedup_vs_dense": speed, **audit}
+            )
             print(
                 f"  C={c:5d} {mode:>12s}: lanes={r['lanes']:5d}  "
                 f"step={r['step_ms']:8.2f}ms  slab={r['trained_state_mb']:8.4f}MB  "
                 f"{speed:5.2f}x vs dense"
             )
+        print(
+            f"  C={c:5d}     donation: live (C,P) slabs "
+            f"{audit['donation_live_mb_before']:.2f}MB -> "
+            f"{audit['donation_live_mb_after']:.2f}MB "
+            f"(one {audit['slab_mb']:.2f}MB copy, input consumed)"
+        )
         if c == 2000:
             speedup_at_2000 = cases["dense"]["step_ms"] / cases["cohort"]["step_ms"]
 

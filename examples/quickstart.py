@@ -47,6 +47,20 @@ cohort execution (O(K) rounds):
   O(C) distributed eval to every n-th round; SchedulerConfig
   (max_concurrency=M) caps async in-flight dispatch slots at M.
 
+round-fused execution (--scan-chunk):
+  The sync server loop can fuse S rounds into one on-device lax.scan
+  (ExecutionConfig.scan_chunk): the host dispatches once, blocks once, and
+  accounts once per S-round chunk, with the carried server state donated
+  and updated in place. Bit-identical to per-round execution at ANY chunk
+  size (tail chunks included) — only the host-sync cadence changes:
+  progress prints at chunk boundaries, and wall-clock stops being
+  dominated by Python dispatch (>=3x rounds/sec on the paper's small MLP
+  at C=100; see benchmarks/loop_bench.py + BENCH_loop.json). Compile time
+  grows with S (the chunk body is unrolled), so chunk sizes in the tens
+  are the sweet spot:
+
+    PYTHONPATH=src python examples/quickstart.py --scan-chunk 10
+
 composing a custom round:
   A federated round is a pipeline of swappable phases (repro.fl.phases):
 
@@ -99,6 +113,9 @@ def main():
     ap.add_argument("--cohort-size", type=int, default=0,
                     help="max client lanes a round gathers/trains (0 = full "
                          "population, the dense-equivalent path)")
+    ap.add_argument("--scan-chunk", type=int, default=1,
+                    help="rounds fused per on-device scan chunk (sync loop; "
+                         "1 = per-round host sync, 0 = whole run in one chunk)")
     args = ap.parse_args()
     # fail fast on a bad codec spec or strategy name before the
     # (minutes-long) baseline runs
@@ -118,7 +135,7 @@ def main():
     fedavg = run_federated(
         ds, FLConfig(strategy="fedavg", personalization="none", fraction=1.0,
                      rounds=args.rounds, epochs=2, heterogeneity=args.heterogeneity,
-                     cohort_size=args.cohort_size),
+                     cohort_size=args.cohort_size, scan_chunk=args.scan_chunk),
         progress=True,
     )
 
@@ -134,7 +151,8 @@ def main():
         train=dataclasses.replace(cfg.train, rounds=args.rounds),
         scheduler=SchedulerConfig(mode=args.mode, buffer_k=args.buffer_k,
                                   heterogeneity=args.heterogeneity),
-        execution=ExecutionConfig(cohort_size=args.cohort_size),
+        execution=ExecutionConfig(cohort_size=args.cohort_size,
+                                  scan_chunk=args.scan_chunk),
     )
     acsp = run_federated(ds, cfg, progress=True)
 

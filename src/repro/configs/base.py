@@ -318,22 +318,49 @@ class ExecutionConfig:
     recomputed on rounds (aggregation events) where ``t % eval_every == 0``
     and carried as last-known values in between. Selection strategies that
     read accuracy/loss see the carried values on skipped rounds.
+
+    ``scan_chunk`` fuses the synchronous server loop on device: the
+    scheduler runs ``lax.scan`` over chunks of ``scan_chunk`` rounds, so
+    the host dispatches one executable, blocks once, and does one
+    vectorized accounting pass *per chunk* instead of per round. The fused
+    chunk step donates the carried round state, so the ``(C, ...)`` server
+    slabs are updated in place rather than double-allocated. ``1``
+    (default) keeps plain per-round dispatch (the pre-fusion device
+    execution, bit-for-bit — host-side ``round_time`` accounting is
+    float64-vectorized on every path); ``0`` fuses the whole run into a
+    single chunk. Fused
+    chunks are bit-identical to per-round execution at every chunk size,
+    including non-divisor tails (golden-guarded; with ``eval_every > 1``
+    the thinned evaluator's ``lax.cond`` may differ from per-round
+    dispatch by 1 ulp of float32 — see ``api.build_chunk_step``) — trade
+    host overhead against compile time (the chunk body is unrolled, so
+    compile cost grows with ``scan_chunk``).
     """
 
     cohort_size: int = 0        # 0 -> full population (dense-equivalent)
     eval_every: int = 1         # evaluate when t % eval_every == 0
+    scan_chunk: int = 1         # rounds fused per on-device scan chunk;
+                                # 1 -> per-round host sync, 0 -> whole run
 
     def __post_init__(self):
         if self.cohort_size < 0:
             raise ValueError(f"cohort_size must be >= 0, got {self.cohort_size!r}")
         if self.eval_every < 1:
             raise ValueError(f"eval_every must be >= 1, got {self.eval_every!r}")
+        if self.scan_chunk < 0:
+            raise ValueError(f"scan_chunk must be >= 0, got {self.scan_chunk!r}")
 
     def resolved_cohort(self, n_clients: int) -> int:
         """Static cohort lane count K for a population of ``n_clients``."""
         if self.cohort_size <= 0:
             return n_clients
         return min(self.cohort_size, n_clients)
+
+    def resolved_chunk(self, rounds: int) -> int:
+        """Rounds fused per on-device chunk for a ``rounds``-round run."""
+        if self.scan_chunk <= 0:
+            return rounds
+        return min(self.scan_chunk, rounds)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -70,6 +70,31 @@ class CommModel:
         per_client = jnp.where(select_mask, per_client, 0.0)
         return jnp.max(per_client) + self.server_latency_s
 
+    def round_times(
+        self,
+        tx_bytes: np.ndarray,
+        train_flops: np.ndarray,
+        select_mask: np.ndarray,
+        rx_bytes: np.ndarray | None = None,
+        delay: np.ndarray | None = None,
+    ) -> np.ndarray:
+        """Vectorized ``round_time`` over a chunk of rounds: one numpy pass
+        for ``(T, C)`` inputs -> ``(T,)`` simulated seconds, no per-round
+        numpy<->jnp conversions. ``delay`` broadcasts over the round axis
+        (the heterogeneity lane is static per experiment). Parity with the
+        per-round ``round_time`` loop is regression-tested
+        (tests/test_loop_fused.py)."""
+        tx = np.asarray(tx_bytes, np.float64)
+        rx = tx if rx_bytes is None else np.asarray(rx_bytes, np.float64)
+        per_client = (
+            (tx + rx) / self.bandwidth_bytes_per_s
+            + np.asarray(train_flops, np.float64) / self.client_flops_per_s
+        )
+        if delay is not None:
+            per_client = per_client * np.asarray(delay, np.float64)
+        per_client = np.where(np.asarray(select_mask, bool), per_client, 0.0)
+        return per_client.max(axis=-1) + self.server_latency_s
+
 
 def tx_bytes(params_transmitted: np.ndarray | float, directions: int = 2) -> np.ndarray:
     """Bytes on the wire for a one-way parameter count (x directions).

@@ -12,6 +12,7 @@ from repro.fl.api import (
     SchedulerConfig,
     SelectionConfig,
     TrainConfig,
+    build_chunk_step,
     build_round_step,
     pipeline_from_config,
 )
@@ -30,6 +31,7 @@ __all__ = [
     "RoundPipeline",
     "pipeline_from_config",
     "build_round_step",
+    "build_chunk_step",
     "run_federated",
     "make_round_step",
     "SyncScheduler",

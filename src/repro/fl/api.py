@@ -16,8 +16,10 @@ constructor, so both
 
 build the same config. ``pipeline_from_config`` maps a config onto phase
 objects via the string registries; ``build_round_step`` composes any
-pipeline into the jitted round step. The server loop that drives the step
-lives in ``repro.fl.sched``: ``SchedulerConfig.mode`` picks between the
+pipeline into the jitted round step, and ``build_chunk_step`` fuses
+``scan_chunk`` consecutive round steps into a single donated on-device
+executable (the round-fused sync loop). The server loop that drives the
+step lives in ``repro.fl.sched``: ``SchedulerConfig.mode`` picks between the
 synchronous barrier (``SyncScheduler``, the paper's Algorithm 1) and
 event-driven buffered execution (``AsyncScheduler``, FedBuff-style) —
 ``run_federated`` dispatches on it.
@@ -71,6 +73,7 @@ __all__ = [
     "RoundState",
     "pipeline_from_config",
     "build_round_step",
+    "build_chunk_step",
 ]
 
 
@@ -102,6 +105,7 @@ _FLAT_KEYS = {
     "heterogeneity": ("scheduler", "heterogeneity"),
     "cohort_size": ("execution", "cohort_size"),
     "eval_every": ("execution", "eval_every"),
+    "scan_chunk": ("execution", "scan_chunk"),
 }
 
 _GROUP_TYPES = {
@@ -239,6 +243,10 @@ class FLConfig:
     @property
     def eval_every(self) -> int:
         return self.execution.eval_every
+
+    @property
+    def scan_chunk(self) -> int:
+        return self.execution.scan_chunk
 
     def strategy_obj(self):
         return self.selection.strategy_obj()
@@ -526,3 +534,50 @@ def build_round_step(
         return new_state, out
 
     return round_step
+
+
+def build_chunk_step(round_step, length: int):
+    """Fuse ``length`` consecutive rounds into one donated on-device step.
+
+    The scanned body is a ``build_round_step`` round step; the carry is its
+    ``RoundState``, and the per-round ``out`` dicts come back stacked to
+    ``(length, ...)`` leaves, so the host dispatches once and fetches the
+    whole chunk's history with a single ``device_get``. The returned
+    callable maps ``(RoundState, ts (length,) int32) -> (RoundState, outs)``
+    and is jitted with ``donate_argnums=0``: the carried ``(C, ...)`` server
+    slabs (local params, EF residuals, per-client vectors) are updated in
+    place instead of double-allocated — the caller's input state buffers are
+    INVALID after the call (``x.is_deleted()``), exactly like the scheduler
+    reassigning ``state`` every chunk.
+
+    Bit-identity with per-round dispatch is load-bearing and relies on two
+    choices here: the scan is fully unrolled (``unroll=length``) and each
+    iteration ends in ``lax.optimization_barrier``, so every round's
+    subgraph compiles with the same fusion boundaries as the standalone
+    jitted round step (a rolled ``while`` loop lets XLA fuse the peeled
+    first iteration differently, which showed up as 1-ulp accuracy
+    drift on tie-sensitive lanes). Compile cost therefore grows linearly
+    with ``length`` — chunk sizes in the tens are the sweet spot.
+
+    One carve-out: a ``lax.cond`` in the round body (the
+    ``eval_every > 1``-thinned evaluator) may still be fused differently
+    inside the scan than in the plain jit, shifting eval outputs by 1 ulp
+    of float32 on tie-sensitive lanes. Fused execution stays bit-identical
+    across ALL chunk sizes (tails included); exact equality with per-round
+    dispatch is guaranteed for cond-free bodies (``eval_every=1``, the
+    golden-guarded default) and holds to float32 resolution otherwise —
+    see tests/test_loop_fused.py.
+    """
+    if length < 1:
+        raise ValueError(f"chunk length must be >= 1, got {length!r}")
+
+    def body(state, t):
+        state, out = round_step(state, t)
+        # materialize each round's outputs at the iteration boundary — the
+        # same numerics contract a per-round jit dispatch provides
+        return jax.lax.optimization_barrier((state, out))
+
+    def chunk_step(state: RoundState, ts: jnp.ndarray):
+        return jax.lax.scan(body, state, ts, unroll=length)
+
+    return jax.jit(chunk_step, donate_argnums=0)

@@ -21,6 +21,15 @@ argsort), which keeps the nonzero summands of every masked aggregation in
 the same relative order as the dense path — the reason the gathered sync
 step stays bit-identical to dense execution when the cohort covers the
 selection.
+
+Both primitives are **donation-safe**: the round-fused executor
+(``api.build_chunk_step``) donates the carried round state, and
+``tree_scatter``'s ``.at[idx].set`` lowers to an in-place
+dynamic-update-scatter on the donated ``(C, ...)`` buffer — the server
+slab is mutated, never double-allocated, which is what caps live
+trained-state memory at one copy per slab (audited in
+benchmarks/scale_bench.py). ``tree_take`` only reads, so gathering from a
+to-be-donated slab before the scatter is fine within one scan iteration.
 """
 
 from __future__ import annotations

@@ -28,10 +28,22 @@ selected client) and FedBuff-style event-driven buffered execution
 (``AsyncScheduler`` — aggregate as soon as ``buffer_k`` updates land, with
 staleness-weighted merging, over at most
 ``SchedulerConfig.max_concurrency`` in-flight dispatch slots).
-``run_federated`` is the stable entry point that builds the default
-pipeline from an ``FLConfig`` and delegates to the configured scheduler;
-``make_round_step`` exposes the jitted synchronous round step for callers
-that drive it themselves.
+
+The synchronous loop is **round-fused**: ``ExecutionConfig.scan_chunk``
+rounds run as one ``lax.scan`` entirely on device (``api.build_chunk_step``),
+so the host pays one dispatch, one blocking ``device_get`` of the stacked
+``(T_chunk, ...)`` history leaves, and one vectorized numpy accounting
+pass per *chunk* instead of per round — at large chunk sizes wall-clock
+tracks device compute, not Python dispatch overhead (see
+benchmarks/loop_bench.py + BENCH_loop.json). The fused step donates the
+carried round state, updating the ``(C, ...)`` server slabs in place;
+donation invalidates the previous chunk's state buffers, so anything that
+drives chunk steps directly must treat its input state as consumed.
+``scan_chunk=1`` (default) keeps per-round host sync; every chunk size is
+bit-identical to it. ``run_federated`` is the stable entry point that
+builds the default pipeline from an ``FLConfig`` and delegates to the
+configured scheduler; ``make_round_step`` exposes the (un-jitted)
+synchronous round step for callers that drive it themselves.
 
 Uplink traffic goes through a wire codec (repro.comm): each selected
 client's shared delta is encode/decode round-tripped (with per-client
@@ -97,8 +109,9 @@ def make_round_step(
     acc_fn: Callable = mlp_accuracy,
     pipeline: RoundPipeline | None = None,
 ):
-    """Build the jitted synchronous round step: the cfg's default pipeline
-    (or a custom one) composed over the static data/config environment,
+    """Build the synchronous round step (un-jitted — wrap in ``jax.jit``
+    or fuse with ``api.build_chunk_step``): the cfg's default pipeline (or
+    a custom one) composed over the static data/config environment,
     executing on ``cfg.execution.cohort_size`` gathered lanes."""
     pipeline = pipeline or pipeline_from_config(cfg)
     env = build_env(data, cfg.seed, loss_fn=loss_fn, acc_fn=acc_fn)

@@ -42,6 +42,14 @@ with the broadcast global model (``ctx.dispatch_params is None``), while
 ``cohort_idx`` the client id each slot holds), and swaps the aggregator for
 ``StalenessAggregator`` (registry name ``'staleness'``) — a FedBuff-style
 buffered delta merge discounted by ``staleness_weight``.
+
+Phases must also stay **scan-fusable**: the sync scheduler runs the round
+step as the body of a ``lax.scan`` over ``scan_chunk`` rounds, so ``ctx.t``
+is always a traced scalar (never a Python int — branch with ``lax.cond``,
+as ``DistributedEvaluator``'s ``eval_every`` thinning does) and everything
+a phase deposits into the round's ``out`` dict must be a fixed-shape array
+so the chunk can stack it to ``(T_chunk, ...)`` leaves fetched in one
+``device_get``.
 """
 
 from __future__ import annotations

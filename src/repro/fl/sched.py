@@ -12,6 +12,28 @@ optionally scaled by a per-client heterogeneity lane):
   bit-identically (guarded by the golden trajectories in
   tests/test_fl_api.py and tests/test_sched.py).
 
+  Execution is **round-fused**: the server loop runs ``lax.scan`` over
+  chunks of ``ExecutionConfig.scan_chunk`` rounds entirely on device
+  (``api.build_chunk_step``). The host syncs ONCE per chunk — one
+  executable dispatch, one blocking ``device_get`` of the stacked
+  ``(T_chunk, ...)`` out leaves, one vectorized numpy pass for all
+  accounting (wire bytes, FLOPs, ``CommModel.round_times``) — instead of
+  paying Python dispatch + blocking fetch + numpy<->jnp churn every round.
+  The chunk step donates the carried ``RoundState``, so the ``(C, ...)``
+  server slabs (local params, EF residuals, per-client vectors) are
+  updated in place; donation invalidates the *previous* chunk's state
+  buffers, which is safe because the scheduler reassigns ``state`` and
+  only ever reads history from the fetched out stack. ``scan_chunk=1``
+  (default) dispatches the plain jitted round step — the pre-fusion
+  device execution bit-for-bit (round-time accounting runs through the
+  vectorized float64 pass on every path); any fused chunk size is
+  bit-identical to it
+  (golden-guarded, including non-divisor tail chunks; the one carve-out
+  is the ``eval_every > 1`` cond branch, within 1 ulp — see
+  ``api.build_chunk_step``). ``progress=True`` prints at chunk
+  boundaries — rounds inside a chunk are not host-visible until the
+  chunk completes.
+
 - ``AsyncScheduler`` — FedBuff-style buffered execution (Nguyen et al.
   2022) over a fixed pool of ``M = SchedulerConfig.max_concurrency``
   dispatch slots (0 -> M = C): each slot holds one in-flight client's id,
@@ -53,6 +75,7 @@ from repro.fl.api import (
     FLConfig,
     RoundPipeline,
     RoundState,
+    build_chunk_step,
     build_env,
     build_round_step,
     pipeline_from_config,
@@ -128,19 +151,26 @@ class ClientClock:
         return bool(np.all(self.delay == 1.0))
 
     def shared_params(self, pms: np.ndarray) -> np.ndarray:
-        """(C,) parameter count each client shares at depth ``pms``."""
+        """Parameter count each client shares at depth ``pms`` (any shape —
+        the prefix lookup broadcasts, so a chunk's (T, C) depths batch)."""
         return self.params_prefix[np.asarray(pms)]
+
+    def round_flops(self, pms: np.ndarray) -> np.ndarray:
+        """Local-training FLOPs per client at share depth ``pms`` — the one
+        place the compute model (fwd+bwd ~ 6 * params * samples * epochs)
+        lives; ``durations`` and the schedulers' accounting both use it.
+        Broadcasts like ``shared_params`` (``(T, C)`` chunk batches)."""
+        return 6.0 * self.shared_params(pms) * self.n_samples * self.epochs
 
     def durations(self, pms: np.ndarray) -> np.ndarray:
         """(C,) simulated seconds for one dispatch at share depth ``pms``:
         uncompressed float32 downlink + local epochs + codec-compressed
         uplink, scaled by the per-client delay lane."""
         params = self.shared_params(pms)
-        flops = 6.0 * params * self.n_samples * self.epochs
         return np.asarray(
             self.comm.client_times(
                 self.wire_prefix[np.asarray(pms)],
-                flops,
+                self.round_flops(pms),
                 rx_bytes_per_client=params * float(BYTES_PER_PARAM),
                 delay=self.delay,
             ),
@@ -229,15 +259,45 @@ def _setup_run(
 # ---------------------------------------------------------------------------
 
 
+def _progress_rows(t0: int, n: int, chunk: int, rounds: int) -> list[int]:
+    """Which rows of a fetched ``[t0, t0+n)`` chunk to print under
+    ``progress=True``. At ``scan_chunk=1`` this is the legacy cadence
+    (every 10th round + the final one); fused chunks print at chunk
+    boundaries instead — always round 0 (first chunk) and each chunk's
+    last round (which covers the final round) — so progress never silently
+    disappears when 10 doesn't align with the chunk grid."""
+    if chunk <= 1:
+        return [i for i in range(n) if (t0 + i) % 10 == 0 or t0 + i == rounds - 1]
+    rows = [0] if t0 == 0 else []
+    if n - 1 not in rows:
+        rows.append(n - 1)
+    return rows
+
+
 @dataclasses.dataclass
 class SyncScheduler:
-    """The synchronous barrier loop: one jitted cohort-gathered round step
-    per round, round time = slowest selected client. The rng chain and
-    accounting match the pre-scheduler engine loop, and at
+    """The synchronous barrier loop, round-fused on device: ``lax.scan``
+    chunks of ``ExecutionConfig.scan_chunk`` cohort-gathered round steps
+    per dispatch (``api.build_chunk_step``), round time = slowest selected
+    client. The host syncs once per chunk — a single ``device_get`` of the
+    stacked ``(T_chunk, ...)`` out leaves — and all per-round accounting
+    (shared-param prefix lookups, FLOPs, ``CommModel.round_times``) runs as
+    one vectorized numpy pass over the chunk. The chunk step donates the
+    carried ``RoundState``: the ``(C, ...)`` server slabs are updated in
+    place, and the previous chunk's state buffers are invalid afterwards
+    (the loop below never touches them again).
+
+    The rng chain matches the pre-scheduler engine loop, and at
     ``cohort_size=0`` (K = C) the gathered step computes the dense path's
-    numbers exactly, so the committed golden trajectories stay
-    bit-identical; with ``cohort_size=K`` the round's training compute and
-    trained-state memory drop to O(K)."""
+    numbers exactly, so the committed golden trajectories (model state,
+    accuracy, selection, wire/tx accounting) stay bit-identical — at every
+    ``scan_chunk``, including non-divisor tail chunks (the tail compiles
+    its own, shorter fused step once); with ``cohort_size=K`` the round's
+    training compute and trained-state memory drop to O(K). The one
+    history field computed host-side, the simulated ``round_time``, is now
+    accounted in one float64 numpy pass (``CommModel.round_times``) on
+    every path — values can differ from the old per-round float32
+    ``round_time`` history in the low bits (~1e-7 relative)."""
 
     def run(
         self,
@@ -267,54 +327,72 @@ class SyncScheduler:
             loss=jnp.zeros((data.n_clients,), jnp.float32),
             update_norm=jnp.zeros((data.n_clients,), jnp.float32),
         )
-        round_step = jax.jit(build_round_step(su.env, su.pipeline, cfg.execution))
+        round_step = build_round_step(su.env, su.pipeline, cfg.execution)
+        chunk = cfg.execution.resolved_chunk(cfg.rounds)
+        # scan_chunk=1 dispatches the plain jitted round step — the exact
+        # pre-fusion compilation, not a length-1 scan: XLA may fuse a
+        # lax.cond branch (eval_every thinning) differently inside a scan
+        # body, and the default path's DEVICE trajectory must stay
+        # bit-for-bit the seed loop (host round-time accounting is the
+        # float64 vectorized pass on every path — see the class docstring)
+        per_round = jax.jit(round_step) if chunk <= 1 else None
+        chunk_steps: dict[int, Callable] = {}  # length -> fused executable
         lanes = cfg.execution.resolved_cohort(data.n_clients)
-        n_samples = np.asarray(data.n_samples)
+        delay = None if clock.uniform else clock.delay
         accs, sel_hist, tx_hist, pms_hist, times, wire_hist = [], [], [], [], [], []
-        for t in range(cfg.rounds):
-            state, out = round_step(state, jnp.asarray(t))
-            out = jax.device_get(out)
-            accs.append(out["acc"])
-            sel_hist.append(out["selected"])
-            tx_hist.append(float(out["tx_params"]))
-            pms_hist.append(out["pms"])
-            wire_pc = np.asarray(out["wire_per_client"], np.float64)  # (C,)
-            wire_hist.append(wire_pc.sum())
-            # simulated round time: slowest selected client — codec-compressed
-            # uplink, uncompressed float32 downlink (the server broadcasts the
-            # exact global model)
-            per_client_params = clock.shared_params(out["pms"])
-            flops = 6.0 * per_client_params * n_samples * cfg.epochs
+        for t0 in range(0, cfg.rounds, chunk):
+            n = min(chunk, cfg.rounds - t0)
+            if per_round is not None:
+                state, out = per_round(state, jnp.asarray(t0))
+                outs = jax.device_get(out)
+                outs = {k: np.asarray(v)[None] for k, v in outs.items()}
+            else:
+                step = chunk_steps.get(n)
+                if step is None:  # one trace per distinct length (body + tail)
+                    step = chunk_steps[n] = build_chunk_step(round_step, n)
+                state, outs = step(state, jnp.arange(t0, t0 + n, dtype=jnp.int32))
+                outs = jax.device_get(outs)  # the ONE host sync this chunk pays
+            acc = np.asarray(outs["acc"])                            # (n, C)
+            sel = np.asarray(outs["selected"])                       # (n, C)
+            pms = np.asarray(outs["pms"])                            # (n, C)
+            wire = np.asarray(outs["wire_per_client"], np.float64)   # (n, C)
+            # simulated round times, whole chunk at once: slowest selected
+            # client per round — codec-compressed uplink, uncompressed
+            # float32 downlink (the server broadcasts the exact global
+            # model); the prefix lookup + FLOPs + round_times are a single
+            # numpy pass over (n, C), no per-round numpy<->jnp churn
+            per_client_params = clock.shared_params(pms)             # (n, C)
             times.append(
-                float(
-                    comm.round_time(
-                        jnp.asarray(wire_pc, jnp.float32),
-                        jnp.asarray(flops, jnp.float32),
-                        jnp.asarray(out["selected"]),
-                        rx_bytes_per_client=jnp.asarray(
-                            per_client_params * BYTES_PER_PARAM, jnp.float32
-                        ),
-                        # skipped entirely on the homogeneous default so the
-                        # seed trajectories stay bit-identical
-                        delay=None if clock.uniform else jnp.asarray(clock.delay, jnp.float32),
-                    )
+                comm.round_times(
+                    wire, clock.round_flops(pms), sel,
+                    rx_bytes=per_client_params * float(BYTES_PER_PARAM),
+                    # None on the homogeneous default: no delay lane to pay
+                    delay=delay,
                 )
             )
-            if progress and (t % 10 == 0 or t == cfg.rounds - 1):
-                print(f"  round {t:3d}  acc={np.mean(out['acc']):.4f}  |S|={int(np.sum(out['selected']))}")
+            accs.append(acc)
+            sel_hist.append(sel)
+            pms_hist.append(pms)
+            tx_hist.append(np.asarray(outs["tx_params"], np.float64))
+            wire_hist.append(wire.sum(axis=1))
+            if progress:
+                for i in _progress_rows(t0, n, chunk, cfg.rounds):
+                    print(
+                        f"  round {t0 + i:3d}  acc={acc[i].mean():.4f}  "
+                        f"|S|={int(sel[i].sum())}"
+                    )
 
-        acc_pc = np.stack(accs)
-        tx = np.asarray(tx_hist)
-        wire = np.asarray(wire_hist)
-        times = np.asarray(times)
+        acc_pc = np.concatenate(accs)
+        wire = np.concatenate(wire_hist)
+        times = np.concatenate(times)
         return FLHistory(
             accuracy_mean=acc_pc.mean(axis=1),
             accuracy_per_client=acc_pc,
-            selected=np.stack(sel_hist),
-            tx_params=tx,
+            selected=np.concatenate(sel_hist),
+            tx_params=np.concatenate(tx_hist),
             tx_bytes_cum=np.cumsum(wire),
             round_time=times,
-            pms=np.stack(pms_hist),
+            pms=np.concatenate(pms_hist),
             tx_wire_bytes=wire,
             sim_clock=np.cumsum(times),
             staleness_mean=np.zeros_like(times),

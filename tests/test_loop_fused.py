@@ -1,0 +1,265 @@
+"""Round-fused executor (ExecutionConfig.scan_chunk): golden bit-identity
+through the scanned path at several chunk sizes, tail-chunk handling,
+eval-thinning under scan, buffer donation, the vectorized round-time
+accounting, and chunk-boundary progress reporting."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ExecutionConfig
+from repro.core.metrics import BYTES_PER_PARAM, CommModel
+from repro.data import make_federated_classification
+from repro.fl import FLConfig, api, run_federated
+from repro.models.mlp import init_mlp
+
+from test_fl_api import _GOLDEN  # the 4 committed golden trajectories
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    return make_federated_classification(
+        n_clients=8, n_classes=4, n_features=20,
+        samples_per_client_range=(60, 90), dirichlet_alpha=50.0,
+        client_shift=0.05, class_sep=5.0, seed=1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# ExecutionConfig.scan_chunk: validation, flat kwargs, chunk resolution
+# ---------------------------------------------------------------------------
+
+
+def test_scan_chunk_validation():
+    with pytest.raises(ValueError, match="scan_chunk"):
+        ExecutionConfig(scan_chunk=-1)
+    assert ExecutionConfig().scan_chunk == 1  # default: per-round host sync
+
+
+def test_scan_chunk_flat_kwarg_and_nested():
+    cfg = FLConfig(scan_chunk=8)
+    assert cfg.execution == ExecutionConfig(scan_chunk=8)
+    assert cfg.scan_chunk == 8
+    cfg2 = FLConfig(execution=ExecutionConfig(scan_chunk=8))
+    assert cfg2.execution == cfg.execution
+    with pytest.raises(ValueError, match="not both"):
+        FLConfig(execution=ExecutionConfig(scan_chunk=8), cohort_size=4)
+
+
+def test_resolved_chunk():
+    assert ExecutionConfig().resolved_chunk(100) == 1
+    assert ExecutionConfig(scan_chunk=7).resolved_chunk(100) == 7
+    assert ExecutionConfig(scan_chunk=7).resolved_chunk(5) == 5   # capped
+    assert ExecutionConfig(scan_chunk=0).resolved_chunk(100) == 100  # whole run
+
+
+def test_build_chunk_step_rejects_bad_length(small_ds):
+    cfg = FLConfig(rounds=2, epochs=1)
+    rs = api.build_round_step(
+        api.build_env(small_ds, 0), api.pipeline_from_config(cfg), cfg.execution
+    )
+    with pytest.raises(ValueError, match="chunk length"):
+        api.build_chunk_step(rs, 0)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: the fused scan path reproduces the committed goldens at
+# chunk sizes {1, 2 (non-divisor, exercises the tail), 7 (> rounds, capped)}
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [1, 2, 7])
+@pytest.mark.parametrize("name", sorted(_GOLDEN))
+def test_goldens_bit_identical_through_fused_scan(small_ds, name, chunk):
+    gold = _GOLDEN[name]
+    h = run_federated(
+        small_ds, FLConfig(rounds=5, epochs=1, scan_chunk=chunk, **gold["cfg"])
+    )
+    got_acc = np.asarray(h.accuracy_mean, np.float32)
+    want_acc = np.frombuffer(bytes.fromhex(gold["acc_hex"]), np.dtype("<f4"))
+    np.testing.assert_array_equal(got_acc, want_acc)
+    got_sel = ["".join("1" if b else "0" for b in row) for row in np.asarray(h.selected)]
+    assert got_sel == gold["selected"]
+
+
+def test_full_history_identical_across_chunk_sizes(small_ds):
+    """Every FLHistory field — not just the golden-guarded ones — is
+    identical between per-round and fused execution, including the
+    rounds % scan_chunk != 0 tail chunk (5 = 3 + 2)."""
+    base = FLConfig(rounds=5, epochs=1, codec="int8")
+    ref = run_federated(small_ds, base)
+    for chunk in (3, 5, 0):  # tail chunk, exact fit, whole-run fuse
+        cfg = FLConfig(rounds=5, epochs=1, codec="int8", scan_chunk=chunk)
+        h = run_federated(small_ds, cfg)
+        for field in ref._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(h, field)), np.asarray(getattr(ref, field)),
+                err_msg=f"chunk={chunk} field={field}",
+            )
+
+
+def test_eval_thinning_under_scan(small_ds):
+    """eval_every > 1 (the lax.cond-thinned evaluator) composes with the
+    fused scan. The contract (documented on build_chunk_step): every fused
+    chunk size computes the same trajectory bit-for-bit, agreeing with
+    per-round dispatch to 1 ulp of float32 — XLA may fuse a cond branch
+    differently inside a scan body, so exact equality with the plain path
+    is only promised for the default eval_every=1 (the golden tests)."""
+    mk = lambda chunk: FLConfig(
+        strategy="fedavg", personalization="none", fraction=1.0,
+        rounds=6, epochs=1, eval_every=3, scan_chunk=chunk,
+    )
+    ref = run_federated(small_ds, mk(1))
+    h = run_federated(small_ds, mk(4))  # 6 = 4 + 2 tail, chunk crosses evals
+    h2 = run_federated(small_ds, mk(2))  # chunk boundary between evals
+    np.testing.assert_array_equal(h.accuracy_per_client, h2.accuracy_per_client)
+    np.testing.assert_allclose(
+        h.accuracy_per_client, ref.accuracy_per_client, rtol=0, atol=6e-8
+    )
+    acc = np.asarray(h.accuracy_per_client)
+    np.testing.assert_array_equal(acc[1], acc[0])  # t=1,2 carry t=0's eval
+    np.testing.assert_array_equal(acc[2], acc[0])
+    assert not np.array_equal(acc[3], acc[2])      # t=3 re-evaluates
+
+
+def test_ft_personalization_through_fused_scan(small_ds):
+    """Stateful personalizer (FT): the donated (C, P) local slab survives
+    chunking — trajectories identical to per-round execution."""
+    mk = lambda chunk: FLConfig(
+        strategy="oort", personalization="ft", fraction=0.5,
+        rounds=5, epochs=1, scan_chunk=chunk,
+    )
+    ref = run_federated(small_ds, mk(1))
+    h = run_federated(small_ds, mk(2))
+    np.testing.assert_array_equal(h.accuracy_per_client, ref.accuracy_per_client)
+    np.testing.assert_array_equal(h.selected, ref.selected)
+
+
+# ---------------------------------------------------------------------------
+# donation: the chunk step consumes its input state
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_step_donates_input_state(small_ds):
+    cfg = FLConfig(rounds=4, epochs=1)
+    pipe = api.pipeline_from_config(cfg)
+    env = api.build_env(small_ds, cfg.seed)
+    g0 = init_mlp(jax.random.PRNGKey(0), small_ds.n_features, small_ds.n_classes)
+    c = small_ds.n_clients
+    state = api.RoundState(
+        global_params=g0,
+        local_params=jax.tree.map(
+            lambda gl: jnp.broadcast_to(gl, (c,) + gl.shape) + 0.0, g0
+        ),
+        accuracy=jnp.zeros((c,)),
+        select=jnp.ones((c,), bool),
+        pms=jnp.full((c,), len(g0), jnp.int32),
+        rng=jax.random.PRNGKey(1),
+        participation=jnp.zeros((c,), jnp.int32),
+        loss=jnp.zeros((c,)),
+        update_norm=jnp.zeros((c,)),
+    )
+    step = api.build_chunk_step(api.build_round_step(env, pipe, cfg.execution), 2)
+    new_state, outs = step(state, jnp.arange(2, dtype=jnp.int32))
+    jax.block_until_ready(jax.tree.leaves(new_state))
+    # in-place update: every input buffer was consumed by donation
+    assert all(l.is_deleted() for l in jax.tree.leaves(state.local_params))
+    assert all(not l.is_deleted() for l in jax.tree.leaves(new_state.local_params))
+    # stacked out leaves carry the whole chunk
+    assert np.asarray(outs["acc"]).shape == (2, c)
+    # the consumed state is unusable — jax refuses, rather than corrupts
+    with pytest.raises((RuntimeError, ValueError), match="delet"):
+        step(state, jnp.arange(2, 4, dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# vectorized accounting: CommModel.round_times parity with the per-round loop
+# ---------------------------------------------------------------------------
+
+
+def test_round_times_parity_with_per_round_loop():
+    rng = np.random.default_rng(0)
+    t_rounds, c = 7, 12
+    comm = CommModel()
+    wire = rng.uniform(1e3, 1e6, (t_rounds, c))
+    flops = rng.uniform(1e6, 1e9, (t_rounds, c))
+    select = rng.random((t_rounds, c)) < 0.6
+    select[3] = False
+    select[3, 4] = True  # single-client round
+    rx = rng.uniform(1e3, 1e6, (t_rounds, c))
+    delay = rng.lognormal(0.0, 0.5, c)
+    for d in (None, delay):
+        vec = comm.round_times(wire, flops, select, rx_bytes=rx, delay=d)
+        per_round = np.asarray([
+            float(
+                comm.round_time(
+                    jnp.asarray(wire[t], jnp.float32),
+                    jnp.asarray(flops[t], jnp.float32),
+                    jnp.asarray(select[t]),
+                    rx_bytes_per_client=jnp.asarray(rx[t], jnp.float32),
+                    delay=None if d is None else jnp.asarray(d, jnp.float32),
+                )
+            )
+            for t in range(t_rounds)
+        ])
+        np.testing.assert_allclose(vec, per_round, rtol=1e-5)
+
+
+def test_round_times_defaults_symmetric_traffic():
+    comm = CommModel()
+    tx = np.full((2, 3), 1e6)
+    flops = np.zeros((2, 3))
+    sel = np.ones((2, 3), bool)
+    t = comm.round_times(tx, flops, sel)  # rx defaults to tx
+    np.testing.assert_allclose(
+        t, 2 * 1e6 / comm.bandwidth_bytes_per_s + comm.server_latency_s
+    )
+
+
+# ---------------------------------------------------------------------------
+# progress reporting at chunk boundaries
+# ---------------------------------------------------------------------------
+
+
+def test_progress_prints_at_chunk_boundaries(small_ds, capsys):
+    cfg = FLConfig(
+        strategy="fedavg", personalization="none", fraction=1.0,
+        rounds=5, epochs=1, scan_chunk=2,
+    )
+    run_federated(small_ds, cfg, progress=True)
+    lines = [l for l in capsys.readouterr().out.splitlines() if "round" in l]
+    printed = [int(l.split()[1]) for l in lines]
+    # t=0, each chunk's last round (1, 3), and the final round (4)
+    assert printed == [0, 1, 3, 4]
+
+
+def test_progress_legacy_cadence_at_chunk_one(small_ds, capsys):
+    cfg = FLConfig(
+        strategy="fedavg", personalization="none", fraction=1.0,
+        rounds=12, epochs=1,  # scan_chunk=1 default
+    )
+    run_federated(small_ds, cfg, progress=True)
+    lines = [l for l in capsys.readouterr().out.splitlines() if "round" in l]
+    printed = [int(l.split()[1]) for l in lines]
+    assert printed == [0, 10, 11]  # every 10th + final, the seed cadence
+
+
+# ---------------------------------------------------------------------------
+# composition: cohort execution + fused scan
+# ---------------------------------------------------------------------------
+
+
+def test_cohort_composes_with_fused_scan(small_ds):
+    """cohort_size < C gathered execution is unchanged by chunking."""
+    mk = lambda chunk: FLConfig(
+        strategy="oort", personalization="none", fraction=0.5,
+        rounds=4, epochs=1, cohort_size=4, scan_chunk=chunk,
+    )
+    ref = run_federated(small_ds, mk(1))
+    h = run_federated(small_ds, mk(3))  # 4 = 3 + 1 tail
+    np.testing.assert_array_equal(h.accuracy_per_client, ref.accuracy_per_client)
+    np.testing.assert_array_equal(h.selected, ref.selected)
+    np.testing.assert_array_equal(h.round_time, ref.round_time)
