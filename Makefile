@@ -2,14 +2,18 @@
 # test set (including tests marked slow, which tier-1 `make test` skips via
 # pytest.ini addopts) plus the benchmark smoke so perf entry points can't
 # rot (kernel + codec + selection grid + sync/async scheduler grid + the
-# cohort-vs-dense scale bench + the round-fused loop bench, which rewrite
-# BENCH_scale.json / BENCH_loop.json each run so the O(K)-execution and
-# fused-loop speedups are tracked as trajectories; loop_bench's smoke
+# cohort-vs-dense scale bench + the round-fused loop bench + the obs smoke,
+# which rewrite the BENCH_*.json artifacts each run so the O(K)-execution
+# and fused-loop speedups are tracked as trajectories; loop_bench's smoke
 # guard fails CI if the fused executor regresses vs per-round dispatch).
+# The obs smoke (benchmarks/obs_smoke.py) writes a full run record —
+# manifest + metrics.jsonl + Perfetto trace + profile — and `validate-trace`
+# re-checks the trace artifact through the tools/validate_trace.py CLI, so
+# CI asserts the manifest parses and the trace schema-validates end to end.
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all bench-smoke bench ci
+.PHONY: test test-all bench-smoke bench validate-trace ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -23,4 +27,8 @@ bench-smoke:
 bench:
 	$(PY) -m benchmarks.run --quick
 
-ci: test-all bench-smoke
+validate-trace:
+	$(PY) tools/validate_trace.py experiments/bench/obs_run/trace.json
+	$(PY) -c "import json; m = json.load(open('experiments/bench/obs_run/manifest.json')); assert m['schema_version'] >= 1 and m['config_hash'], 'bad manifest'; print('manifest ok:', m['run_id'])"
+
+ci: test-all bench-smoke validate-trace

@@ -24,7 +24,7 @@ import sys
 
 import numpy as np
 
-from benchmarks.common import ROUNDS, write_csv
+from benchmarks.common import ROUNDS, write_bench_json, write_csv
 from benchmarks.selection_bench import rounds_to_target
 from repro.data import make_har_dataset
 from repro.fl import FLConfig, run_federated
@@ -54,6 +54,7 @@ def run():
     base = dict(strategy="fedavg", personalization="none", fraction=1.0,
                 epochs=2, heterogeneity=HETEROGENEITY)
     rows = []
+    records = []
     for codec in CODECS:
         runs = {}
         for mode in ("sync", "async"):
@@ -70,6 +71,13 @@ def run():
                 f"{ttt:.2f}", f"{float(h.sim_clock[-1]):.2f}",
                 f"{wire_mb:.2f}", f"{float(h.staleness_mean.mean()):.2f}",
             ])
+            records.append({
+                "mode": mode, "codec": codec, "rounds": rounds,
+                "final_accuracy": acc, "time_to_target_s": ttt,
+                "total_sim_s": float(h.sim_clock[-1]), "wire_mb": wire_mb,
+                "mean_staleness": float(h.staleness_mean.mean()),
+                "mean_in_flight": float(h.in_flight.mean()),
+            })
             print(
                 f"  {mode:5s} {codec:10s} acc={acc:.4f}  "
                 f"t_to_{target:.2f}={ttt:8.2f}s  total={float(h.sim_clock[-1]):8.2f}s  "
@@ -80,6 +88,12 @@ def run():
         if np.isfinite(t_sync) and np.isfinite(t_async):
             print(f"  -> {codec}: async reaches {target:.2f} in {t_async/t_sync:.2f}x "
                   f"the sync simulated time ({t_async:.1f}s vs {t_sync:.1f}s)")
+    write_bench_json("async", {
+        "smoke": SMOKE,
+        "heterogeneity": HETEROGENEITY,
+        "target_accuracy": target,
+        "rows": records,
+    })
     return write_csv(
         "async_bench",
         ["mode", "codec", "final_accuracy", "time_to_target_s", "total_sim_s",

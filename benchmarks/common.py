@@ -1,13 +1,20 @@
-"""Shared benchmark plumbing: experiment runner + CSV emission.
+"""Shared benchmark plumbing: experiment runner + CSV/JSON emission.
 
 Benchmarks mirror the paper's tables/figures on the synthetic HAR stand-ins
 (DESIGN.md §5 deviation 1): absolute accuracies differ from the paper's real
 datasets; the reproduction targets are the *relative* orderings and the
 communication-reduction percentages.
+
+Every ``BENCH_*.json`` artifact goes through :func:`write_bench_json`, which
+wraps the suite's summary in one shared envelope (schema version, backend,
+device count, content-hash run id) so downstream tooling can parse any bench
+file the same way.
 """
 
 from __future__ import annotations
 
+import hashlib
+import json
 import os
 import time
 
@@ -73,4 +80,45 @@ def write_csv(name: str, header: list[str], rows: list[list]):
         f.write(",".join(header) + "\n")
         for r in rows:
             f.write(",".join(str(x) for x in r) + "\n")
+    return path
+
+
+BENCH_SCHEMA_VERSION = 2
+
+
+def _bench_jsonable(x):
+    """Default encoder for numpy leftovers in bench summaries."""
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    if isinstance(x, (np.floating,)):
+        return float(x)
+    if isinstance(x, (np.bool_,)):
+        return bool(x)
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    return repr(x)
+
+
+def write_bench_json(name: str, summary: dict) -> str:
+    """Write ``BENCH_{name}.json`` at the repo root through the shared
+    envelope every bench suite uses: ``schema_version``, ``bench``,
+    ``backend`` / ``device_count`` (resolved here, so suites don't each
+    import jax for it), and a timestamp-free ``run_id`` content-hashed
+    from the canonical summary JSON — identical results produce identical
+    files, so bench artifact diffs are meaningful in review."""
+    import jax  # deferred: keep common.py importable without touching jax
+
+    body = json.dumps(summary, indent=2, sort_keys=True, default=_bench_jsonable)
+    envelope = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "bench": name,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "run_id": hashlib.sha256(body.encode()).hexdigest()[:16],
+        "summary": json.loads(body),
+    }
+    path = f"BENCH_{name}.json"
+    with open(path, "w") as f:
+        json.dump(envelope, f, indent=2, sort_keys=True)
+        f.write("\n")
     return path

@@ -1,0 +1,135 @@
+"""Observability smoke — a recorded + traced async run, validated end to end.
+
+CI's check that the repro.obs stack stays wired: run a small async
+(FedBuff-style) federation with full client heterogeneity (a straggler
+tail, so spans genuinely overlap) under a ``RunRecorder`` with trace +
+profile enabled, then assert the artifacts it claims to write actually
+hold together:
+
+- ``manifest.json`` parses, carries the schema version / config hash /
+  environment snapshot, and counts every aggregation event;
+- ``trace.json`` passes the Perfetto-schema validator
+  (``repro.obs.trace.validate_trace_file`` — the same checks
+  ``tools/validate_trace.py`` exposes as a CLI): monotonic timestamps,
+  matched B/E span nesting per lane, client lanes within the population;
+- the trace's aggregation instants sit at the exact simulated clock the
+  returned ``FLHistory.sim_clock`` reports (bit-equal floats — the
+  recorder replays the scheduler's event queue, it does not re-derive it);
+- ``metrics.jsonl`` has one row per event and ``profile.json`` has
+  non-trivial wall-clock phase totals.
+
+Emits the record under experiments/bench/obs_run/ and BENCH_obs.json.
+Run standalone with ``PYTHONPATH=src python -m benchmarks.obs_smoke``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+
+import numpy as np
+
+from benchmarks.common import OUT_DIR, write_bench_json
+from repro.data import make_har_dataset
+from repro.fl import FLConfig, run_federated
+from repro.obs import RunRecorder, validate_trace_file
+
+ROUNDS = 12
+SERVER_LATENCY_S = 0.01  # CommModel default the async event clock pays
+
+
+def run():
+    ds = make_har_dataset("uci-har", seed=0, scale=0.05, n_clients=16)
+    cfg = FLConfig(
+        strategy="fedavg", personalization="none", fraction=1.0,
+        epochs=1, rounds=ROUNDS,
+        scheduler="async", buffer_k=3, heterogeneity=1.0,
+    )
+    out_dir = os.path.join(OUT_DIR, "obs_run")
+    shutil.rmtree(out_dir, ignore_errors=True)
+    rec = RunRecorder(out_dir, trace=True, profile=True, echo=False)
+    h = run_federated(ds, cfg, recorder=rec, progress=True)
+
+    failures = []
+
+    # manifest: parses + identifies the run
+    with open(os.path.join(out_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    for key in ("schema_version", "run_id", "config_hash", "environment",
+                "summary"):
+        if key not in manifest:
+            failures.append(f"manifest.json missing {key!r}")
+    if manifest.get("rounds_recorded") != ROUNDS:
+        failures.append(
+            f"manifest rounds_recorded={manifest.get('rounds_recorded')} "
+            f"!= {ROUNDS} events"
+        )
+
+    # trace: schema-valid Perfetto JSON over the real population
+    trace_path = os.path.join(out_dir, "trace.json")
+    errors = validate_trace_file(trace_path, population=ds.n_clients)
+    failures += [f"trace: {e}" for e in errors]
+
+    # simulated-clock exactness: each aggregation instant sits at the exact
+    # sim_clock the history reports, and the landed finish times reproduce
+    # it through the server-latency hop (bit-equal, not approximately)
+    with open(trace_path) as f:
+        trace = json.load(f)
+    aggs = [e for e in trace["traceEvents"]
+            if e["ph"] == "i" and e["name"] == "aggregate"]
+    if len(aggs) != len(h.sim_clock):
+        failures.append(
+            f"trace has {len(aggs)} aggregation instants, history has "
+            f"{len(h.sim_clock)} events"
+        )
+    for a in aggs:
+        t = a["args"]["t"]
+        if a["args"]["clock_s"] != h.sim_clock[t]:
+            failures.append(
+                f"event {t}: trace clock {a['args']['clock_s']!r} != "
+                f"history sim_clock {h.sim_clock[t]!r}"
+            )
+        if max(a["args"]["finish_s"]) + SERVER_LATENCY_S != h.sim_clock[t]:
+            failures.append(
+                f"event {t}: max landed finish + server latency != sim_clock"
+            )
+
+    # metrics + profile: streams are populated
+    with open(os.path.join(out_dir, "metrics.jsonl")) as f:
+        rows = [json.loads(line) for line in f]
+    if len(rows) != ROUNDS:
+        failures.append(f"metrics.jsonl has {len(rows)} rows, expected {ROUNDS}")
+    with open(os.path.join(out_dir, "profile.json")) as f:
+        profile = json.load(f)
+    if profile.get("jit_cache_misses", 0) < 1:
+        failures.append("profile.json reports no jit compile")
+    if not profile.get("totals_s"):
+        failures.append("profile.json has empty phase totals")
+
+    write_bench_json("obs", {
+        "smoke": True,
+        "population": ds.n_clients,
+        "events": ROUNDS,
+        "trace_events": len(trace["traceEvents"]),
+        "trace_errors": len(errors),
+        "sim_clock_s": float(h.sim_clock[-1]),
+        "mean_staleness": float(h.staleness_mean.mean()),
+        "profile_totals_s": profile.get("totals_s", {}),
+        "record_dir": out_dir,
+    })
+
+    if failures:
+        for msg in failures:
+            print(f"!! {msg}")
+        sys.exit(1)
+    print(
+        f"  obs record ok: {ROUNDS} events, {len(trace['traceEvents'])} trace "
+        f"events, clock={float(h.sim_clock[-1]):.2f}s -> {out_dir}"
+    )
+    return out_dir
+
+
+if __name__ == "__main__":
+    run()

@@ -31,6 +31,7 @@ def main() -> None:
         comm_overhead,
         kernel_bench,
         loop_bench,
+        obs_smoke,
         roofline,
         scale_bench,
         selection_bench,
@@ -51,6 +52,7 @@ def main() -> None:
         ("async_bench (sync vs async scheduler grid)", async_bench.run),
         ("scale_bench (cohort O(K) vs dense O(C) rounds)", scale_bench.run),
         ("loop_bench (round-fused executor vs per-round dispatch)", loop_bench.run),
+        ("obs_smoke (recorded + traced run, artifacts validated)", obs_smoke.run),
         ("roofline (deliverable g)", roofline.run),
     ]
     if args.smoke:  # CI smoke: the perf + pipeline entry points, tiny sizes
@@ -58,7 +60,7 @@ def main() -> None:
             s for s in suites
             if s[0].split(" ")[0]
             in ("kernel_bench", "codec_bench", "selection_bench", "async_bench",
-                "scale_bench", "loop_bench")
+                "scale_bench", "loop_bench", "obs_smoke")
         ]
     t00 = time.time()
     for name, fn in suites:

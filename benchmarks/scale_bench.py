@@ -32,7 +32,6 @@ grid; run standalone with
 
 from __future__ import annotations
 
-import json
 import os
 import sys
 import time
@@ -41,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import write_csv
+from benchmarks.common import write_bench_json, write_csv
 from repro.data import make_federated_classification
 from repro.fl import FLConfig, api
 from repro.models.mlp import init_mlp
@@ -223,7 +222,6 @@ def run():
 
     path = write_csv("scale_bench", header, rows)
     summary = {
-        "bench": "scale_bench",
         "smoke": SMOKE,
         "K": k,
         "populations": pops,
@@ -233,8 +231,7 @@ def run():
         "target_speedup_at_C2000": TARGET_SPEEDUP_C2000,
         "speedup_at_C2000": speedup_at_2000,
     }
-    with open("BENCH_scale.json", "w") as f:
-        json.dump(summary, f, indent=2)
+    write_bench_json("scale", summary)
     if speedup_at_2000 is not None and speedup_at_2000 < TARGET_SPEEDUP_C2000:
         print(
             f"!! speedup at C=2000 {speedup_at_2000:.2f}x below the "

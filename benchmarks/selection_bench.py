@@ -14,7 +14,7 @@ import os
 
 import numpy as np
 
-from benchmarks.common import ROUNDS, run_solution, write_csv
+from benchmarks.common import ROUNDS, run_solution, write_bench_json, write_csv
 from repro.data import make_har_dataset
 from repro.fl import FLConfig, run_federated
 
@@ -52,6 +52,7 @@ def run():
     target = 0.70 if SMOKE else 0.80
     ds = make_har_dataset("uci-har", seed=0, scale=0.25) if SMOKE else None
     rows = []
+    records = []
     for name, spec in STRATEGIES.items():
         for codec in CODECS:
             full = dict(spec, codec=codec, topk_fraction=0.1)
@@ -64,10 +65,20 @@ def run():
             rtt = rounds_to_target(h.accuracy_mean, target)
             wire_mb = float(h.tx_bytes_cum[-1] / 1e6)
             rows.append([name, codec, f"{acc:.4f}", rtt, f"{wire_mb:.2f}"])
+            records.append({
+                "strategy": name, "codec": codec, "rounds": rounds,
+                "final_accuracy": acc, "rounds_to_target": rtt,
+                "wire_mb": wire_mb,
+            })
             print(
                 f"  {name:16s} {codec:10s} acc={acc:.4f}  "
                 f"rounds_to_{target:.2f}={rtt:3d}  wire={wire_mb:8.2f}MB"
             )
+    write_bench_json("selection", {
+        "smoke": SMOKE,
+        "target_accuracy": target,
+        "rows": records,
+    })
     return write_csv(
         "selection_bench",
         ["strategy", "codec", "final_accuracy", "rounds_to_target", "wire_mb"],

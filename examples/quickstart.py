@@ -87,6 +87,32 @@ composing a custom round:
   Phase names live in string registries (phases.get_phase, get_strategy,
   repro.comm.make_codec); register_phase / register_strategy /
   register_codec_atom add custom components without touching the engine.
+
+observing a run (--record-dir):
+  Attach a structured run record (repro.obs) to the adaptive run:
+
+    PYTHONPATH=src python examples/quickstart.py --record-dir experiments/run0 \\
+        --trace --mode async --heterogeneity 1.0
+
+  writes experiments/run0/:
+    manifest.json  config snapshot + sha256 hash, backend/devices, git rev,
+                   package versions, seed, and final summary stats
+    metrics.jsonl  one JSON object per round (sync) or aggregation event
+                   (async): accuracy, cohort size, wire bytes, simulated
+                   round time/clock, update norms, staleness, in-flight
+    run.log        the progress lines (progress printing routes through
+                   the recorder — same text, also persisted)
+    trace.json     (--trace) Chrome/Perfetto trace on the SIMULATED clock:
+                   per-client dispatch->train->upload lanes, aggregation
+                   instants, sync round/chunk spans. Open it at
+                   https://ui.perfetto.dev (or chrome://tracing).
+    profile.json   (--profile) wall-clock profile of the real loop:
+                   compile vs dispatch vs device_get per chunk, jit cache
+                   misses, live-array memory watermark
+
+  Recording is pure host-side observation: the run's trajectory is
+  bit-identical with or without a recorder (goldens enforced), and
+  overhead at the default off state is zero.
 """
 
 
@@ -116,7 +142,19 @@ def main():
     ap.add_argument("--scan-chunk", type=int, default=1,
                     help="rounds fused per on-device scan chunk (sync loop; "
                          "1 = per-round host sync, 0 = whole run in one chunk)")
+    ap.add_argument("--record-dir", default=None,
+                    help="write a structured run record (manifest.json + "
+                         "metrics.jsonl + run.log) for the adaptive run here")
+    ap.add_argument("--trace", action="store_true",
+                    help="with --record-dir: also export a Chrome/Perfetto "
+                         "trace.json on the simulated clock")
+    ap.add_argument("--profile", action="store_true",
+                    help="with --record-dir: also profile the real loop "
+                         "(compile/dispatch/device_get, jit cache misses, "
+                         "memory watermark) into profile.json")
     args = ap.parse_args()
+    if (args.trace or args.profile) and not args.record_dir:
+        ap.error("--trace/--profile require --record-dir")
     # fail fast on a bad codec spec or strategy name before the
     # (minutes-long) baseline runs
     from repro.comm import make_codec
@@ -154,7 +192,16 @@ def main():
         execution=ExecutionConfig(cohort_size=args.cohort_size,
                                   scan_chunk=args.scan_chunk),
     )
-    acsp = run_federated(ds, cfg, progress=True)
+    recorder = None
+    if args.record_dir:
+        from repro.obs import RunRecorder
+        recorder = RunRecorder(args.record_dir, trace=args.trace,
+                               profile=args.profile)
+    acsp = run_federated(ds, cfg, progress=True, recorder=recorder)
+    if recorder is not None:
+        print(f"\nrun record -> {args.record_dir}/ (manifest.json, metrics.jsonl"
+              + (", trace.json — open at https://ui.perfetto.dev" if args.trace else "")
+              + (", profile.json" if args.profile else "") + ")")
 
     red = overhead_reduction(acsp.tx_bytes_cum[-1], fedavg.tx_bytes_cum[-1])
     name = args.strategy

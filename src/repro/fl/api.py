@@ -530,6 +530,10 @@ def build_round_step(
             "tx_params": tx,
             "pms": state.pms,
             "wire_per_client": wire_paid,
+            # phase cost signal surfaced for observability (repro.obs): the
+            # last-known compressed-delta norm per client, already carried
+            # in the round state — an extra out leaf, no extra compute
+            "update_norm": update_norm,
         }
         return new_state, out
 

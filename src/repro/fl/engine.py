@@ -96,10 +96,11 @@ class FLHistory(NamedTuple):
     sim_clock: np.ndarray          # (T,) simulated clock at each aggregation
     staleness_mean: np.ndarray     # (T,) mean staleness of merged updates
                                    # (identically 0 under the sync barrier)
-    in_flight: np.ndarray = None   # (T,) executing client lanes: the cohort
-                                   # size K under the sync barrier, clients
-                                   # in flight after dispatch under async
-                                   # (never exceeds max_concurrency)
+    in_flight: np.ndarray          # (T,) executing client lanes — ALWAYS
+                                   # populated: the cohort size K under the
+                                   # sync barrier, clients in flight after
+                                   # dispatch under async (never exceeds
+                                   # max_concurrency)
 
 
 def make_round_step(
@@ -128,6 +129,7 @@ def run_federated(
     progress: bool = False,
     pipeline: RoundPipeline | None = None,
     client_delay: np.ndarray | None = None,
+    recorder=None,
 ) -> FLHistory:
     """Run ``cfg.rounds`` federated rounds (sync) or aggregation events
     (async) under the configured scheduler; returns host-side history.
@@ -136,6 +138,13 @@ def run_federated(
     for the simulated clock (stragglers); by default it is derived from
     ``cfg.scheduler.heterogeneity`` (0 = uniform clocks, the seed
     behaviour).
+
+    ``recorder`` is an optional ``repro.obs.RunRecorder``: the scheduler
+    feeds it per-round metric streams, optional simulated-clock trace
+    events, and wall-clock profiling, and closes it with the returned
+    history. Observation is pure host-side — a recorded run's device
+    trajectory (and the committed goldens) is bit-identical to an
+    unrecorded one — and ``recorder=None`` (default) costs nothing.
     """
     from repro.fl.sched import make_scheduler
 
@@ -149,4 +158,5 @@ def run_federated(
         progress=progress,
         pipeline=pipeline,
         client_delay=client_delay,
+        recorder=recorder,
     )

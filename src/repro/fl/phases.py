@@ -191,6 +191,9 @@ class RoundContext(NamedTuple):
     loss: Any = None              # Evaluator
     next_select: Any = None       # SelectorPhase
     next_pms: Any = None          # LayerPolicy
+    merge_weight: Any = None      # Aggregator — (lanes,) staleness discount
+                                  # each landing update was merged with
+                                  # (observability signal; no phase reads it)
 
 
 def _stack_clients(params, n_clients: int):
@@ -633,15 +636,21 @@ class StalenessAggregator(Aggregator):
             if ctx.staleness is not None
             else jnp.zeros(ctx.select.shape, jnp.int32)
         )
+        discount = staleness_weight(
+            self.staleness_fn, stale, self.exponent, self.threshold
+        )
         w = (
             ctx.select.astype(jnp.float32)
             * env.n_samples.astype(jnp.float32)
-            * staleness_weight(self.staleness_fn, stale, self.exponent, self.threshold)
+            * discount
         )
         return ctx._replace(
             new_global=staleness_weighted_merge(
                 deltas, ctx.global_params, w, ctx.share
-            )
+            ),
+            # the per-lane discount factor alone (sample weighting excluded)
+            # — the scheduler surfaces its landed mean to the run recorder
+            merge_weight=discount,
         )
 
 

@@ -82,6 +82,8 @@ from repro.fl.api import (
 )
 from repro.fl.cohort import tree_scatter, tree_take
 from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
+from repro.obs.profile import phase_timer
+from repro.obs.record import format_async_progress, format_sync_progress
 
 __all__ = [
     "AsyncScheduler",
@@ -176,6 +178,26 @@ class ClientClock:
             ),
             np.float64,
         )
+
+    def component_times(self, pms: np.ndarray):
+        """``durations`` split into ``(rx, train, total)`` per client —
+        downlink, local-training, and the full dispatch->upload-done time
+        (broadcasts like ``shared_params``: a chunk's (T, C) depths batch).
+
+        The trace exporter (repro.obs) tiles each dispatch as
+        ``[t, t+rx) [t+rx, t+rx+train) [t+rx+train, t+total)``: the upload
+        span absorbs the float64 rounding remainder, so the triple ends
+        bit-identically at the ``durations`` value the event queue used —
+        per-client spans sum to the exact simulated clock the history
+        reports."""
+        total = self.durations(pms)
+        rx = (
+            self.shared_params(pms) * float(BYTES_PER_PARAM)
+            / self.comm.bandwidth_bytes_per_s
+            * self.delay
+        )
+        train = self.round_flops(pms) / self.comm.client_flops_per_s * self.delay
+        return rx, train, total
 
 
 # ---------------------------------------------------------------------------
@@ -310,6 +332,7 @@ class SyncScheduler:
         progress: bool = False,
         pipeline: RoundPipeline | None = None,
         client_delay: np.ndarray | None = None,
+        recorder=None,
     ):
         from repro.fl.engine import FLHistory
 
@@ -339,19 +362,44 @@ class SyncScheduler:
         chunk_steps: dict[int, Callable] = {}  # length -> fused executable
         lanes = cfg.execution.resolved_cohort(data.n_clients)
         delay = None if clock.uniform else clock.delay
+        if recorder is not None:
+            recorder.open_run(mode="sync", cfg=cfg, data=data, comm=comm,
+                              clock=clock, lanes=lanes)
+        prof = recorder.profiler if recorder is not None else None
+        emit = recorder.log if recorder is not None else print
         accs, sel_hist, tx_hist, pms_hist, times, wire_hist = [], [], [], [], [], []
         for t0 in range(0, cfg.rounds, chunk):
             n = min(chunk, cfg.rounds - t0)
+            if prof is not None:
+                prof.begin_chunk(t0, n)
             if per_round is not None:
-                state, out = per_round(state, jnp.asarray(t0))
-                outs = jax.device_get(out)
+                if prof is not None and not isinstance(per_round, jax.stages.Compiled):
+                    # AOT-split so compile time is attributed, not folded
+                    # into the first dispatch (same executable bit-for-bit)
+                    with prof.phase("compile"):
+                        per_round = per_round.lower(state, jnp.asarray(t0)).compile()
+                with phase_timer(prof, "dispatch"):
+                    state, out = per_round(state, jnp.asarray(t0))
+                with phase_timer(prof, "device_get"):
+                    outs = jax.device_get(out)
                 outs = {k: np.asarray(v)[None] for k, v in outs.items()}
             else:
                 step = chunk_steps.get(n)
                 if step is None:  # one trace per distinct length (body + tail)
-                    step = chunk_steps[n] = build_chunk_step(round_step, n)
-                state, outs = step(state, jnp.arange(t0, t0 + n, dtype=jnp.int32))
-                outs = jax.device_get(outs)  # the ONE host sync this chunk pays
+                    if prof is not None:
+                        with prof.phase("compile"):
+                            step = build_chunk_step(round_step, n).lower(
+                                state, jnp.arange(t0, t0 + n, dtype=jnp.int32)
+                            ).compile()
+                    else:
+                        step = build_chunk_step(round_step, n)
+                    chunk_steps[n] = step
+                with phase_timer(prof, "dispatch"):
+                    state, outs = step(state, jnp.arange(t0, t0 + n, dtype=jnp.int32))
+                with phase_timer(prof, "device_get"):
+                    outs = jax.device_get(outs)  # the ONE host sync this chunk pays
+            if prof is not None:
+                prof.end_chunk()
             acc = np.asarray(outs["acc"])                            # (n, C)
             sel = np.asarray(outs["selected"])                       # (n, C)
             pms = np.asarray(outs["pms"])                            # (n, C)
@@ -362,30 +410,36 @@ class SyncScheduler:
             # model); the prefix lookup + FLOPs + round_times are a single
             # numpy pass over (n, C), no per-round numpy<->jnp churn
             per_client_params = clock.shared_params(pms)             # (n, C)
-            times.append(
-                comm.round_times(
-                    wire, clock.round_flops(pms), sel,
-                    rx_bytes=per_client_params * float(BYTES_PER_PARAM),
-                    # None on the homogeneous default: no delay lane to pay
-                    delay=delay,
-                )
+            rt = comm.round_times(
+                wire, clock.round_flops(pms), sel,
+                rx_bytes=per_client_params * float(BYTES_PER_PARAM),
+                # None on the homogeneous default: no delay lane to pay
+                delay=delay,
             )
+            times.append(rt)
             accs.append(acc)
             sel_hist.append(sel)
             pms_hist.append(pms)
             tx_hist.append(np.asarray(outs["tx_params"], np.float64))
             wire_hist.append(wire.sum(axis=1))
+            if recorder is not None:
+                # one vectorized append per chunk, straight off the stacked
+                # out leaves the device_get above already fetched
+                recorder.on_sync_chunk(
+                    t0=t0, acc=acc, sel=sel, pms=pms, wire=wire,
+                    tx=tx_hist[-1], times=rt,
+                    update_norm=np.asarray(outs["update_norm"]), lanes=lanes,
+                )
             if progress:
                 for i in _progress_rows(t0, n, chunk, cfg.rounds):
-                    print(
-                        f"  round {t0 + i:3d}  acc={acc[i].mean():.4f}  "
-                        f"|S|={int(sel[i].sum())}"
-                    )
+                    emit(format_sync_progress(
+                        t0 + i, float(acc[i].mean()), int(sel[i].sum())
+                    ))
 
         acc_pc = np.concatenate(accs)
         wire = np.concatenate(wire_hist)
         times = np.concatenate(times)
-        return FLHistory(
+        h = FLHistory(
             accuracy_mean=acc_pc.mean(axis=1),
             accuracy_per_client=acc_pc,
             selected=np.concatenate(sel_hist),
@@ -398,6 +452,9 @@ class SyncScheduler:
             staleness_mean=np.zeros_like(times),
             in_flight=np.full(times.shape, lanes, np.int64),
         )
+        if recorder is not None:
+            recorder.close(h)
+        return h
 
 
 # ---------------------------------------------------------------------------
@@ -607,17 +664,24 @@ def build_async_step(env: phases.RoundEnv, pipeline: RoundPipeline):
             residual=new_residual,
             participation=participation,
         )
+        n_land = jnp.maximum(jnp.sum(land_f), 1.0)
+        merge_w = (
+            cctx.merge_weight
+            if cctx.merge_weight is not None
+            else jnp.ones_like(land_f)
+        )
         out = {
             "acc": pctx.accuracy,
             "selected": land_c,
             "tx_params": transmitted_parameters(land, share_m, layer_param_sizes(g)),
             "pms": state.client_pms,
             "wire_per_client": wire_paid_c,
+            "update_norm": update_norm,
             "dispatched": dispatched,
             "slot_client": new_slot_client,
             "client_pms": new_client_pms,
-            "staleness_mean": jnp.sum(land_f * staleness.astype(jnp.float32))
-            / jnp.maximum(jnp.sum(land_f), 1.0),
+            "staleness_mean": jnp.sum(land_f * staleness.astype(jnp.float32)) / n_land,
+            "merge_discount_mean": jnp.sum(land_f * merge_w) / n_land,
         }
         return new_state, out
 
@@ -658,6 +722,7 @@ class AsyncScheduler:
         progress: bool = False,
         pipeline: RoundPipeline | None = None,
         client_delay: np.ndarray | None = None,
+        recorder=None,
     ):
         from repro.fl.engine import FLHistory
 
@@ -704,11 +769,18 @@ class AsyncScheduler:
         )
         step = jax.jit(build_async_step(su.env, su.pipeline))
         buffer_k = self.buffer_k or cfg.scheduler.buffer_k or max(1, c // 2)
+        if recorder is not None:
+            recorder.open_run(mode="async", cfg=cfg, data=data, comm=comm,
+                              clock=clock_fn, lanes=m, buffer_k=buffer_k)
+        prof = recorder.profiler if recorder is not None else None
+        emit = recorder.log if recorder is not None else print
 
         # --- host event queue over the M slots ---
         slot_client = slot_client0.copy()
         client_pms = np.full((c,), su.pms0, np.int32)
         finish = clock_fn.durations(client_pms)[slot_client]  # (M,)
+        if recorder is not None:  # warm start: w(0) cut at simulated t=0
+            recorder.on_async_dispatch(slot_client0, 0.0, client_pms)
         active = np.ones((m,), bool)
         in_flight_clients = np.zeros((c,), bool)
         in_flight_clients[slot_client0] = True
@@ -733,7 +805,8 @@ class AsyncScheduler:
             idle_now[landed_clients] = True
             force = bool(n_active - k == 0)
 
-            state, out = step(
+            land_finish = finish[landers].copy()  # pre-update: queue's truth
+            args = (
                 state,
                 jnp.asarray(t),
                 jnp.asarray(land),
@@ -742,7 +815,19 @@ class AsyncScheduler:
                 jnp.asarray(idle_now),
                 jnp.asarray(force),
             )
-            out = jax.device_get(out)
+            if prof is not None:
+                prof.begin_chunk(t, 1)
+                if not isinstance(step, jax.stages.Compiled):
+                    # AOT-split so compile time is attributed, not folded
+                    # into the first event's dispatch
+                    with prof.phase("compile"):
+                        step = step.lower(*args).compile()
+            with phase_timer(prof, "dispatch"):
+                state, out = step(*args)
+            with phase_timer(prof, "device_get"):
+                out = jax.device_get(out)
+            if prof is not None:
+                prof.end_chunk()
 
             dispatched = np.asarray(out["dispatched"])
             slot_client = np.asarray(out["slot_client"], np.int32)
@@ -763,17 +848,32 @@ class AsyncScheduler:
             clock_hist.append(new_clock)
             stale_hist.append(float(out["staleness_mean"]))
             flight_hist.append(int(in_flight_clients.sum()))
+            if recorder is not None:
+                recorder.on_async_event(
+                    t=t, acc=np.asarray(out["acc"]), sel=sel_hist[-1],
+                    tx=tx_hist[-1], pms=pms_hist[-1], wire=wire_hist[-1],
+                    dt=times[-1], new_clock=new_clock,
+                    staleness_mean=stale_hist[-1], in_flight=flight_hist[-1],
+                    buffer_k=k, update_norm=np.asarray(out["update_norm"]),
+                    merge_discount=float(out["merge_discount_mean"]),
+                    landed_clients=landed_clients, landed_finish=land_finish,
+                    landed_staleness=staleness[landers],
+                )
+                if dispatched.any():  # re-dispatches cut at the new clock
+                    recorder.on_async_dispatch(
+                        slot_client[dispatched], new_clock, client_pms
+                    )
             sim_clock = new_clock
             version += 1
             if progress and (t % 10 == 0 or t == cfg.rounds - 1):
-                print(
-                    f"  event {t:3d}  acc={np.mean(out['acc']):.4f}  |K|={int(land.sum())}  "
-                    f"clock={new_clock:.2f}s  staleness={stale_hist[-1]:.2f}"
-                )
+                emit(format_async_progress(
+                    t, float(np.mean(out["acc"])), int(land.sum()),
+                    new_clock, stale_hist[-1],
+                ))
 
         acc_pc = np.stack(accs)
         wire = np.asarray(wire_hist)
-        return FLHistory(
+        h = FLHistory(
             accuracy_mean=acc_pc.mean(axis=1),
             accuracy_per_client=acc_pc,
             selected=np.stack(sel_hist),
@@ -786,6 +886,9 @@ class AsyncScheduler:
             staleness_mean=np.asarray(stale_hist),
             in_flight=np.asarray(flight_hist, np.int64),
         )
+        if recorder is not None:
+            recorder.close(h)
+        return h
 
 
 def make_scheduler(cfg: FLConfig):

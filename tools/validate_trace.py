@@ -1,0 +1,45 @@
+#!/usr/bin/env python
+"""Validate a repro.obs Perfetto trace file from the command line.
+
+Runs the same structural checks ``repro.obs.trace.validate_trace`` applies
+(container shape, event phases, monotonic timestamps, matched B/E span
+nesting per lane, client lanes within the population) and exits non-zero
+on the first broken trace — CI points this at the artifact
+``benchmarks.obs_smoke`` writes.
+
+Usage:
+    PYTHONPATH=src python tools/validate_trace.py TRACE.json [--population N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", nargs="+", help="trace.json file(s) to validate")
+    ap.add_argument(
+        "--population", type=int, default=None,
+        help="client population: client lane ids must be in [0, population)",
+    )
+    args = ap.parse_args()
+
+    from repro.obs.trace import validate_trace_file
+
+    bad = 0
+    for path in args.trace:
+        errors = validate_trace_file(path, population=args.population)
+        if errors:
+            bad += 1
+            print(f"{path}: INVALID")
+            for e in errors:
+                print(f"  - {e}")
+        else:
+            print(f"{path}: ok")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
