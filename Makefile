@@ -10,10 +10,14 @@
 # manifest + metrics.jsonl + Perfetto trace + profile — and `validate-trace`
 # re-checks the trace artifact through the tools/validate_trace.py CLI, so
 # CI asserts the manifest parses and the trace schema-validates end to end.
+# The serve smoke (benchmarks/serve_bench.py, also in bench-smoke) exercises
+# the personalized serving path — artifact export, cohort-batched engine,
+# continuous batcher — with per-lane bit-identity audits and a throughput
+# floor, and `validate-bench-serve` re-checks its BENCH_serve.json envelope.
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all bench-smoke bench validate-trace ci
+.PHONY: test test-all bench-smoke bench validate-trace validate-bench-serve ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -31,4 +35,7 @@ validate-trace:
 	$(PY) tools/validate_trace.py experiments/bench/obs_run/trace.json
 	$(PY) -c "import json; m = json.load(open('experiments/bench/obs_run/manifest.json')); assert m['schema_version'] >= 1 and m['config_hash'], 'bad manifest'; print('manifest ok:', m['run_id'])"
 
-ci: test-all bench-smoke validate-trace
+validate-bench-serve:
+	$(PY) -c "import json; e = json.load(open('BENCH_serve.json')); assert e['schema_version'] >= 2 and e['bench'] == 'serve' and e['run_id'], 'bad envelope'; s = e['summary']; assert s['modes'].keys() == {'none', 'ft', 'pms'}; assert all(b['qps'] > 0 and b['latency_p99_ms'] >= b['latency_p50_ms'] and b['identity_audited'] > 0 for m in s['modes'].values() for b in m['batches'].values()); assert min(s['personalized_qps_ratio'].values()) >= s['min_personalized_ratio']; print('BENCH_serve.json ok:', e['run_id'])"
+
+ci: test-all bench-smoke validate-trace validate-bench-serve

@@ -1,0 +1,145 @@
+"""Personalized serving benchmark: QPS + latency percentiles vs batch size
+x personalization mode (BENCH_serve.json).
+
+For each personalization mode (none / ft / pms) a short federated run is
+frozen into a servable artifact (``repro.serve.fit_servable``), and the
+continuous-batching classify engine serves a stream of mixed-client
+requests at several batch sizes. Reported per (mode, batch): requests/sec
+and p50/p99/mean latency (enqueue -> finish, so queueing under load is in
+the tail), plus the personalized-vs-none throughput ratio at equal batch
+— the cost of per-lane gather+compose over serving one shared model. The
+suite asserts the ratio stays >= 0.8 and that every audited batched lane
+is bit-identical to that client's individually composed model.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+
+Smoke mode (REPRO_BENCH_SMOKE=1, run by ``benchmarks/run.py --smoke`` and
+``make ci``) shrinks rounds/requests/batches but exercises every mode and
+both identity checks.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import write_bench_json, write_csv
+from repro.data import make_har_dataset
+from repro.fl import FLConfig
+from repro.serve import (
+    ClassifyProgram,
+    ContinuousBatcher,
+    PersonalizedEngine,
+    ServeRequest,
+    fit_servable,
+    latency_stats,
+)
+
+MODES = ["none", "ft", "pms"]
+MIN_PERSONALIZED_RATIO = 0.8  # personalized QPS floor vs 'none' at equal batch
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def _requests(ds, n: int, seed: int = 0) -> list[ServeRequest]:
+    rng = np.random.default_rng(seed)
+    cids = rng.integers(0, ds.n_clients, size=n)
+    rows = rng.integers(0, ds.x_test.shape[1], size=n)
+    return [
+        ServeRequest(rid=i, client_id=int(c),
+                     inputs=np.asarray(ds.x_test[int(c), int(r)], np.float32))
+        for i, (c, r) in enumerate(zip(cids, rows))
+    ]
+
+
+def _audit_identity(engine: PersonalizedEngine, reqs, results, n_audit: int = 8) -> int:
+    """Batched lane == per-client composed forward, bit for bit."""
+    by_rid = {r.rid: r for r in reqs}
+    for res in results[:n_audit]:
+        ref = np.asarray(
+            engine.forward_unbatched(res.client_id,
+                                     np.asarray(by_rid[res.rid].inputs))
+        )
+        assert np.array_equal(np.asarray(res.output), ref), (
+            f"lane output diverged from per-client compose (rid={res.rid})"
+        )
+    return min(n_audit, len(results))
+
+
+def run() -> str:
+    rounds = 2 if _smoke() else 8
+    n_req = 24 if _smoke() else 256
+    batches = [1, 8] if _smoke() else [1, 8, 32]
+    ds = make_har_dataset("extrasensory", seed=0, scale=0.03)
+    reqs = _requests(ds, n_req)
+
+    grid: dict[str, dict] = {}
+    rows = []
+    t0 = time.time()
+    for mode in MODES:
+        cfg = FLConfig(strategy="acsp-fl", personalization=mode, rounds=rounds,
+                       epochs=1)
+        artifact, _ = fit_servable(ds, cfg)
+        engine = PersonalizedEngine(artifact)
+        grid[mode] = {"personalized_clients": artifact.meta["personalized_clients"],
+                      "batches": {}}
+        for b in batches:
+            program = ClassifyProgram(engine, b)
+            # warm the jitted batched forward so compile time stays out of p99
+            program.step(np.ones((b,), bool))
+            results = ContinuousBatcher(program, b).run(
+                [ServeRequest(r.rid, r.client_id, r.inputs) for r in reqs]
+            )
+            stats = latency_stats(results)
+            stats["identity_audited"] = _audit_identity(engine, reqs, results)
+            grid[mode]["batches"][str(b)] = stats
+            rows.append([mode, b, f"{stats['qps']:.1f}",
+                         f"{stats['latency_p50_ms']:.3f}",
+                         f"{stats['latency_p99_ms']:.3f}"])
+            print(f"  {mode:5s} batch {b:3d}: {stats['qps']:8.1f} req/s  "
+                  f"p50 {stats['latency_p50_ms']:7.3f}ms  "
+                  f"p99 {stats['latency_p99_ms']:7.3f}ms")
+
+    # throughput floor: per-lane personalization must cost < 20% QPS vs
+    # serving the shared global model at the same batch size
+    ratios = {}
+    for mode in MODES[1:]:
+        for b in batches:
+            r = (grid[mode]["batches"][str(b)]["qps"]
+                 / max(grid["none"]["batches"][str(b)]["qps"], 1e-9))
+            ratios[f"{mode}_vs_none_b{b}"] = round(r, 4)
+    worst = min(ratios.values())
+    assert worst >= MIN_PERSONALIZED_RATIO, (
+        f"personalized serving throughput ratio {worst:.3f} < "
+        f"{MIN_PERSONALIZED_RATIO} floor: {ratios}"
+    )
+
+    summary = {
+        "dataset": ds.name,
+        "n_clients": ds.n_clients,
+        "rounds": rounds,
+        "n_requests": n_req,
+        "batch_sizes": batches,
+        "modes": grid,
+        "personalized_qps_ratio": ratios,
+        "min_personalized_ratio": MIN_PERSONALIZED_RATIO,
+        "smoke": _smoke(),
+        "wall_s": round(time.time() - t0, 2),
+    }
+    write_csv("serve", ["mode", "batch", "qps", "p50_ms", "p99_ms"], rows)
+    return write_bench_json("serve", summary)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes (CI); same checks")
+    if ap.parse_args().smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    print("->", run())

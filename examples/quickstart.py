@@ -113,6 +113,25 @@ observing a run (--record-dir):
   Recording is pure host-side observation: the run's trajectory is
   bit-identical with or without a recorder (goldens enforced), and
   overhead at the default off state is zero.
+
+serving a personalized run (--serve):
+  Training's output is not one model — it is a shared global model plus
+  every client's personalization state (FT picks, DLD layer depths).
+  --serve freezes exactly that into a servable artifact (repro.serve):
+
+    PYTHONPATH=src python examples/quickstart.py --serve
+
+  re-derives the adaptive run's final state (same rng chain, bit-identical
+  trajectory), exports global params + per-client local slabs + per-client
+  (C, L) share masks to experiments/quickstart_servable/, loads it back,
+  and serves a mixed batch of clients through the continuous-batching
+  engine: each request is (client_id, x); the engine gathers that client's
+  personalized layers into its batch lane (the trainer's cohort jnp.take)
+  and composes global-vs-local per layer, so ONE jitted forward answers a
+  batch of different client models — bit-identical per lane to composing
+  and running each client alone. Throughput/latency numbers for this path:
+  benchmarks/serve_bench.py -> BENCH_serve.json (QPS, p50/p99 vs batch
+  size x personalization mode).
 """
 
 
@@ -152,6 +171,11 @@ def main():
                     help="with --record-dir: also profile the real loop "
                          "(compile/dispatch/device_get, jit cache misses, "
                          "memory watermark) into profile.json")
+    ap.add_argument("--serve", action="store_true",
+                    help="after training: export the adaptive run's global + "
+                         "per-client state as a servable artifact "
+                         "(experiments/quickstart_servable/) and demo batched "
+                         "personalized inference on it (see epilog)")
     args = ap.parse_args()
     if (args.trace or args.profile) and not args.record_dir:
         ap.error("--trace/--profile require --record-dir")
@@ -214,6 +238,56 @@ def main():
     print(f"simulated clock : FedAvg {fedavg.sim_clock[-1]:.1f}s | {name} {acsp.sim_clock[-1]:.1f}s"
           + (f" (mean staleness {acsp.staleness_mean.mean():.2f})" if args.mode == "async" else ""))
     assert acsp.tx_bytes_cum[-1] < fedavg.tx_bytes_cum[-1]
+
+    if args.serve:
+        serve_demo(ds, cfg)
+
+
+def serve_demo(ds, cfg, out_dir="experiments/quickstart_servable", n_requests=64):
+    """--serve: freeze the adaptive run into a servable artifact and serve a
+    mixed batch of personalized requests from it (epilog: 'serving a
+    personalized run')."""
+    from repro.serve import (
+        ClassifyProgram,
+        ContinuousBatcher,
+        PersonalizedEngine,
+        ServeRequest,
+        fit_servable,
+        latency_stats,
+        load_servable,
+        save_servable,
+    )
+
+    print("\n[serve] re-deriving the adaptive run's final state "
+          f"({cfg.rounds} rounds, mode={cfg.personalization.mode})")
+    artifact, _ = fit_servable(ds, cfg)
+    save_servable(artifact, out_dir)
+    print(f"[serve] servable -> {out_dir}/ "
+          f"({artifact.n_clients} clients, {artifact.n_layers} layers, "
+          f"{artifact.meta['personalized_clients']} personalized)")
+
+    engine = PersonalizedEngine(load_servable(out_dir))
+    rng = np.random.default_rng(0)
+    cids = rng.integers(0, ds.n_clients, size=n_requests)
+    reqs = [
+        ServeRequest(rid=i, client_id=int(c),
+                     inputs=np.asarray(ds.x_test[int(c), i % ds.x_test.shape[1]]))
+        for i, c in enumerate(cids)
+    ]
+    batch = 8
+    results = ContinuousBatcher(ClassifyProgram(engine, batch), batch).run(reqs)
+    stats = latency_stats(results)
+
+    # every lane of the batched forward must equal that client's own
+    # individually composed model — spot-check a few served requests
+    for res in results[:4]:
+        ref = np.asarray(engine.forward_unbatched(
+            res.client_id, np.asarray(next(r.inputs for r in reqs if r.rid == res.rid))))
+        assert np.array_equal(np.asarray(res.output), ref)
+    print(f"[serve] {stats['n_requests']} requests @ batch {batch}: "
+          f"{stats['qps']:.0f} req/s, p50 {stats['latency_p50_ms']:.2f}ms, "
+          f"p99 {stats['latency_p99_ms']:.2f}ms "
+          f"(batched == per-client compose, checked)")
 
 
 if __name__ == "__main__":

@@ -2,6 +2,11 @@
 architecture (reduced config on CPU).
 
     PYTHONPATH=src python examples/serve_decode.py --arch jamba-v0.1-52b --tokens 16
+
+The decode loop is the shared serving driver ``repro.serve.greedy_decode``
+— the same code ``repro.launch.serve`` runs (this example passes
+``eos_id=None`` so every lane decodes the full budget; the launch driver
+retires lanes on the model config's EOS).
 """
 
 import argparse
@@ -12,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models.api import get_model, make_concrete_batch
+from repro.serve import greedy_decode
 
 
 def main():
@@ -32,24 +38,19 @@ def main():
     decode = jax.jit(bundle.make_decode_step(window=args.window))
 
     t0 = time.time()
-    logits, cache = prefill(params, batch)
+    logits, _ = prefill(params, batch)
     jax.block_until_ready(logits)
     t_prefill = time.time() - t0
     print(f"{args.arch} (reduced): prefill {args.batch}x{args.prompt_len} in {t_prefill*1e3:.0f}ms")
 
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    generated = [tok]
     t0 = time.time()
-    for _ in range(args.tokens):
-        logits, cache = decode(params, cache, tok)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        generated.append(tok)
-    jax.block_until_ready(tok)
+    seqs, n_gen = greedy_decode(prefill, decode, params, batch, args.tokens)
     dt = time.time() - t0
-    seqs = jnp.concatenate(generated, axis=1)
+    n_tok = int(n_gen.sum())
     print(f"decoded {args.tokens} tokens/seq x {args.batch} seqs in {dt*1e3:.0f}ms "
-          f"({args.tokens*args.batch/dt:.1f} tok/s on CPU interpret path)")
-    print("first sequence token ids:", seqs[0].tolist())
+          f"({n_tok/dt:.1f} tok/s on CPU interpret path)")
+    print("first sequence token ids:", seqs[0])
+    assert all(len(s) == args.tokens for s in seqs)
     assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
 
 

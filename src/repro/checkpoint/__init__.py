@@ -1,5 +1,17 @@
 """Checkpointing for pytrees + FL server state (numpy .npz + JSON manifest)."""
 
-from repro.checkpoint.checkpoint import save_pytree, load_pytree, save_fl_state, load_fl_state
+from repro.checkpoint.checkpoint import (
+    save_pytree,
+    load_pytree,
+    load_pytree_auto,
+    save_fl_state,
+    load_fl_state,
+)
 
-__all__ = ["save_pytree", "load_pytree", "save_fl_state", "load_fl_state"]
+__all__ = [
+    "save_pytree",
+    "load_pytree",
+    "load_pytree_auto",
+    "save_fl_state",
+    "load_fl_state",
+]

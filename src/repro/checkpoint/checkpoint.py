@@ -11,6 +11,7 @@ from __future__ import annotations
 import json
 import os
 import re
+from typing import Any
 
 import jax
 import numpy as np
@@ -54,6 +55,58 @@ def save_pytree(tree, directory: str, name: str = "ckpt") -> str:
     with open(os.path.join(directory, f"{name}.json"), "w") as f:
         json.dump(manifest, f, indent=1)
     return npz_path
+
+
+def load_pytree_auto(directory: str, name: str = "ckpt"):
+    """Load a checkpoint WITHOUT a template, reconstructing nested
+    dicts/lists from the manifest's path keys.
+
+    Works for trees whose containers are dicts and lists (the layered model
+    params, stacked client slabs, and the serve artifact all are): an
+    all-digit path segment becomes a list index, anything else a dict key.
+    Leaves come back as ``jnp`` arrays in their original dtypes (bf16
+    round-trips via the float32 the npz stores). Trees containing tuples /
+    NamedTuples need the template form (``load_pytree``)."""
+    import jax.numpy as jnp
+
+    with open(os.path.join(directory, f"{name}.json")) as f:
+        manifest = json.load(f)
+    root: Any = None
+
+    def _ensure(container, seg, nxt_is_list):
+        empty: Any = [] if nxt_is_list else {}
+        if isinstance(container, list):
+            i = int(seg)
+            while len(container) <= i:
+                container.append(None)
+            if container[i] is None:
+                container[i] = empty
+            return container[i]
+        if seg not in container:
+            container[seg] = empty
+        return container[seg]
+
+    with np.load(os.path.join(directory, f"{name}.npz")) as data:
+        for k in manifest["keys"]:
+            arr = jnp.asarray(data[k])
+            want = manifest["dtypes"].get(k)
+            if want is not None and str(arr.dtype) != want:
+                arr = arr.astype(want)
+            segs = k.split("/")
+            if root is None:
+                root = [] if segs[0].isdigit() else {}
+            node = root
+            for si, seg in enumerate(segs[:-1]):
+                node = _ensure(node, seg, segs[si + 1].isdigit())
+            last = segs[-1]
+            if isinstance(node, list):
+                i = int(last)
+                while len(node) <= i:
+                    node.append(None)
+                node[i] = arr
+            else:
+                node[last] = arr
+    return root
 
 
 def load_pytree(template, directory: str, name: str = "ckpt"):

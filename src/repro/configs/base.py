@@ -71,6 +71,9 @@ class ModelConfig:
     max_decoder_seq: int = 0         # cap decoder seq (whisper 448)
 
     # --- misc ---
+    eos_token_id: int = 1            # sequence terminator the serving loop
+                                     # retires lanes on (tokenizer-defined;
+                                     # 1 matches the seed's serve driver)
     norm_eps: float = 1e-5
     dtype: str = "bfloat16"
     tie_embeddings: bool = False

@@ -1,0 +1,71 @@
+"""repro.serve — personalized inference serving.
+
+The deployment half of ACSP-FL: training produces a shared global model
+plus per-client personalization state (FT picks, PMS/DLD partial-sharing
+layers); this package serves them. Four layers:
+
+- ``repro.serve.artifact`` — the **servable artifact**: export a trained
+  run's global params + per-client local slabs + share masks from
+  ``RoundState`` via ``repro.checkpoint``; every personalization mode
+  (none/FT/PMS/DLD) projects onto one per-client ``(C, L)`` share mask.
+- ``repro.serve.engine``   — ``PersonalizedEngine``: cohort-style gather
+  of each requested client's local layers into ``(B, ...)`` batch lanes +
+  ``compose_model`` per lane, so ONE jitted forward serves a batch of B
+  *different* personalized models, bit-identical per lane to unbatched
+  per-client composition.
+- ``repro.serve.batching`` — continuous-batching request loop: fixed
+  lanes, retirement + same-iteration backfill, per-request latency spans
+  (queue wait included — p99 means p99). ``repro.serve.decode`` plugs the
+  model zoo's prefill/decode path into the same loop.
+- ``repro.serve.record``   — ``ServeRecorder``: RunRecorder-style serve
+  records (manifest + requests.jsonl + optional Perfetto trace) through
+  ``repro.obs``.
+
+Quickstart::
+
+    art, _ = fit_servable(ds, cfg)            # or export/load a run's state
+    save_servable(art, "experiments/srv")     # -> servable.npz + manifest
+    eng = PersonalizedEngine(load_servable("experiments/srv"))
+    logits = eng.forward([3, 17, 4], x_batch)  # 3 different client models
+
+Throughput/latency: ``benchmarks/serve_bench.py`` (QPS + p50/p99 vs batch
+size x personalization mode -> BENCH_serve.json).
+"""
+
+from repro.serve.artifact import (
+    ServableArtifact,
+    fit_servable,
+    load_servable,
+    save_servable,
+    servable_from_state,
+)
+from repro.serve.batching import (
+    ClassifyProgram,
+    ContinuousBatcher,
+    LaneProgram,
+    ServeRequest,
+    ServeResult,
+    latency_stats,
+)
+from repro.serve.decode import DecodeProgram, greedy_decode, token_only_prefill
+from repro.serve.engine import PersonalizedEngine
+from repro.serve.record import ServeRecorder
+
+__all__ = [
+    "ServableArtifact",
+    "servable_from_state",
+    "save_servable",
+    "load_servable",
+    "fit_servable",
+    "PersonalizedEngine",
+    "ServeRequest",
+    "ServeResult",
+    "LaneProgram",
+    "ClassifyProgram",
+    "ContinuousBatcher",
+    "latency_stats",
+    "DecodeProgram",
+    "greedy_decode",
+    "token_only_prefill",
+    "ServeRecorder",
+]

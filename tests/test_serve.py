@@ -1,0 +1,393 @@
+"""repro.serve tests: artifact projection, batched bit-identity,
+continuous batching, decode accounting, serve records."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import make_har_dataset
+from repro.fl import FLConfig
+from repro.serve import (
+    ClassifyProgram,
+    ContinuousBatcher,
+    DecodeProgram,
+    PersonalizedEngine,
+    ServeRecorder,
+    ServeRequest,
+    fit_servable,
+    greedy_decode,
+    latency_stats,
+    load_servable,
+    save_servable,
+    servable_from_state,
+)
+
+MODES = ["none", "ft", "pms"]
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_har_dataset("extrasensory", seed=0, scale=0.03)
+
+
+@pytest.fixture(scope="module")
+def artifacts(ds):
+    """One short trained artifact (+ final state) per personalization mode."""
+    out = {}
+    for mode in MODES:
+        cfg = FLConfig(strategy="acsp-fl", personalization=mode, rounds=2, epochs=1)
+        out[mode] = fit_servable(ds, cfg)
+    return out
+
+
+def _reference_forward(artifact, client_id: int, x_single):
+    """Independent per-client path: pick each layer global-vs-local in plain
+    Python off the host share mask (no batch lanes, no gather, no engine
+    code), then run the raw apply. This is what lane bit-identity is
+    checked against."""
+    from repro.models.mlp import mlp_apply
+
+    if artifact.local_params is None:
+        model = artifact.global_params
+    else:
+        share = np.asarray(artifact.share_mask)[client_id]
+        model = [
+            artifact.global_params[j]
+            if share[j]
+            else jax.tree.map(lambda leaf: leaf[client_id], artifact.local_params[j])
+            for j in range(artifact.n_layers)
+        ]
+    return mlp_apply(model, jnp.asarray(x_single)[None])[0]
+
+
+# ---------------------------------------------------------------------------
+# artifact projection
+# ---------------------------------------------------------------------------
+
+
+def test_servable_projection_shapes(ds, artifacts):
+    for mode in MODES:
+        art, state = artifacts[mode]
+        assert art.n_clients == ds.n_clients
+        assert art.n_layers == len(state.global_params)
+        assert art.share_mask.shape == (art.n_clients, art.n_layers)
+        assert art.meta["mode"] == mode
+
+
+def test_servable_none_has_no_local_state(artifacts):
+    art, _ = artifacts["none"]
+    assert art.local_params is None
+    assert bool(jnp.all(art.share_mask))
+    assert art.meta["personalized_clients"] == 0
+
+
+def test_servable_ft_rows_are_whole_model_picks(artifacts):
+    # FT (Eq. 8) picks whole models: each row is all-True or all-False
+    art, _ = artifacts["ft"]
+    rows = np.asarray(art.share_mask)
+    assert all(r.all() or not r.any() for r in rows)
+    assert art.local_params is not None
+
+
+def test_servable_pms_rows_are_share_prefixes(artifacts):
+    # PMS/DLD shares the first k layers and personalizes the rest
+    art, state = artifacts["pms"]
+    rows = np.asarray(art.share_mask)
+    pms = np.asarray(state.pms)
+    for i, r in enumerate(rows):
+        assert r[: pms[i]].all() and not r[pms[i]:].any()
+
+
+def test_servable_unknown_mode_rejected(artifacts):
+    _, state = artifacts["pms"]
+    with pytest.raises(ValueError):
+        servable_from_state(state, "quantile")
+
+
+def test_servable_ft_requires_data(artifacts):
+    _, state = artifacts["ft"]
+    with pytest.raises(ValueError):
+        servable_from_state(state, "ft", data=None)
+
+
+def test_servable_save_load_roundtrip(tmp_path, artifacts):
+    for mode in MODES:
+        art, _ = artifacts[mode]
+        d = str(tmp_path / mode)
+        save_servable(art, d)
+        art2 = load_servable(d)
+        assert art2.meta["mode"] == art.meta["mode"]
+        np.testing.assert_array_equal(
+            np.asarray(art.share_mask), np.asarray(art2.share_mask)
+        )
+        for a, b in zip(jax.tree.leaves(art.global_params),
+                        jax.tree.leaves(art2.global_params)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert (art.local_params is None) == (art2.local_params is None)
+        if art.local_params is not None:
+            for a, b in zip(jax.tree.leaves(art.local_params),
+                            jax.tree.leaves(art2.local_params)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# batched personalized inference — per-lane bit-identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("batch", [1, 5])
+def test_batched_forward_bit_identical_per_lane(ds, artifacts, mode, batch):
+    art, _ = artifacts[mode]
+    engine = PersonalizedEngine(art)
+    rng = np.random.default_rng(hash(mode) % 2**31)
+    ids = rng.integers(0, ds.n_clients, size=batch).astype(np.int32)
+    x = np.asarray(ds.x_test[ids, 0], np.float32)
+    out = np.asarray(engine.forward(ids, x))
+    for k in range(batch):
+        ref = np.asarray(_reference_forward(art, int(ids[k]), x[k]))
+        np.testing.assert_array_equal(out[k], ref)
+
+
+def test_mixed_mode_batch_bit_identical(ds, artifacts):
+    """One batch whose lanes land in different EFFECTIVE modes: FT rows are
+    all-True (took the global) or all-False (kept local) per client — serve
+    a batch containing both kinds plus repeats, each lane must match its own
+    client's composed model exactly."""
+    art, _ = artifacts["ft"]
+    rows = np.asarray(art.share_mask)
+    kept = [i for i in range(len(rows)) if not rows[i].any()]
+    took = [i for i in range(len(rows)) if rows[i].all()]
+    assert kept and took, "FT run produced only one kind of pick"
+    ids = np.asarray([kept[0], took[0], kept[-1], kept[0]], np.int32)
+    engine = PersonalizedEngine(art)
+    x = np.asarray(ds.x_test[ids, 1], np.float32)
+    out = np.asarray(engine.forward(ids, x))
+    for k in range(len(ids)):
+        ref = np.asarray(_reference_forward(art, int(ids[k]), x[k]))
+        np.testing.assert_array_equal(out[k], ref)
+    # the two 'kept' lanes of the same client on the same row data agree
+    np.testing.assert_array_equal(out[0], out[3])
+
+
+def test_engine_forward_unbatched_matches_reference(ds, artifacts):
+    art, _ = artifacts["pms"]
+    engine = PersonalizedEngine(art)
+    x = np.asarray(ds.x_test[3, 2], np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(engine.forward_unbatched(3, x)),
+        np.asarray(_reference_forward(art, 3, x)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+
+def _classify_requests(ds, n, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, ds.n_clients, size=n)
+    return [
+        ServeRequest(rid=i, client_id=int(c),
+                     inputs=np.asarray(ds.x_test[int(c), i % ds.x_test.shape[1]]))
+        for i, c in enumerate(ids)
+    ]
+
+
+def test_batcher_serves_every_request_once(ds, artifacts):
+    art, _ = artifacts["pms"]
+    engine = PersonalizedEngine(art)
+    reqs = _classify_requests(ds, 11)
+    results = ContinuousBatcher(ClassifyProgram(engine, 4), 4).run(reqs)
+    assert sorted(r.rid for r in results) == list(range(11))
+    for res in results:
+        ref = np.asarray(_reference_forward(art, res.client_id, reqs[res.rid].inputs))
+        np.testing.assert_array_equal(np.asarray(res.output), ref)
+
+
+def test_batcher_latency_ordering(ds, artifacts):
+    art, _ = artifacts["none"]
+    engine = PersonalizedEngine(art)
+    results = ContinuousBatcher(ClassifyProgram(engine, 2), 2).run(
+        _classify_requests(ds, 7)
+    )
+    for r in results:
+        assert 0.0 <= r.enqueue_s <= r.start_s <= r.finish_s
+    stats = latency_stats(results)
+    assert stats["n_requests"] == 7 and stats["qps"] > 0
+    assert stats["latency_p99_ms"] >= stats["latency_p50_ms"] > 0
+
+
+def test_latency_stats_empty():
+    assert latency_stats([]) == {"n_requests": 0, "qps": 0.0}
+
+
+class _FakeDecodeProgram:
+    """Deterministic LaneProgram: lane finishes after its request's steps."""
+
+    def __init__(self, b):
+        self.b = b
+        self.left = [0] * b
+        self.started = []
+
+    def start(self, lane, req):
+        self.left[lane] = req.steps
+        self.started.append(req.rid)
+
+    def step(self, occupied):
+        done = np.zeros(self.b, bool)
+        outs = [None] * self.b
+        for i in range(self.b):
+            if occupied[i]:
+                self.left[i] -= 1
+                if self.left[i] == 0:
+                    done[i] = True
+                    outs[i] = "done"
+        return done, outs
+
+
+def test_batcher_backfills_retired_lanes_immediately():
+    # lane with steps=1 retires first and its lane must be re-used while
+    # the steps=5 request is still mid-flight
+    prog = _FakeDecodeProgram(2)
+    reqs = [ServeRequest(0, 0, None, steps=5), ServeRequest(1, 1, None, steps=1),
+            ServeRequest(2, 2, None, steps=1), ServeRequest(3, 3, None, steps=1)]
+    results = ContinuousBatcher(prog, 2).run(reqs)
+    assert sorted(r.rid for r in results) == [0, 1, 2, 3]
+    # rid 0 (5 steps) finishes LAST even though it started first
+    assert results[-1].rid == 0
+
+
+# ---------------------------------------------------------------------------
+# decode driver + program (token accounting)
+# ---------------------------------------------------------------------------
+
+
+def _toy_lm(vocab=11, eos=7):
+    """Deterministic 'model': prefill/decode emit last_token + 1 (mod vocab).
+    A prompt ending at eos-1 hits EOS on the first generated token."""
+
+    def prefill(params, batch):
+        tok = batch["tokens"]
+        cache = {"pos": jnp.asarray(tok.shape[1], jnp.int32)}
+        logits = jax.nn.one_hot((tok[:, -1] + 1) % vocab, vocab) * 10.0
+        return logits, cache
+
+    def decode(params, cache, tok):
+        cache = {"pos": cache["pos"] + 1}
+        logits = jax.nn.one_hot((tok[:, 0] + 1) % vocab, vocab) * 10.0
+        return logits, cache
+
+    return prefill, decode
+
+
+def test_greedy_decode_per_lane_accounting():
+    prefill, decode = _toy_lm(eos=7)
+    # lane 0 reaches eos=7 after 2 tokens (5->6->7); lane 1 never hits eos
+    batch = {"tokens": jnp.asarray([[1, 5], [1, 0]], jnp.int32)}
+    seqs, n_gen = greedy_decode(prefill, decode, None, batch, 6, eos_id=7)
+    assert seqs[0] == [6, 7]               # stops AT eos, counted once
+    assert n_gen[0] == 2
+    assert len(seqs[1]) == 6 and n_gen[1] == 6
+    # sum is per-lane: 2 + 6, NOT 2 * 6 (the old wave loop over-counted
+    # finished lanes every iteration)
+    assert int(n_gen.sum()) == 8
+
+
+def test_greedy_decode_no_eos_runs_full_budget():
+    prefill, decode = _toy_lm()
+    batch = {"tokens": jnp.asarray([[1, 1]], jnp.int32)}
+    seqs, n_gen = greedy_decode(prefill, decode, None, batch, 4, eos_id=None)
+    assert n_gen.tolist() == [4]
+
+
+def test_decode_program_counts_tokens_once():
+    prefill, decode = _toy_lm(eos=7)
+    prog = DecodeProgram(prefill, decode, None, batch_size=2, prompt_len=2, eos_id=7)
+    # rid1 hits EOS fast (prompt ends at 5 -> 6, 7), others never do
+    reqs = [ServeRequest(0, 0, [1, 0], steps=5), ServeRequest(1, 1, [1, 5], steps=5),
+            ServeRequest(2, 2, [2, 0], steps=3)]
+    results = ContinuousBatcher(prog, 2).run(reqs)
+    by_rid = {r.rid: r for r in results}
+    assert by_rid[1].output == [6, 7] and by_rid[1].steps == 2
+    assert by_rid[0].steps == 5 and by_rid[2].steps == 3
+    # every generated token counted exactly once, despite the mid-flight
+    # backfill re-prefilling rid0's survivor lane
+    assert prog.tokens_out == sum(r.steps for r in results) == 10
+    assert prog.prefill_calls >= 2       # initial + at least one backfill
+
+
+def test_decode_program_survivor_context_is_exact():
+    # after rid1 retires and rid2 backfills, rid0's lane re-prefills on the
+    # tail of prompt+generated — its sequence must be the same arithmetic
+    # progression an uninterrupted decode would produce
+    prefill, decode = _toy_lm(vocab=101, eos=99)
+    prog = DecodeProgram(prefill, decode, None, batch_size=2, prompt_len=2, eos_id=99)
+    reqs = [ServeRequest(0, 0, [10, 20], steps=6), ServeRequest(1, 1, [1, 97], steps=6),
+            ServeRequest(2, 2, [50, 60], steps=2)]
+    results = ContinuousBatcher(prog, 2).run(reqs)
+    by_rid = {r.rid: r for r in results}
+    assert by_rid[0].output == [21, 22, 23, 24, 25, 26]
+    assert by_rid[1].output == [98, 99]
+    assert by_rid[2].output == [61, 62]
+
+
+def test_token_only_prefill_flags_archs():
+    from repro.configs import get_config
+    from repro.serve import token_only_prefill
+
+    assert token_only_prefill(get_config("chatglm3-6b").reduced())
+    assert not token_only_prefill(get_config("whisper-tiny").reduced())
+
+
+# ---------------------------------------------------------------------------
+# serve records
+# ---------------------------------------------------------------------------
+
+
+def test_serve_recorder_artifacts(tmp_path, ds, artifacts):
+    from repro.obs.trace import validate_trace
+
+    art, _ = artifacts["ft"]
+    engine = PersonalizedEngine(art)
+    rec = ServeRecorder(str(tmp_path), trace=True)
+    rec.open_session(artifact_meta=art.meta, engine="classify", batch_size=3)
+    results = ContinuousBatcher(ClassifyProgram(engine, 3), 3, recorder=rec).run(
+        _classify_requests(ds, 8)
+    )
+    rec.close(latency_stats(results))
+
+    manifest = json.load(open(tmp_path / "manifest.json"))
+    assert manifest["kind"] == "serve" and manifest["requests_recorded"] == 8
+    assert manifest["artifact"]["mode"] == "ft"
+    assert manifest["summary"]["n_requests"] == 8
+    rows = [json.loads(l) for l in open(tmp_path / "requests.jsonl")]
+    assert sorted(r["rid"] for r in rows) == list(range(8))
+    for r in rows:
+        assert r["finish_s"] >= r["start_s"] >= r["enqueue_s"] >= 0
+    validate_trace(json.load(open(tmp_path / "trace.json")))
+
+
+def test_serve_recorder_is_pure_observation(ds, artifacts, tmp_path):
+    # identical outputs with and without a recorder attached
+    art, _ = artifacts["pms"]
+    engine = PersonalizedEngine(art)
+    reqs = _classify_requests(ds, 6)
+    bare = ContinuousBatcher(ClassifyProgram(engine, 2), 2).run(
+        [ServeRequest(r.rid, r.client_id, r.inputs) for r in reqs]
+    )
+    rec = ServeRecorder(str(tmp_path / "rec"))
+    rec.open_session(artifact_meta=art.meta, engine="classify", batch_size=2)
+    recorded = ContinuousBatcher(ClassifyProgram(engine, 2), 2, recorder=rec).run(
+        [ServeRequest(r.rid, r.client_id, r.inputs) for r in reqs]
+    )
+    rec.close()
+    for a, b in zip(sorted(bare, key=lambda r: r.rid),
+                    sorted(recorded, key=lambda r: r.rid)):
+        np.testing.assert_array_equal(np.asarray(a.output), np.asarray(b.output))

@@ -108,3 +108,60 @@ def test_checkpoint_model_params(tmp_path):
     save_pytree(params, str(tmp_path), "model")
     loaded = load_pytree(params, str(tmp_path), "model")
     assert jax.tree_util.tree_structure(params) == jax.tree_util.tree_structure(loaded)
+
+
+def test_checkpoint_roundstate_roundtrip(tmp_path):
+    """The full training carry — global params, (C, ...) per-client local
+    slabs, EF residuals, selection/sharing lanes, rng key — survives a
+    save/load cycle exactly (what a resume or a servable export builds on)."""
+    from repro.fl.api import RoundState
+
+    c = 7
+    g = [
+        {"w": jax.random.normal(jax.random.PRNGKey(0), (5, 4)),
+         "b": jnp.zeros((4,))},
+        {"w": jax.random.normal(jax.random.PRNGKey(1), (4, 3)),
+         "b": jnp.ones((3,))},
+    ]
+    per_client = lambda r: jax.tree.map(
+        lambda gl: jax.random.normal(jax.random.PRNGKey(r), (c,) + gl.shape, gl.dtype), g
+    )
+    state = RoundState(
+        global_params=g,
+        local_params=per_client(2),
+        accuracy=jnp.linspace(0.0, 1.0, c),
+        select=jnp.asarray([True, False, True, True, False, True, False]),
+        pms=jnp.asarray([2, 2, 1, 2, 1, 1, 2], jnp.int32),
+        rng=jax.random.PRNGKey(42),
+        residual=per_client(3),
+        participation=jnp.arange(c, dtype=jnp.int32),
+        loss=jnp.linspace(1.0, 0.1, c).astype(jnp.float32),
+        update_norm=jnp.linspace(0.5, 0.2, c).astype(jnp.float32),
+    )
+    save_pytree(state, str(tmp_path), "round")
+    loaded = load_pytree(state, str(tmp_path), "round")
+    assert jax.tree_util.tree_structure(state) == jax.tree_util.tree_structure(loaded)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(loaded)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_load_auto_templateless(tmp_path):
+    """load_pytree_auto rebuilds nested dict/list trees from the manifest
+    alone — no live template object (how a servable artifact loads)."""
+    from repro.checkpoint import load_pytree_auto
+
+    tree = {
+        "global": [{"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+                   {"w": jnp.ones((3, 2), jnp.bfloat16)}],
+        "share": jnp.asarray([[True, False], [False, True]]),
+    }
+    save_pytree(tree, str(tmp_path), "t")
+    loaded = load_pytree_auto(str(tmp_path), "t")
+    assert isinstance(loaded["global"], list) and len(loaded["global"]) == 2
+    for path in [("global", 0, "w"), ("global", 1, "w"), ("share",)]:
+        a, b = tree, loaded
+        for k in path:
+            a, b = a[k], b[k]
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
