@@ -14,10 +14,16 @@
 # the personalized serving path — artifact export, cohort-batched engine,
 # continuous batcher — with per-lane bit-identity audits and a throughput
 # floor, and `validate-bench-serve` re-checks its BENCH_serve.json envelope.
+# The shard smoke (benchmarks/shard_bench.py, also in bench-smoke) spawns
+# forced-host-device subprocesses to time the cohort-sharded round step at
+# D in {1, 2} with its CPU no-regression/serialization gate, and
+# `validate-bench-shard` re-checks the BENCH_shard.json envelope (psum
+# bytes present in sharded cells, absent from the unsharded baseline).
+# `make test-all` also covers the `multidevice` tests tier-1 skips.
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all bench-smoke bench validate-trace validate-bench-serve ci
+.PHONY: test test-all bench-smoke bench validate-trace validate-bench-serve validate-bench-shard ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -38,4 +44,7 @@ validate-trace:
 validate-bench-serve:
 	$(PY) -c "import json; e = json.load(open('BENCH_serve.json')); assert e['schema_version'] >= 2 and e['bench'] == 'serve' and e['run_id'], 'bad envelope'; s = e['summary']; assert s['modes'].keys() == {'none', 'ft', 'pms'}; assert all(b['qps'] > 0 and b['latency_p99_ms'] >= b['latency_p50_ms'] and b['identity_audited'] > 0 for m in s['modes'].values() for b in m['batches'].values()); assert min(s['personalized_qps_ratio'].values()) >= s['min_personalized_ratio']; print('BENCH_serve.json ok:', e['run_id'])"
 
-ci: test-all bench-smoke validate-trace validate-bench-serve
+validate-bench-shard:
+	$(PY) -c "import json; e = json.load(open('BENCH_shard.json')); assert e['schema_version'] >= 2 and e['bench'] == 'shard' and e['run_id'], 'bad envelope'; s = e['summary']; cells = s['cells']; assert cells and s['gates'], 'no cells/gates'; assert all(c['psum_bytes_per_round'] > 0 for c in cells if c['sharded']), 'sharded cell without psum traffic'; assert all(c['psum_bytes_per_round'] == 0 for c in cells if not c['sharded']), 'unsharded baseline emits psum'; assert all(c['step_ms'] > 0 and c['lanes_per_device'] * c['device_count'] == c['K'] for c in cells), 'bad cell'; print('BENCH_shard.json ok:', e['run_id'])"
+
+ci: test-all bench-smoke validate-trace validate-bench-serve validate-bench-shard

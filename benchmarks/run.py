@@ -37,6 +37,7 @@ def main() -> None:
         selection_bench,
         selection_frequency,
         serve_bench,
+        shard_bench,
         table3_variants,
         table4_literature,
     )
@@ -53,6 +54,7 @@ def main() -> None:
         ("async_bench (sync vs async scheduler grid)", async_bench.run),
         ("scale_bench (cohort O(K) vs dense O(C) rounds)", scale_bench.run),
         ("loop_bench (round-fused executor vs per-round dispatch)", loop_bench.run),
+        ("shard_bench (cohort-sharded step, D-device strong scaling)", shard_bench.run),
         ("serve_bench (personalized serving QPS/p99 x batch x mode)", serve_bench.run),
         ("obs_smoke (recorded + traced run, artifacts validated)", obs_smoke.run),
         ("roofline (deliverable g)", roofline.run),
@@ -62,7 +64,8 @@ def main() -> None:
             s for s in suites
             if s[0].split(" ")[0]
             in ("kernel_bench", "codec_bench", "selection_bench", "async_bench",
-                "scale_bench", "loop_bench", "serve_bench", "obs_smoke")
+                "scale_bench", "loop_bench", "shard_bench", "serve_bench",
+                "obs_smoke")
         ]
     t00 = time.time()
     for name, fn in suites:

@@ -21,6 +21,20 @@ gathers/trains (cohort execution: compute is O(K), not O(C)).
 
 import argparse
 import dataclasses
+import os
+import sys
+
+# --devices N (dev only) forces N host devices for the cohort-sharded run.
+# XLA locks the device count at first backend init, so the flag has to land
+# in the environment before anything below touches jax — peek at argv here,
+# let argparse own the real parsing/help later.
+if "--devices" in sys.argv:
+    _n = sys.argv[sys.argv.index("--devices") + 1 :][:1]
+    if _n and _n[0].isdigit() and int(_n[0]) > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={int(_n[0])}"
+        ).strip()
 
 import numpy as np
 
@@ -60,6 +74,23 @@ round-fused execution (--scan-chunk):
   are the sweet spot:
 
     PYTHONPATH=src python examples/quickstart.py --scan-chunk 10
+
+sharding the cohort (--devices):
+  The gathered (K, ...) cohort lanes are a ready-made data-parallel axis:
+  with --devices D the adaptive run's compute phases run under shard_map
+  over a 1-D 'cohort' device mesh (repro.fl.shard), K/D lanes per device,
+  with the FedAvg reduction as shard-local partial sums + one lax.psum.
+  Global params and the (C, ...) server state stay replicated, the fused
+  scan/donation path is unchanged, and the trajectory matches the
+  unsharded run (bit-identical at D=1, <=1-ulp documented at D>1):
+
+    PYTHONPATH=src python examples/quickstart.py --n-clients 2000 \\
+        --cohort-size 48 --devices 2
+
+  K must divide D. On CPU, --devices forces D *host* devices that
+  timeshare your cores (dev-only; real speedups need real devices — see
+  benchmarks/shard_bench.py + BENCH_shard.json for the D-scaling sweep
+  and per-device psum traffic).
 
 composing a custom round:
   A federated round is a pipeline of swappable phases (repro.fl.phases):
@@ -161,6 +192,10 @@ def main():
     ap.add_argument("--scan-chunk", type=int, default=1,
                     help="rounds fused per on-device scan chunk (sync loop; "
                          "1 = per-round host sync, 0 = whole run in one chunk)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="shard the adaptive run's cohort lanes over this many "
+                         "devices (forces host devices on CPU, dev only; 0 = "
+                         "unsharded; K must divide it — see epilog)")
     ap.add_argument("--record-dir", default=None,
                     help="write a structured run record (manifest.json + "
                          "metrics.jsonl + run.log) for the adaptive run here")
@@ -214,7 +249,8 @@ def main():
         scheduler=SchedulerConfig(mode=args.mode, buffer_k=args.buffer_k,
                                   heterogeneity=args.heterogeneity),
         execution=ExecutionConfig(cohort_size=args.cohort_size,
-                                  scan_chunk=args.scan_chunk),
+                                  scan_chunk=args.scan_chunk,
+                                  cohort_devices=args.devices if args.devices > 1 else 0),
     )
     recorder = None
     if args.record_dir:

@@ -338,12 +338,28 @@ class ExecutionConfig:
     dispatch by 1 ulp of float32 — see ``api.build_chunk_step``) — trade
     host overhead against compile time (the chunk body is unrolled, so
     compile cost grows with ``scan_chunk``).
+
+    ``cohort_devices`` shards the cohort lanes over a device mesh
+    (repro.fl.shard): the round step's compute phases run under
+    ``shard_map`` with the (K, ...) gathered lanes partitioned K/D per
+    device on a 1-D ``cohort`` mesh, aggregation finishing in one
+    ``lax.psum``. ``0`` (default) keeps the single-device step;
+    ``-1`` takes every visible device; N >= 1 shards over the first N.
+    K must be a multiple of the device count. Composes with
+    ``scan_chunk`` — the sharded step is still a
+    ``(RoundState, t) -> (RoundState, out)`` function, so the fused chunk
+    scan and donation work unchanged. Bit-identical to the unsharded step
+    at 1 device; at D > 1 only the aggregation reduction tree changes
+    (D partial sums + psum), which holds golden parity to 1 ulp of
+    float32 — see repro.fl.shard.
     """
 
     cohort_size: int = 0        # 0 -> full population (dense-equivalent)
     eval_every: int = 1         # evaluate when t % eval_every == 0
     scan_chunk: int = 1         # rounds fused per on-device scan chunk;
                                 # 1 -> per-round host sync, 0 -> whole run
+    cohort_devices: int = 0     # 0 -> unsharded; -1 -> all visible devices;
+                                # N -> shard_map cohort lanes over N devices
 
     def __post_init__(self):
         if self.cohort_size < 0:
@@ -352,6 +368,10 @@ class ExecutionConfig:
             raise ValueError(f"eval_every must be >= 1, got {self.eval_every!r}")
         if self.scan_chunk < 0:
             raise ValueError(f"scan_chunk must be >= 0, got {self.scan_chunk!r}")
+        if self.cohort_devices < -1:
+            raise ValueError(
+                f"cohort_devices must be >= -1, got {self.cohort_devices!r}"
+            )
 
     def resolved_cohort(self, n_clients: int) -> int:
         """Static cohort lane count K for a population of ``n_clients``."""

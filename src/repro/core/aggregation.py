@@ -16,33 +16,58 @@ import jax
 import jax.numpy as jnp
 
 
-def _weighted_mean(stacked: jnp.ndarray, weights: jnp.ndarray, fallback: jnp.ndarray | None = None) -> jnp.ndarray:
+def _weighted_mean(
+    stacked: jnp.ndarray,
+    weights: jnp.ndarray,
+    fallback: jnp.ndarray | None = None,
+    axis_name: str | None = None,
+) -> jnp.ndarray:
     """Weighted mean over the leading client axis.
 
     If all weights are zero (no client contributed — e.g. a layer nobody
     shared this round), returns ``fallback`` (the previous global value) or
     zeros.
+
+    ``axis_name`` extends the reduction across a shard_map mesh axis: the
+    local lanes reduce to a partial numerator/denominator in lane order,
+    then ONE ``lax.psum`` per term combines the shards in fixed axis order
+    (repro.fl.shard's cohort sharding). ``None`` (the default) keeps the
+    single-device expression untouched — bit-identity of the unsharded
+    path is golden-guarded.
     """
     w = weights.reshape((-1,) + (1,) * (stacked.ndim - 1)).astype(stacked.dtype)
     total = jnp.sum(weights).astype(stacked.dtype)
-    mean = jnp.sum(stacked * w, axis=0) / jnp.maximum(total, 1e-12)
+    num = jnp.sum(stacked * w, axis=0)
+    if axis_name is not None:
+        num = jax.lax.psum(num, axis_name)
+        total = jax.lax.psum(total, axis_name)
+    mean = num / jnp.maximum(total, 1e-12)
     if fallback is None:
         fallback = jnp.zeros_like(mean)
     return jnp.where(total > 0, mean, fallback)
 
 
-def fedavg_aggregate(client_params, select_mask: jnp.ndarray, n_samples: jnp.ndarray):
+def fedavg_aggregate(
+    client_params,
+    select_mask: jnp.ndarray,
+    n_samples: jnp.ndarray,
+    axis_name: str | None = None,
+):
     """Eq. (1): w <- sum_i (|d_i|/|D|) w_i over *selected* clients.
 
     Args:
       client_params: pytree, leaves (C, ...).
       select_mask: (C,) boolean selection mask.
       n_samples: (C,) |d_i|.
+      axis_name: mesh axis to psum shard-local partial sums over (the lanes
+        are then the local shard of a shard_mapped cohort); None = local.
 
     Returns the aggregated pytree with the client axis reduced.
     """
     weights = select_mask.astype(jnp.float32) * n_samples.astype(jnp.float32)
-    return jax.tree.map(lambda x: _weighted_mean(x, weights), client_params)
+    return jax.tree.map(
+        lambda x: _weighted_mean(x, weights, axis_name=axis_name), client_params
+    )
 
 
 def masked_partial_aggregate(
@@ -51,6 +76,7 @@ def masked_partial_aggregate(
     select_mask: jnp.ndarray,
     n_samples: jnp.ndarray,
     share_mask: jnp.ndarray,
+    axis_name: str | None = None,
 ):
     """ACSP-FL aggregation: per-layer weighted average of the *shared* pieces.
 
@@ -65,6 +91,9 @@ def masked_partial_aggregate(
       n_samples: (C,) |d_i|.
       share_mask: (C, L) or (L,) bool — which layers each client shared
         (from repro.core.layersharing.layer_share_mask).
+      axis_name: mesh axis to psum shard-local partial sums over; the
+        zero-total fallback then tests the psum'd (global) total, so every
+        shard agrees on whether layer j keeps the previous global value.
 
     Returns the new layered global model (client axis reduced).
     """
@@ -78,7 +107,9 @@ def masked_partial_aggregate(
         w_j = base * share_mask[:, j].astype(jnp.float32)
         out.append(
             jax.tree.map(
-                lambda x, g, w_j=w_j: _weighted_mean(x, w_j, fallback=g),
+                lambda x, g, w_j=w_j: _weighted_mean(
+                    x, w_j, fallback=g, axis_name=axis_name
+                ),
                 client_params[j],
                 prev_global[j],
             )
@@ -91,6 +122,7 @@ def staleness_weighted_merge(
     prev_global,
     weights: jnp.ndarray,
     share_mask: jnp.ndarray | None = None,
+    axis_name: str | None = None,
 ):
     """FedBuff-style buffered merge: ``w <- w + sum_i v_i d_i / sum_i v_i``.
 
@@ -107,6 +139,8 @@ def staleness_weighted_merge(
       weights: (C,) float — combined merge weight per client.
       share_mask: optional (C, L) bool — which layers each client shared;
         None means every client contributes to every layer.
+      axis_name: mesh axis to psum shard-local partial sums over; None =
+        local (single-device) reduction, the default.
 
     Returns the new layered global model (client axis reduced).
     """
@@ -118,7 +152,7 @@ def staleness_weighted_merge(
             w_j = w_j * share_mask[:, j].astype(jnp.float32)
         out.append(
             jax.tree.map(
-                lambda d, g, w_j=w_j: g + _weighted_mean(d, w_j),
+                lambda d, g, w_j=w_j: g + _weighted_mean(d, w_j, axis_name=axis_name),
                 client_deltas[j],
                 prev_global[j],
             )

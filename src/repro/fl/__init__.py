@@ -18,6 +18,7 @@ from repro.fl.api import (
 )
 from repro.fl.engine import FLHistory, make_round_step, run_federated
 from repro.fl.sched import AsyncScheduler, SyncScheduler, make_scheduler
+from repro.fl.shard import build_sharded_round_step
 
 __all__ = [
     "FLConfig",
@@ -32,6 +33,7 @@ __all__ = [
     "pipeline_from_config",
     "build_round_step",
     "build_chunk_step",
+    "build_sharded_round_step",
     "run_federated",
     "make_round_step",
     "SyncScheduler",

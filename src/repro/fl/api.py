@@ -106,6 +106,7 @@ _FLAT_KEYS = {
     "cohort_size": ("execution", "cohort_size"),
     "eval_every": ("execution", "eval_every"),
     "scan_chunk": ("execution", "scan_chunk"),
+    "cohort_devices": ("execution", "cohort_devices"),
 }
 
 _GROUP_TYPES = {
@@ -247,6 +248,10 @@ class FLConfig:
     @property
     def scan_chunk(self) -> int:
         return self.execution.scan_chunk
+
+    @property
+    def cohort_devices(self) -> int:
+        return self.execution.cohort_devices
 
     def strategy_obj(self):
         return self.selection.strategy_obj()
@@ -392,8 +397,17 @@ def build_round_step(
     ascending client-id order so every masked-aggregation sum reduces its
     nonzero terms in the dense order, and phase order / rng-lane splits are
     unchanged (guarded by the committed golden trajectories).
+
+    ``execution.cohort_devices != 0`` delegates to
+    ``repro.fl.shard.build_sharded_round_step``: the same step with the
+    compute phases shard_mapped over a ``cohort`` device mesh (K/D lanes
+    per device, aggregation as shard-local partial sums + one psum).
     """
     execution = execution or ExecutionConfig()
+    if execution.cohort_devices != 0:
+        from repro.fl.shard import build_sharded_round_step
+
+        return build_sharded_round_step(env, pipeline, execution)
     cohort_k = execution.resolved_cohort(env.n_clients)
     stateful = pipeline.personalizer.stateful
 

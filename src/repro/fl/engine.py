@@ -113,7 +113,10 @@ def make_round_step(
     """Build the synchronous round step (un-jitted — wrap in ``jax.jit``
     or fuse with ``api.build_chunk_step``): the cfg's default pipeline (or
     a custom one) composed over the static data/config environment,
-    executing on ``cfg.execution.cohort_size`` gathered lanes."""
+    executing on ``cfg.execution.cohort_size`` gathered lanes. With
+    ``cfg.execution.cohort_devices != 0`` the returned step is the
+    cohort-sharded variant (repro.fl.shard): same signature, compute
+    phases shard_mapped K/D lanes per device over a ``cohort`` mesh."""
     pipeline = pipeline or pipeline_from_config(cfg)
     env = build_env(data, cfg.seed, loss_fn=loss_fn, acc_fn=acc_fn)
     return build_round_step(env, pipeline, cfg.execution)

@@ -538,6 +538,18 @@ class TransmitPhase:
 
 
 class Aggregator:
+    """Reduces the lane axis into the new global model.
+
+    All three implementations express the reduction as weighted partial
+    sums over their local lanes; setting ``axis_name`` (a shard_map mesh
+    axis — ``"cohort"`` under repro.fl.shard) finishes each sum with one
+    ``lax.psum`` over that axis, so the same phase aggregates a cohort
+    partitioned K/D per device. ``axis_name=None`` (default) is the
+    single-device reduction, bit-identical to the pre-sharding code.
+    """
+
+    axis_name = None  # subclasses declare the dataclass field (kept last)
+
     def aggregate(self, ctx: RoundContext, env: RoundEnv) -> RoundContext:
         raise NotImplementedError
 
@@ -546,9 +558,13 @@ class Aggregator:
 class FedAvgAggregator(Aggregator):
     """Plain Eq. 1 over selected clients, full model."""
 
+    axis_name: str | None = None
+
     def aggregate(self, ctx, env):
         return ctx._replace(
-            new_global=fedavg_aggregate(ctx.agg_src, ctx.select, env.n_samples)
+            new_global=fedavg_aggregate(
+                ctx.agg_src, ctx.select, env.n_samples, axis_name=self.axis_name
+            )
         )
 
 
@@ -557,10 +573,13 @@ class MaskedPartialAggregator(Aggregator):
     """ACSP-FL masked aggregation: only layers a client shares contribute;
     layers nobody shared keep the previous global value."""
 
+    axis_name: str | None = None
+
     def aggregate(self, ctx, env):
         return ctx._replace(
             new_global=masked_partial_aggregate(
-                ctx.agg_src, ctx.global_params, ctx.select, env.n_samples, ctx.share
+                ctx.agg_src, ctx.global_params, ctx.select, env.n_samples,
+                ctx.share, axis_name=self.axis_name,
             )
         )
 
@@ -617,6 +636,7 @@ class StalenessAggregator(Aggregator):
     staleness_fn: str = "polynomial"
     exponent: float = 0.5
     threshold: float = 4.0
+    axis_name: str | None = None
 
     def aggregate(self, ctx, env):
         if self.staleness_fn not in STALENESS_FNS:  # fail at trace time
@@ -646,7 +666,7 @@ class StalenessAggregator(Aggregator):
         )
         return ctx._replace(
             new_global=staleness_weighted_merge(
-                deltas, ctx.global_params, w, ctx.share
+                deltas, ctx.global_params, w, ctx.share, axis_name=self.axis_name
             ),
             # the per-lane discount factor alone (sample weighting excluded)
             # — the scheduler surfaces its landed mean to the run recorder

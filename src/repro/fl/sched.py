@@ -364,7 +364,10 @@ class SyncScheduler:
         delay = None if clock.uniform else clock.delay
         if recorder is not None:
             recorder.open_run(mode="sync", cfg=cfg, data=data, comm=comm,
-                              clock=clock, lanes=lanes)
+                              clock=clock, lanes=lanes,
+                              # sharded steps expose their cohort mesh —
+                              # run records distinguish D=1 from D=8
+                              mesh=getattr(round_step, "mesh", None))
         prof = recorder.profiler if recorder is not None else None
         emit = recorder.log if recorder is not None else print
         accs, sel_hist, tx_hist, pms_hist, times, wire_hist = [], [], [], [], [], []

@@ -22,8 +22,13 @@ _DTYPE_BYTES = {
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
 
 # e.g.  %all-reduce.5 = bf16[16,2048]{1,0} all-reduce(...)
+# Async pairs count once: the `-start` half carries the shapes (matched),
+# the `-done` half is bookkeeping (rejected — `-done` can't match
+# `(?:-start)?[\.\d]*\(`).
 _OP_RE = re.compile(
-    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+(" + "|".join(_COLLECTIVES) + r")[\.\d]*\("
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+("
+    + "|".join(_COLLECTIVES)
+    + r")(-start)?[\.\d]*\("
 )
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
@@ -37,15 +42,21 @@ def _shape_bytes(dtype: str, dims: str) -> int:
 
 
 def collective_bytes(hlo_text: str) -> dict:
-    """Returns {'total': bytes, per-op-kind: bytes, 'count': n_ops}."""
+    """Returns {'total': bytes, per-op-kind: bytes, 'count': n_ops}.
+
+    Async collectives (``all-reduce-start`` / ``all-gather-start`` / ...)
+    count once, under their sync kind name. A sync variadic collective's
+    tuple shape lists one result per operand (summed); a ``-start`` tuple is
+    the (operand, result[, scratch...]) async wrapper, so only its largest
+    shape — the destination buffer — is charged.
+    """
     out = defaultdict(int)
     count = 0
     for m in _OP_RE.finditer(hlo_text):
-        tuple_part, dtype, dims, kind = m.groups()
+        tuple_part, dtype, dims, kind, start = m.groups()
         if tuple_part is not None:
-            size = sum(
-                _shape_bytes(dt, dm) for dt, dm in _SHAPE_RE.findall(tuple_part)
-            )
+            shapes = [_shape_bytes(dt, dm) for dt, dm in _SHAPE_RE.findall(tuple_part)]
+            size = max(shapes, default=0) if start else sum(shapes)
         else:
             size = _shape_bytes(dtype, dims)
         out[kind] += size

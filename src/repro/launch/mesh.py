@@ -1,6 +1,8 @@
-"""Production mesh definition (TPU v5e pods; 256 chips/pod).
+"""Mesh definitions: the 16x16 production mesh (TPU v5e pods; 256
+chips/pod) and the 1-D dev-scale ``cohort`` mesh the sharded FL round step
+runs on (repro.fl.shard).
 
-A FUNCTION, not a module-level constant — importing this module never
+FUNCTIONS, not module-level constants — importing this module never
 touches jax device state (the dry-run sets XLA_FLAGS before first init).
 """
 
@@ -20,6 +22,31 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_cohort_mesh(n_devices: int | None = None):
+    """1-D dev-scale mesh for sharding the FL cohort axis (repro.fl.shard).
+
+    Axes:
+      cohort — data parallelism over the (K, ...) gathered client lanes;
+               global params and the (C, ...) server slabs stay replicated.
+
+    ``n_devices`` of None/0 takes every visible device; a positive count
+    takes a prefix (dev/test runs force host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` in a fresh
+    process — see tests/_subproc.py).
+    """
+    devices = jax.devices()
+    n = len(devices) if not n_devices else int(n_devices)
+    if n < 1:
+        raise ValueError(f"make_cohort_mesh: need >= 1 device, got {n_devices!r}")
+    if n > len(devices):
+        raise ValueError(
+            f"make_cohort_mesh: {n} devices requested but only "
+            f"{len(devices)} visible (force host devices in a subprocess "
+            f"via XLA_FLAGS=--xla_force_host_platform_device_count={n})"
+        )
+    return jax.make_mesh((n,), ("cohort",), devices=devices[:n])
 
 
 def data_axes(multi_pod: bool = False):

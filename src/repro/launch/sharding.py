@@ -119,6 +119,29 @@ def tree_shardings(tree, mesh: Mesh, dp_axes):
 
 
 # ---------------------------------------------------------------------------
+# cohort lanes (repro.fl.shard)
+# ---------------------------------------------------------------------------
+
+
+def lane_spec(shape: tuple[int, ...], mesh: Mesh, axis: str = "cohort") -> P:
+    """PartitionSpec for one lane-stacked leaf: the leading (lane) axis goes
+    to ``axis`` when divisible, else the leaf falls back to full replication
+    (the same divisibility rule as param_spec/batch_spec)."""
+    if len(shape) == 0:
+        return P()
+    n = _axis_size(mesh, axis)
+    if shape[0] % n == 0 and shape[0] >= n:
+        return P(*([axis] + [None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def tree_lane_pspecs(tree, mesh: Mesh, axis: str = "cohort") -> Any:
+    """lane_spec over every leaf of a lane-stacked pytree (works on
+    eval_shape outputs — only ``.shape`` is read)."""
+    return jax.tree.map(lambda l: lane_spec(l.shape, mesh, axis), tree)
+
+
+# ---------------------------------------------------------------------------
 # batches & caches
 # ---------------------------------------------------------------------------
 

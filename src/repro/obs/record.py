@@ -192,11 +192,13 @@ class RunRecorder:
 
     # -- lifecycle ---------------------------------------------------------
     def open_run(self, *, mode: str, cfg, data, comm, clock,
-                 lanes: int | None = None, buffer_k: int | None = None):
+                 lanes: int | None = None, buffer_k: int | None = None,
+                 mesh=None):
         """Called by the scheduler before its first event. ``clock`` is the
         scheduler's ``ClientClock`` (span components come from it), ``comm``
         its ``CommModel``, ``lanes`` the cohort size K (sync) or slot count
-        M (async)."""
+        M (async), ``mesh`` the cohort device mesh when the round step is
+        sharded (repro.fl.shard) — None for single-device execution."""
         if self._metrics is not None:
             raise ValueError(f"recorder already opened for a {self._mode!r} run")
         os.makedirs(self.out_dir, exist_ok=True)
@@ -212,6 +214,13 @@ class RunRecorder:
             "population": int(data.n_clients),
             "lanes": None if lanes is None else int(lanes),
             "buffer_k": None if buffer_k is None else int(buffer_k),
+            # cohort mesh of a sharded round step: axis names + sizes, so
+            # run records distinguish D=1 from D=8 (None = unsharded)
+            "mesh": None if mesh is None else {
+                "axis_names": [str(a) for a in mesh.axis_names],
+                "shape": [int(mesh.shape[a]) for a in mesh.axis_names],
+                "devices": int(mesh.size),
+            },
             "seed": int(cfg.seed),
             "config": snapshot,
             "config_hash": chash,
