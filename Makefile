@@ -19,11 +19,17 @@
 # D in {1, 2} with its CPU no-regression/serialization gate, and
 # `validate-bench-shard` re-checks the BENCH_shard.json envelope (psum
 # bytes present in sharded cells, absent from the unsharded baseline).
+# The population smoke (benchmarks/pop_bench.py, also in bench-smoke) runs
+# the host-resident population plane (repro.fl.population) over a C-sweep
+# at fixed cohort K with its sublinear-step/no-C-slab/watermark gates, and
+# `validate-bench-pop` re-checks the BENCH_pop.json envelope (step-time
+# sublinearity held, zero population-sized device slabs, both aggregation
+# hops accounted in the edge-topology row).
 # `make test-all` also covers the `multidevice` tests tier-1 skips.
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all bench-smoke bench validate-trace validate-bench-serve validate-bench-shard ci
+.PHONY: test test-all bench-smoke bench validate-trace validate-bench-serve validate-bench-shard validate-bench-pop ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -47,4 +53,7 @@ validate-bench-serve:
 validate-bench-shard:
 	$(PY) -c "import json; e = json.load(open('BENCH_shard.json')); assert e['schema_version'] >= 2 and e['bench'] == 'shard' and e['run_id'], 'bad envelope'; s = e['summary']; cells = s['cells']; assert cells and s['gates'], 'no cells/gates'; assert all(c['psum_bytes_per_round'] > 0 for c in cells if c['sharded']), 'sharded cell without psum traffic'; assert all(c['psum_bytes_per_round'] == 0 for c in cells if not c['sharded']), 'unsharded baseline emits psum'; assert all(c['step_ms'] > 0 and c['lanes_per_device'] * c['device_count'] == c['K'] for c in cells), 'bad cell'; print('BENCH_shard.json ok:', e['run_id'])"
 
-ci: test-all bench-smoke validate-trace validate-bench-serve validate-bench-shard
+validate-bench-pop:
+	$(PY) -c "import json; e = json.load(open('BENCH_pop.json')); assert e['schema_version'] >= 2 and e['bench'] == 'pop' and e['run_id'], 'bad envelope'; s = e['summary']; g = s['gates']; assert s['rows'] and g['sublinear_ok'] and g['c_slab_ok'] and g['watermark_ok'], 'pop gates not held'; assert all(r['staged_kb'] > 0 and r['step_ms'] > 0 for r in s['rows']), 'bad row'; ed = s['edge']; assert ed['edge_groups'] >= 2 and ed['hop1_client_edge_mb'] > 0 and ed['hop2_edge_server_mb'] > 0, 'edge hops unaccounted'; print('BENCH_pop.json ok:', e['run_id'])"
+
+ci: test-all bench-smoke validate-trace validate-bench-serve validate-bench-shard validate-bench-pop

@@ -1,0 +1,209 @@
+"""Population bench — host-resident population plane at C up to 10^5+.
+
+The million-client tier's tentpole claim (repro.fl.population): with the
+(C, ...) per-client slabs host-resident in a ``PopulationStore`` and only
+the (K, ...) cohort staged onto device per round, step time at fixed K
+should be *sublinear* in C (only the O(C)-cheap host selection lanes and
+the 1-D population-signal jit grow with C, never the model/data slabs),
+and the device live-array watermark should stay O(K) — no (C, model) or
+(C, data) slab ever becomes device-resident.
+
+For each population size C this bench runs the synchronous host-plane
+loop (``run_host_sync``) at fixed cohort K on the lazy sharded generator
+(``make_sharded_population`` — O(K) host data memory too) and records:
+
+  step_ms        : mean steady-state round wall-clock (round 0 excluded —
+                   it pays jit compiles + the streamed t=0 evaluation)
+  host_gather_ms : mean PopulationStore.gather + data-shard staging time
+  staged_kb      : bytes staged host->device per round (O(K), C-invariant)
+  watermark_mb   : total live device bytes after the run (gc'd) via
+                   ``jax.live_arrays()``
+  c_slab_mb      : live device bytes in arrays of ndim >= 2 with leading
+                   dim C — the forbidden population-sized slabs; must be 0
+
+plus one two-level topology run (``edge_groups=E``) accounting bytes over
+both hops: client->edge uplink (tx_wire_bytes) and edge->server partials
+(FLHistory.tx_edge_bytes).
+
+Acceptance gates (exit 1 on failure):
+  * step-time sublinearity: step_ms(C_hi)/step_ms(C_lo) < 0.5 * C_hi/C_lo
+  * zero C-sized device slabs at the largest C (c_slab_mb == 0)
+  * post-run device watermark under WATERMARK_CAP_MB
+
+Emits experiments/bench/pop_bench.csv and BENCH_pop.json (repo root,
+committed). Smoke mode (REPRO_BENCH_SMOKE=1, via ``benchmarks.run
+--smoke``) sweeps a quick C grid; run standalone with
+``PYTHONPATH=src python -m benchmarks.pop_bench [--smoke]``.
+"""
+
+from __future__ import annotations
+
+import gc
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import write_bench_json, write_csv
+from repro.data.synthetic import make_sharded_population
+from repro.fl import FLConfig
+from repro.fl.population import run_host_sync
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+SUBLINEAR_FACTOR = 0.5     # step ratio must beat this fraction of the C ratio
+WATERMARK_CAP_MB = 64.0    # post-run live device bytes (jit caches + consts)
+
+
+def _make_population(c: int):
+    return make_sharded_population(
+        n_clients=c, n_classes=5, n_features=20,
+        samples_per_client_range=(24, 32), dirichlet_alpha=50.0, seed=0,
+    )
+
+
+def _live_device_mb(c: int) -> tuple[float, float]:
+    """(total live MB, live MB in ndim>=2 arrays with leading dim C)."""
+    gc.collect()  # drop per-round transfer buffers whose refs just died
+    total = c_slab = 0
+    for a in jax.live_arrays():
+        if a.is_deleted():
+            continue
+        nbytes = a.size * a.dtype.itemsize
+        total += nbytes
+        if a.ndim >= 2 and a.shape[0] == c:
+            c_slab += nbytes
+    return total / 1e6, c_slab / 1e6
+
+
+def _bench_case(c: int, k: int, rounds: int, eval_chunk: int) -> dict:
+    """One C point: host-plane sync run at fixed K on the lazy population."""
+    ds = _make_population(c)
+    cfg = FLConfig(
+        strategy="fedavg", personalization="none", fraction=k / c,
+        epochs=1, rounds=rounds, seed=0,
+        cohort_size=k, host_population=1,
+        eval_every=rounds,        # one streamed eval at t=0, none in the
+        eval_chunk=eval_chunk,    # timed steady-state rounds
+    )
+    t0 = time.perf_counter()
+    stats: dict = {}
+    h = run_host_sync(ds, cfg, stats=stats)
+    wall_s = time.perf_counter() - t0
+    watermark_mb, c_slab_mb = _live_device_mb(c)
+    assert h.accuracy_mean.shape == (rounds,)
+    return {
+        "C": c,
+        "K": k,
+        "rounds": rounds,
+        "eval_chunk": eval_chunk,
+        "step_ms": float(np.mean(stats["round_ms"][1:])),
+        "host_gather_ms": float(np.mean(stats["host_gather_ms"][1:])),
+        "staged_kb": float(np.mean(stats["staged_bytes"][1:])) / 1e3,
+        "watermark_mb": watermark_mb,
+        "c_slab_mb": c_slab_mb,
+        "wall_s": wall_s,
+        "final_acc": float(h.accuracy_mean[-1]),
+    }
+
+
+def _edge_case(c: int, k: int, rounds: int, n_edges: int) -> dict:
+    """Two-level topology accounting: same host-plane run with E edge
+    groups; records bytes over both hops of the aggregation tree."""
+    ds = _make_population(c)
+    cfg = FLConfig(
+        strategy="fedavg", personalization="none", fraction=k / c,
+        epochs=1, rounds=rounds, seed=0,
+        cohort_size=k, host_population=1,
+        eval_every=rounds, eval_chunk=4 * k,
+        edge_groups=n_edges,
+    )
+    h = run_host_sync(ds, cfg)
+    assert h.tx_edge_bytes is not None and h.tx_edge_bytes.shape == (rounds, n_edges)
+    hop1 = float(h.tx_wire_bytes.sum())
+    hop2 = float(h.tx_edge_bytes.sum())
+    return {
+        "C": c,
+        "K": k,
+        "edge_groups": n_edges,
+        "hop1_client_edge_mb": hop1 / 1e6,
+        "hop2_edge_server_mb": hop2 / 1e6,
+        "topology_mb": (hop1 + hop2) / 1e6,
+    }
+
+
+def run():
+    k = 32 if SMOKE else 64
+    pops = [2_000, 8_000] if SMOKE else [10_000, 100_000]
+    rounds = 3 if SMOKE else 4
+    eval_chunk = 4 * k
+
+    header = [
+        "C", "K", "step_ms", "host_gather_ms", "staged_kb",
+        "watermark_mb", "c_slab_mb", "wall_s",
+    ]
+    rows, records = [], []
+    for c in pops:
+        r = _bench_case(c, k, rounds, eval_chunk)
+        records.append(r)
+        rows.append([
+            c, k, f"{r['step_ms']:.2f}", f"{r['host_gather_ms']:.2f}",
+            f"{r['staged_kb']:.1f}", f"{r['watermark_mb']:.2f}",
+            f"{r['c_slab_mb']:.4f}", f"{r['wall_s']:.2f}",
+        ])
+        print(
+            f"  C={c:7d} K={k:3d}: step={r['step_ms']:8.2f}ms  "
+            f"gather={r['host_gather_ms']:6.2f}ms  staged={r['staged_kb']:8.1f}KB  "
+            f"device live={r['watermark_mb']:6.2f}MB (C-slabs {r['c_slab_mb']:.4f}MB)"
+        )
+
+    edge = _edge_case(pops[0], k, rounds, n_edges=8)
+    print(
+        f"  C={edge['C']:7d} E={edge['edge_groups']}: topology bytes "
+        f"hop1={edge['hop1_client_edge_mb']:.3f}MB + "
+        f"hop2={edge['hop2_edge_server_mb']:.3f}MB"
+    )
+
+    lo, hi = records[0], records[-1]
+    c_ratio = hi["C"] / lo["C"]
+    step_ratio = hi["step_ms"] / lo["step_ms"]
+    gates = {
+        "c_ratio": c_ratio,
+        "step_ratio": step_ratio,
+        "sublinear_bound": SUBLINEAR_FACTOR * c_ratio,
+        "sublinear_ok": step_ratio < SUBLINEAR_FACTOR * c_ratio,
+        "c_slab_mb_at_max": hi["c_slab_mb"],
+        "c_slab_ok": hi["c_slab_mb"] == 0.0,
+        "watermark_cap_mb": WATERMARK_CAP_MB,
+        "watermark_ok": hi["watermark_mb"] < WATERMARK_CAP_MB,
+    }
+    print(
+        f"  gates: step x{step_ratio:.2f} over C x{c_ratio:.0f} "
+        f"(bound x{gates['sublinear_bound']:.1f})  "
+        f"C-slabs {hi['c_slab_mb']:.4f}MB  watermark {hi['watermark_mb']:.2f}MB"
+    )
+
+    path = write_csv("pop_bench", header, rows)
+    summary = {
+        "smoke": SMOKE,
+        "K": k,
+        "populations": pops,
+        "rounds": rounds,
+        "rows": records,
+        "edge": edge,
+        "gates": gates,
+    }
+    write_bench_json("pop", summary)
+    if not (gates["sublinear_ok"] and gates["c_slab_ok"] and gates["watermark_ok"]):
+        print("!! pop bench acceptance gates failed:", gates)
+        sys.exit(1)
+    return path
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        SMOKE = True
+    run()

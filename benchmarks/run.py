@@ -32,6 +32,7 @@ def main() -> None:
         kernel_bench,
         loop_bench,
         obs_smoke,
+        pop_bench,
         roofline,
         scale_bench,
         selection_bench,
@@ -55,6 +56,7 @@ def main() -> None:
         ("scale_bench (cohort O(K) vs dense O(C) rounds)", scale_bench.run),
         ("loop_bench (round-fused executor vs per-round dispatch)", loop_bench.run),
         ("shard_bench (cohort-sharded step, D-device strong scaling)", shard_bench.run),
+        ("pop_bench (host-resident population plane, C-sweep)", pop_bench.run),
         ("serve_bench (personalized serving QPS/p99 x batch x mode)", serve_bench.run),
         ("obs_smoke (recorded + traced run, artifacts validated)", obs_smoke.run),
         ("roofline (deliverable g)", roofline.run),
@@ -65,7 +67,7 @@ def main() -> None:
             if s[0].split(" ")[0]
             in ("kernel_bench", "codec_bench", "selection_bench", "async_bench",
                 "scale_bench", "loop_bench", "shard_bench", "serve_bench",
-                "obs_smoke")
+                "pop_bench", "obs_smoke")
         ]
     t00 = time.time()
     for name, fn in suites:

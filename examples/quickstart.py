@@ -92,6 +92,37 @@ sharding the cohort (--devices):
   benchmarks/shard_bench.py + BENCH_shard.json for the D-scaling sweep
   and per-device psum traffic).
 
+scaling the population (--host-population / --edge-groups):
+  Cohort execution makes per-round *compute* O(K); the population tier
+  (repro.fl.population) makes per-round *device memory* O(K) too. With
+  --host-population 1 every (C, ...) per-client slab — local params, EF
+  residuals, selection/accuracy/participation lanes — lives host-side in
+  a numpy PopulationStore (optionally memory-mapped), and each round
+  stages only the gathered (K, ...) cohort onto device:
+
+    PYTHONPATH=src python examples/quickstart.py --n-clients 2000 \\
+        --cohort-size 50 --host-population 1
+
+  The trajectory is bit-identical to the device-resident path (goldens
+  enforced); --host-population 0 (default) picks the host plane
+  automatically at >= 50k clients, -1 forces device-resident. At C=10^5+
+  pair it with the lazy sharded data generator
+  (repro.data.synthetic.make_sharded_population — O(K) host data memory)
+  and ExecutionConfig.eval_chunk to stream the O(C) evaluation through
+  fixed-size device slabs; see benchmarks/pop_bench.py + BENCH_pop.json
+  for the C-sweep (step time sublinear in C at fixed K, zero
+  population-sized device slabs).
+
+  --edge-groups E adds two-level hierarchical aggregation on top:
+  clients partial-aggregate at E edge servers, the server merges the E
+  partials, and FLHistory.tx_edge_bytes accounts the edge->server hop
+  (client->edge uplink stays in tx_bytes_cum, so flat accounting is
+  unchanged). E=1 is bit-identical to flat aggregation; E>1 changes only
+  the reduction tree (~1-ulp, like --devices):
+
+    PYTHONPATH=src python examples/quickstart.py --n-clients 2000 \\
+        --cohort-size 50 --host-population 1 --edge-groups 8
+
 composing a custom round:
   A federated round is a pipeline of swappable phases (repro.fl.phases):
 
@@ -192,6 +223,15 @@ def main():
     ap.add_argument("--scan-chunk", type=int, default=1,
                     help="rounds fused per on-device scan chunk (sync loop; "
                          "1 = per-round host sync, 0 = whole run in one chunk)")
+    ap.add_argument("--host-population", type=int, default=0, choices=[-1, 0, 1],
+                    help="population plane placement: 0 = auto (host-resident "
+                         "at >= 50k clients), 1 = force the host-resident "
+                         "PopulationStore + per-round cohort staging, -1 = "
+                         "force device-resident (see epilog)")
+    ap.add_argument("--edge-groups", type=int, default=0,
+                    help="two-level hierarchical aggregation over this many "
+                         "edge groups (0 = flat client->server; edge->server "
+                         "hop bytes land in FLHistory.tx_edge_bytes)")
     ap.add_argument("--devices", type=int, default=0,
                     help="shard the adaptive run's cohort lanes over this many "
                          "devices (forces host devices on CPU, dev only; 0 = "
@@ -232,7 +272,9 @@ def main():
     fedavg = run_federated(
         ds, FLConfig(strategy="fedavg", personalization="none", fraction=1.0,
                      rounds=args.rounds, epochs=2, heterogeneity=args.heterogeneity,
-                     cohort_size=args.cohort_size, scan_chunk=args.scan_chunk),
+                     cohort_size=args.cohort_size, scan_chunk=args.scan_chunk,
+                     host_population=args.host_population,
+                     edge_groups=args.edge_groups),
         progress=True,
     )
 
@@ -250,7 +292,9 @@ def main():
                                   heterogeneity=args.heterogeneity),
         execution=ExecutionConfig(cohort_size=args.cohort_size,
                                   scan_chunk=args.scan_chunk,
-                                  cohort_devices=args.devices if args.devices > 1 else 0),
+                                  cohort_devices=args.devices if args.devices > 1 else 0,
+                                  host_population=args.host_population,
+                                  edge_groups=args.edge_groups),
     )
     recorder = None
     if args.record_dir:

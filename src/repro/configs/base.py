@@ -300,6 +300,10 @@ class CodecConfig:
 SCHEDULER_MODES = ("sync", "async")
 STALENESS_FN_NAMES = ("constant", "polynomial", "hinge")
 
+# Populations at or above this size default to the host-resident population
+# plane (ExecutionConfig.host_population == 0 -> auto).
+HOST_POPULATION_THRESHOLD = 50_000
+
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionConfig:
@@ -352,6 +356,41 @@ class ExecutionConfig:
     at 1 device; at D > 1 only the aggregation reduction tree changes
     (D partial sums + psum), which holds golden parity to 1 ulp of
     float32 — see repro.fl.shard.
+
+    ``host_population`` splits the population plane from the compute plane
+    (repro.fl.population): all ``(C, ...)`` per-client slabs — local
+    params, EF residuals, pms/select/participation/accuracy/loss lanes —
+    live host-side in a numpy ``PopulationStore`` (optionally
+    memory-mapped), and each round stages only the ``(K, ...)`` cohort
+    onto device via ``gather``/``scatter``. ``0`` (default) resolves
+    automatically: populations of ``HOST_POPULATION_THRESHOLD`` clients or
+    more use the host plane, smaller ones stay device-resident (the
+    golden-guarded path). ``1`` forces the host plane at any C (the
+    trajectory is bit-identical either way); ``-1`` forces
+    device-resident. The host plane runs its own per-round staging loop,
+    so ``scan_chunk`` fusion is inapplicable there (ignored) and
+    ``cohort_devices`` sharding is not composed with it (rejected).
+
+    ``eval_chunk`` streams the O(C) distributed evaluation through
+    ``(chunk, ...)`` device slabs on the host-population path: ``0``
+    (default) evaluates the whole population in one device call (exactly
+    the device-resident reduction, bit-identical), ``N >= 1`` evaluates N
+    clients at a time so the device live-array watermark stays O(K) even
+    at C = 10^6. Per-client accuracy/loss are lane-independent, so
+    chunking never changes values — only peak device memory.
+
+    ``edge_groups`` enables two-level hierarchical (edge-server)
+    aggregation: the population is partitioned into E contiguous
+    client-id blocks, each edge partial-aggregates its members' updates,
+    and the server merges the E edge partials. ``0`` (default) keeps
+    flat client->server aggregation. ``1`` is a single edge whose merge
+    short-circuits to the exact flat expression (trajectory
+    bit-identical; only the simulated round-time/wire accounting gains
+    the extra hop). ``E > 1`` changes the aggregation reduction tree
+    (edge partial sums), which like ``cohort_devices`` holds golden
+    parity to ~1 ulp of float32. Per-hop wire bytes land in
+    ``FLHistory.tx_edge_bytes`` (client->edge uplink stays in
+    ``tx_bytes_cum``).
     """
 
     cohort_size: int = 0        # 0 -> full population (dense-equivalent)
@@ -360,6 +399,12 @@ class ExecutionConfig:
                                 # 1 -> per-round host sync, 0 -> whole run
     cohort_devices: int = 0     # 0 -> unsharded; -1 -> all visible devices;
                                 # N -> shard_map cohort lanes over N devices
+    host_population: int = 0    # 0 -> auto (>= HOST_POPULATION_THRESHOLD);
+                                # 1 -> force host-resident; -1 -> never
+    eval_chunk: int = 0         # host-population eval streaming: clients per
+                                # device eval call; 0 -> whole population
+    edge_groups: int = 0        # 0 -> flat aggregation; E >= 1 -> two-level
+                                # edge-server aggregation over E id blocks
 
     def __post_init__(self):
         if self.cohort_size < 0:
@@ -372,12 +417,34 @@ class ExecutionConfig:
             raise ValueError(
                 f"cohort_devices must be >= -1, got {self.cohort_devices!r}"
             )
+        if self.host_population not in (-1, 0, 1):
+            raise ValueError(
+                f"host_population must be -1, 0, or 1, got {self.host_population!r}"
+            )
+        if self.eval_chunk < 0:
+            raise ValueError(f"eval_chunk must be >= 0, got {self.eval_chunk!r}")
+        if self.edge_groups < 0:
+            raise ValueError(f"edge_groups must be >= 0, got {self.edge_groups!r}")
+        if self.host_population == 1 and self.cohort_devices != 0:
+            raise ValueError(
+                "host_population=1 does not compose with cohort_devices: the "
+                "host plane stages (K, ...) slabs per round outside the "
+                "sharded executor"
+            )
 
     def resolved_cohort(self, n_clients: int) -> int:
         """Static cohort lane count K for a population of ``n_clients``."""
         if self.cohort_size <= 0:
             return n_clients
         return min(self.cohort_size, n_clients)
+
+    def resolved_host_population(self, n_clients: int) -> bool:
+        """Whether a population of ``n_clients`` runs on the host plane."""
+        if self.host_population == 1:
+            return True
+        if self.host_population == -1 or self.cohort_devices != 0:
+            return False
+        return n_clients >= HOST_POPULATION_THRESHOLD
 
     def resolved_chunk(self, rounds: int) -> int:
         """Rounds fused per on-device chunk for a ``rounds``-round run."""

@@ -21,6 +21,8 @@ def _weighted_mean(
     weights: jnp.ndarray,
     fallback: jnp.ndarray | None = None,
     axis_name: str | None = None,
+    edge_ids: jnp.ndarray | None = None,
+    n_edges: int = 0,
 ) -> jnp.ndarray:
     """Weighted mean over the leading client axis.
 
@@ -34,10 +36,26 @@ def _weighted_mean(
     (repro.fl.shard's cohort sharding). ``None`` (the default) keeps the
     single-device expression untouched — bit-identity of the unsharded
     path is golden-guarded.
+
+    ``edge_ids``/``n_edges`` route the reduction through two-level
+    hierarchical (edge-server) aggregation: each lane belongs to the edge
+    group ``edge_ids[lane]``, the E edges partial-sum their members'
+    numerator/denominator (``segment_sum``), and the server reduces the E
+    partials. ``n_edges <= 1`` keeps the flat single-sum expression —
+    exactly (one edge IS the server sum), so E=1 stays bit-identical;
+    E > 1 only reassociates the reduction tree (~1 ulp, like sharding).
     """
     w = weights.reshape((-1,) + (1,) * (stacked.ndim - 1)).astype(stacked.dtype)
-    total = jnp.sum(weights).astype(stacked.dtype)
-    num = jnp.sum(stacked * w, axis=0)
+    if n_edges > 1 and edge_ids is not None:
+        num_e = jax.ops.segment_sum(stacked * w, edge_ids, num_segments=n_edges)
+        tot_e = jax.ops.segment_sum(
+            weights.astype(stacked.dtype), edge_ids, num_segments=n_edges
+        )
+        num = jnp.sum(num_e, axis=0)
+        total = jnp.sum(tot_e)
+    else:
+        total = jnp.sum(weights).astype(stacked.dtype)
+        num = jnp.sum(stacked * w, axis=0)
     if axis_name is not None:
         num = jax.lax.psum(num, axis_name)
         total = jax.lax.psum(total, axis_name)
@@ -52,6 +70,8 @@ def fedavg_aggregate(
     select_mask: jnp.ndarray,
     n_samples: jnp.ndarray,
     axis_name: str | None = None,
+    edge_ids: jnp.ndarray | None = None,
+    n_edges: int = 0,
 ):
     """Eq. (1): w <- sum_i (|d_i|/|D|) w_i over *selected* clients.
 
@@ -61,12 +81,16 @@ def fedavg_aggregate(
       n_samples: (C,) |d_i|.
       axis_name: mesh axis to psum shard-local partial sums over (the lanes
         are then the local shard of a shard_mapped cohort); None = local.
+      edge_ids/n_edges: two-level edge aggregation (see ``_weighted_mean``).
 
     Returns the aggregated pytree with the client axis reduced.
     """
     weights = select_mask.astype(jnp.float32) * n_samples.astype(jnp.float32)
     return jax.tree.map(
-        lambda x: _weighted_mean(x, weights, axis_name=axis_name), client_params
+        lambda x: _weighted_mean(
+            x, weights, axis_name=axis_name, edge_ids=edge_ids, n_edges=n_edges
+        ),
+        client_params,
     )
 
 
@@ -77,6 +101,8 @@ def masked_partial_aggregate(
     n_samples: jnp.ndarray,
     share_mask: jnp.ndarray,
     axis_name: str | None = None,
+    edge_ids: jnp.ndarray | None = None,
+    n_edges: int = 0,
 ):
     """ACSP-FL aggregation: per-layer weighted average of the *shared* pieces.
 
@@ -108,7 +134,8 @@ def masked_partial_aggregate(
         out.append(
             jax.tree.map(
                 lambda x, g, w_j=w_j: _weighted_mean(
-                    x, w_j, fallback=g, axis_name=axis_name
+                    x, w_j, fallback=g, axis_name=axis_name,
+                    edge_ids=edge_ids, n_edges=n_edges,
                 ),
                 client_params[j],
                 prev_global[j],
@@ -123,6 +150,8 @@ def staleness_weighted_merge(
     weights: jnp.ndarray,
     share_mask: jnp.ndarray | None = None,
     axis_name: str | None = None,
+    edge_ids: jnp.ndarray | None = None,
+    n_edges: int = 0,
 ):
     """FedBuff-style buffered merge: ``w <- w + sum_i v_i d_i / sum_i v_i``.
 
@@ -152,7 +181,9 @@ def staleness_weighted_merge(
             w_j = w_j * share_mask[:, j].astype(jnp.float32)
         out.append(
             jax.tree.map(
-                lambda d, g, w_j=w_j: g + _weighted_mean(d, w_j, axis_name=axis_name),
+                lambda d, g, w_j=w_j: g + _weighted_mean(
+                    d, w_j, axis_name=axis_name, edge_ids=edge_ids, n_edges=n_edges
+                ),
                 client_deltas[j],
                 prev_global[j],
             )

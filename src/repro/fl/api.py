@@ -107,6 +107,9 @@ _FLAT_KEYS = {
     "eval_every": ("execution", "eval_every"),
     "scan_chunk": ("execution", "scan_chunk"),
     "cohort_devices": ("execution", "cohort_devices"),
+    "host_population": ("execution", "host_population"),
+    "eval_chunk": ("execution", "eval_chunk"),
+    "edge_groups": ("execution", "edge_groups"),
 }
 
 _GROUP_TYPES = {
@@ -253,6 +256,18 @@ class FLConfig:
     def cohort_devices(self) -> int:
         return self.execution.cohort_devices
 
+    @property
+    def host_population(self) -> int:
+        return self.execution.host_population
+
+    @property
+    def eval_chunk(self) -> int:
+        return self.execution.eval_chunk
+
+    @property
+    def edge_groups(self) -> int:
+        return self.execution.edge_groups
+
     def strategy_obj(self):
         return self.selection.strategy_obj()
 
@@ -298,16 +313,19 @@ def pipeline_from_config(cfg: FLConfig) -> RoundPipeline:
     else:
         layer_policy = phases.get_phase("layer-policy", "full")
     sched = cfg.scheduler
+    edge_e = cfg.execution.edge_groups
     if sched.mode == "async":
         aggregator = phases.get_phase(
             "aggregator", "staleness",
             staleness_fn=sched.staleness_fn,
             exponent=sched.staleness_exponent,
             threshold=sched.staleness_threshold,
+            edge_groups=edge_e,
         )
     else:
         aggregator = phases.get_phase(
-            "aggregator", "masked-partial" if mode in ("pms", "dld") else "fedavg"
+            "aggregator", "masked-partial" if mode in ("pms", "dld") else "fedavg",
+            edge_groups=edge_e,
         )
     return RoundPipeline(
         personalizer=personalizer,

@@ -101,6 +101,14 @@ class FLHistory(NamedTuple):
                                    # sync barrier, clients in flight after
                                    # dispatch under async (never exceeds
                                    # max_concurrency)
+    tx_edge_bytes: np.ndarray | None = None
+                                   # (T, E) edge->server hop bytes when
+                                   # two-level aggregation is on
+                                   # (ExecutionConfig.edge_groups >= 1);
+                                   # None on flat runs. The client uplink
+                                   # (hop 1) stays in tx_bytes_cum /
+                                   # tx_wire_bytes, so flat accounting is
+                                   # unchanged by the extra tier.
 
 
 def make_round_step(

@@ -546,9 +546,35 @@ class Aggregator:
     ``lax.psum`` over that axis, so the same phase aggregates a cohort
     partitioned K/D per device. ``axis_name=None`` (default) is the
     single-device reduction, bit-identical to the pre-sharding code.
+
+    ``edge_groups`` routes the reduction through two-level hierarchical
+    (edge-server) aggregation: the population is partitioned into E
+    contiguous client-id blocks, each edge partial-sums its members, and
+    the server merges the E edge partials. ``edge_groups <= 1`` keeps the
+    flat sum exactly (E=1 is one edge whose partial IS the server sum —
+    trajectory bit-identical); E > 1 reassociates the reduction tree
+    (~1 ulp, like ``axis_name`` sharding). Composes with ``axis_name``:
+    edge partials are shard-local, the psum finishes them.
     """
 
+    edge_groups = 0   # subclasses declare the dataclass field
     axis_name = None  # subclasses declare the dataclass field (kept last)
+
+    def _edges(self, ctx: RoundContext, env: RoundEnv):
+        """``(edge_ids, n_edges)`` for the current lanes, or ``(None, 0)``
+        when hierarchical aggregation is off. Edge membership is by true
+        client id (``ctx.cohort_idx``), so a client aggregates through the
+        same edge whichever lane/slot it lands in."""
+        if self.edge_groups <= 1:
+            return None, 0
+        group = -(-env.pop // self.edge_groups)
+        cid = (
+            ctx.cohort_idx
+            if ctx.cohort_idx is not None
+            else jnp.arange(env.n_clients)
+        )
+        ids = jnp.clip(cid // group, 0, self.edge_groups - 1).astype(jnp.int32)
+        return ids, self.edge_groups
 
     def aggregate(self, ctx: RoundContext, env: RoundEnv) -> RoundContext:
         raise NotImplementedError
@@ -558,12 +584,15 @@ class Aggregator:
 class FedAvgAggregator(Aggregator):
     """Plain Eq. 1 over selected clients, full model."""
 
+    edge_groups: int = 0
     axis_name: str | None = None
 
     def aggregate(self, ctx, env):
+        edge_ids, n_edges = self._edges(ctx, env)
         return ctx._replace(
             new_global=fedavg_aggregate(
-                ctx.agg_src, ctx.select, env.n_samples, axis_name=self.axis_name
+                ctx.agg_src, ctx.select, env.n_samples, axis_name=self.axis_name,
+                edge_ids=edge_ids, n_edges=n_edges,
             )
         )
 
@@ -573,13 +602,16 @@ class MaskedPartialAggregator(Aggregator):
     """ACSP-FL masked aggregation: only layers a client shares contribute;
     layers nobody shared keep the previous global value."""
 
+    edge_groups: int = 0
     axis_name: str | None = None
 
     def aggregate(self, ctx, env):
+        edge_ids, n_edges = self._edges(ctx, env)
         return ctx._replace(
             new_global=masked_partial_aggregate(
                 ctx.agg_src, ctx.global_params, ctx.select, env.n_samples,
                 ctx.share, axis_name=self.axis_name,
+                edge_ids=edge_ids, n_edges=n_edges,
             )
         )
 
@@ -636,6 +668,7 @@ class StalenessAggregator(Aggregator):
     staleness_fn: str = "polynomial"
     exponent: float = 0.5
     threshold: float = 4.0
+    edge_groups: int = 0
     axis_name: str | None = None
 
     def aggregate(self, ctx, env):
@@ -664,9 +697,11 @@ class StalenessAggregator(Aggregator):
             * env.n_samples.astype(jnp.float32)
             * discount
         )
+        edge_ids, n_edges = self._edges(ctx, env)
         return ctx._replace(
             new_global=staleness_weighted_merge(
-                deltas, ctx.global_params, w, ctx.share, axis_name=self.axis_name
+                deltas, ctx.global_params, w, ctx.share, axis_name=self.axis_name,
+                edge_ids=edge_ids, n_edges=n_edges,
             ),
             # the per-lane discount factor alone (sample weighting excluded)
             # — the scheduler surfaces its landed mean to the run recorder

@@ -59,6 +59,7 @@ here.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -68,7 +69,12 @@ import numpy as np
 from repro.comm import Codec, tree_wire_bytes
 from repro.core.aggregation import transmitted_parameters
 from repro.core.layersharing import layer_param_sizes, layer_share_mask
-from repro.core.metrics import BYTES_PER_PARAM, CommModel
+from repro.core.metrics import (
+    BYTES_PER_PARAM,
+    CommModel,
+    edge_hop_bytes,
+    edge_partition,
+)
 from repro.data.synthetic import FederatedDataset
 from repro.fl import phases
 from repro.fl.api import (
@@ -89,6 +95,7 @@ __all__ = [
     "AsyncScheduler",
     "AsyncState",
     "ClientClock",
+    "EventQueue",
     "SyncScheduler",
     "build_async_step",
     "make_scheduler",
@@ -108,6 +115,12 @@ class ClientClock:
     parameter and wire-byte prefixes turn the per-round
     ``(pms > arange) @ sizes`` matmul the seed loop recomputed every round
     into a single prefix lookup, computed once per experiment.
+
+    The (C,) delay lane is **lazy**: on the homogeneous default
+    (``heterogeneity=0``) nothing per-client is ever materialized, so a
+    C=10^6 clock constructs in O(1) and ``durations`` over a slot subset
+    (``cids``) touches O(|subset|) — the population tier's event clock
+    never pays O(C) per event.
     """
 
     comm: CommModel
@@ -115,7 +128,10 @@ class ClientClock:
     epochs: int
     params_prefix: np.ndarray  # (L+1,) — params in the first k layers
     wire_prefix: np.ndarray    # (L+1,) float64 — codec uplink wire bytes
-    delay: np.ndarray          # (C,) float64 — multiplicative heterogeneity
+    heterogeneity: float = 0.0  # lognormal sigma; 0 = uniform clocks
+    delay_seed: int = 0
+    n_clients: int = 0
+    _delay: np.ndarray | None = dataclasses.field(default=None, repr=False)
 
     @classmethod
     def build(
@@ -131,55 +147,78 @@ class ClientClock:
         layer_wire = np.asarray(
             [tree_wire_bytes(codec, layer) for layer in global_params], np.float64
         )
-        if client_delay is None:
-            h = cfg.scheduler.heterogeneity
-            if h > 0.0:
-                client_delay = np.random.default_rng(cfg.seed + 4242).lognormal(
-                    0.0, h, data.n_clients
-                )
-            else:
-                client_delay = np.ones((data.n_clients,))
         return cls(
             comm=comm,
             n_samples=np.asarray(data.n_samples, np.float64),
             epochs=cfg.epochs,
             params_prefix=np.concatenate([[0], np.cumsum(sizes)]),
             wire_prefix=np.concatenate([[0.0], np.cumsum(layer_wire)]),
-            delay=np.asarray(client_delay, np.float64),
+            heterogeneity=cfg.scheduler.heterogeneity if client_delay is None else 0.0,
+            delay_seed=cfg.seed,
+            n_clients=data.n_clients,
+            _delay=(
+                np.asarray(client_delay, np.float64)
+                if client_delay is not None
+                else None
+            ),
         )
 
     @property
+    def delay(self) -> np.ndarray:
+        """(C,) multiplicative heterogeneity lane, sampled on first use
+        (same stream as always: ``default_rng(seed + 4242)``)."""
+        if self._delay is None:
+            if self.heterogeneity > 0.0:
+                self._delay = np.random.default_rng(
+                    self.delay_seed + 4242
+                ).lognormal(0.0, self.heterogeneity, self.n_clients)
+            else:
+                self._delay = np.ones((self.n_clients,))
+        return self._delay
+
+    @property
     def uniform(self) -> bool:
-        return bool(np.all(self.delay == 1.0))
+        if self._delay is None:
+            return self.heterogeneity == 0.0
+        return bool(np.all(self._delay == 1.0))
 
     def shared_params(self, pms: np.ndarray) -> np.ndarray:
         """Parameter count each client shares at depth ``pms`` (any shape —
         the prefix lookup broadcasts, so a chunk's (T, C) depths batch)."""
         return self.params_prefix[np.asarray(pms)]
 
-    def round_flops(self, pms: np.ndarray) -> np.ndarray:
+    def round_flops(self, pms: np.ndarray, cids: np.ndarray | None = None) -> np.ndarray:
         """Local-training FLOPs per client at share depth ``pms`` — the one
         place the compute model (fwd+bwd ~ 6 * params * samples * epochs)
         lives; ``durations`` and the schedulers' accounting both use it.
-        Broadcasts like ``shared_params`` (``(T, C)`` chunk batches)."""
-        return 6.0 * self.shared_params(pms) * self.n_samples * self.epochs
+        Broadcasts like ``shared_params`` (``(T, C)`` chunk batches).
+        ``cids`` restricts to a client subset: ``pms`` then carries those
+        clients' depths and the sample lane is row-gathered to match."""
+        n_samples = self.n_samples if cids is None else self.n_samples[np.asarray(cids)]
+        return 6.0 * self.shared_params(pms) * n_samples * self.epochs
 
-    def durations(self, pms: np.ndarray) -> np.ndarray:
-        """(C,) simulated seconds for one dispatch at share depth ``pms``:
+    def durations(self, pms: np.ndarray, cids: np.ndarray | None = None) -> np.ndarray:
+        """Simulated seconds for one dispatch at share depth ``pms``:
         uncompressed float32 downlink + local epochs + codec-compressed
-        uplink, scaled by the per-client delay lane."""
+        uplink, scaled by the per-client delay lane. ``cids=None`` covers
+        the whole population ((C,) result); a client-id subset computes
+        only those rows — every per-client term is elementwise, so the
+        subset rows are bitwise the full-lane rows."""
         params = self.shared_params(pms)
+        delay = None
+        if not self.uniform:
+            delay = self.delay if cids is None else self.delay[np.asarray(cids)]
         return np.asarray(
             self.comm.client_times(
                 self.wire_prefix[np.asarray(pms)],
-                self.round_flops(pms),
+                self.round_flops(pms, cids=cids),
                 rx_bytes_per_client=params * float(BYTES_PER_PARAM),
-                delay=self.delay,
+                delay=delay,
             ),
             np.float64,
         )
 
-    def component_times(self, pms: np.ndarray):
+    def component_times(self, pms: np.ndarray, cids: np.ndarray | None = None):
         """``durations`` split into ``(rx, train, total)`` per client —
         downlink, local-training, and the full dispatch->upload-done time
         (broadcasts like ``shared_params``: a chunk's (T, C) depths batch).
@@ -190,14 +229,61 @@ class ClientClock:
         bit-identically at the ``durations`` value the event queue used —
         per-client spans sum to the exact simulated clock the history
         reports."""
-        total = self.durations(pms)
+        total = self.durations(pms, cids=cids)
         rx = (
             self.shared_params(pms) * float(BYTES_PER_PARAM)
             / self.comm.bandwidth_bytes_per_s
-            * self.delay
         )
-        train = self.round_flops(pms) / self.comm.client_flops_per_s * self.delay
+        train = self.round_flops(pms, cids=cids) / self.comm.client_flops_per_s
+        if not self.uniform:
+            delay = self.delay if cids is None else self.delay[np.asarray(cids)]
+            rx = rx * delay
+            train = train * delay
         return rx, train, total
+
+
+class EventQueue:
+    """Heap-backed simulated event clock over M dispatch slots.
+
+    Replaces the per-event ``np.lexsort`` over every slot (O(M log M) per
+    aggregation event, ~all of it wasted re-sorting slots that didn't
+    change) with a lazily-invalidated binary heap: ``push`` on dispatch,
+    ``pop_k`` the k earliest arrivals per event in O(k log M). Entries
+    order by ``(finish, client id)`` — exactly the lexsort's tie-break,
+    and a total order over live entries because in-flight slots always
+    hold distinct clients. Re-pushing a slot bumps its generation counter,
+    so a stale heap entry (from a superseded dispatch) is skipped on pop
+    instead of eagerly removed. ``finish`` keeps the per-slot finish times
+    current — the recorder reads the popped slots' exact queue times from
+    it. Heap-vs-lexsort identity is regression-tested on randomized event
+    sequences (tests/test_population.py).
+    """
+
+    def __init__(self, n_slots: int):
+        self.finish = np.full((n_slots,), np.inf, np.float64)
+        self._gen = np.zeros((n_slots,), np.int64)
+        self._live = np.zeros((n_slots,), bool)
+        self._heap: list[tuple[float, int, int, int]] = []
+
+    def push(self, slot: int, finish: float, client: int) -> None:
+        """(Re-)arm ``slot``: ``client`` finishes at simulated ``finish``."""
+        self._gen[slot] += 1
+        self.finish[slot] = finish
+        self._live[slot] = True
+        heapq.heappush(
+            self._heap, (float(finish), int(client), int(slot), int(self._gen[slot]))
+        )
+
+    def pop_k(self, k: int) -> np.ndarray:
+        """Slots of the k earliest live entries, in (finish, client id)
+        order — the popped slots leave the queue (their clients landed)."""
+        out = []
+        while len(out) < k:
+            _, _, slot, gen = heapq.heappop(self._heap)
+            if gen == self._gen[slot] and self._live[slot]:
+                self._live[slot] = False
+                out.append(slot)
+        return np.asarray(out, np.int64)
 
 
 # ---------------------------------------------------------------------------
@@ -336,6 +422,19 @@ class SyncScheduler:
     ):
         from repro.fl.engine import FLHistory
 
+        if cfg.execution.resolved_host_population(data.n_clients) or not hasattr(
+            data, "x_train"
+        ):
+            # population tier: (C, ...) slabs stay host-resident, only the
+            # cohort is staged on device (sharded/lazy datasets have no
+            # x_train slab to build a device env from at all)
+            from repro.fl.population import run_host_sync
+
+            return run_host_sync(
+                data, cfg, init_fn=init_fn, loss_fn=loss_fn, acc_fn=acc_fn,
+                comm=comm, progress=progress, pipeline=pipeline,
+                client_delay=client_delay, recorder=recorder,
+            )
         su = _setup_run(data, cfg, init_fn, loss_fn, acc_fn, comm, pipeline, client_delay)
         comm, clock = su.comm, su.clock
         state = RoundState(
@@ -370,6 +469,12 @@ class SyncScheduler:
                               mesh=getattr(round_step, "mesh", None))
         prof = recorder.profiler if recorder is not None else None
         emit = recorder.log if recorder is not None else print
+        # two-level (edge-server) topology accounting: static id partition +
+        # per-layer sizes feed the (T, E) edge->server hop-byte lane
+        n_edges = cfg.execution.edge_groups
+        edge_ids = edge_partition(data.n_clients, n_edges) if n_edges >= 1 else None
+        layer_sizes = np.diff(clock.params_prefix)
+        edge_hist: list[np.ndarray] = []
         accs, sel_hist, tx_hist, pms_hist, times, wire_hist = [], [], [], [], [], []
         for t0 in range(0, cfg.rounds, chunk):
             n = min(chunk, cfg.rounds - t0)
@@ -413,12 +518,21 @@ class SyncScheduler:
             # model); the prefix lookup + FLOPs + round_times are a single
             # numpy pass over (n, C), no per-round numpy<->jnp churn
             per_client_params = clock.shared_params(pms)             # (n, C)
-            rt = comm.round_times(
-                wire, clock.round_flops(pms), sel,
-                rx_bytes=per_client_params * float(BYTES_PER_PARAM),
-                # None on the homogeneous default: no delay lane to pay
-                delay=delay,
-            )
+            if n_edges >= 1:
+                e_bytes = edge_hop_bytes(sel, pms, layer_sizes, edge_ids, n_edges)
+                edge_hist.append(e_bytes)
+                rt = comm.edge_round_times(
+                    wire, clock.round_flops(pms), sel, edge_ids, e_bytes,
+                    rx_bytes=per_client_params * float(BYTES_PER_PARAM),
+                    delay=delay,
+                )
+            else:
+                rt = comm.round_times(
+                    wire, clock.round_flops(pms), sel,
+                    rx_bytes=per_client_params * float(BYTES_PER_PARAM),
+                    # None on the homogeneous default: no delay lane to pay
+                    delay=delay,
+                )
             times.append(rt)
             accs.append(acc)
             sel_hist.append(sel)
@@ -454,6 +568,7 @@ class SyncScheduler:
             sim_clock=np.cumsum(times),
             staleness_mean=np.zeros_like(times),
             in_flight=np.full(times.shape, lanes, np.int64),
+            tx_edge_bytes=np.concatenate(edge_hist) if n_edges >= 1 else None,
         )
         if recorder is not None:
             recorder.close(h)
@@ -708,8 +823,8 @@ class AsyncScheduler:
 
     The trajectory is a pure function of (data, cfg, pipeline, delays):
     device work is deterministic, and the queue breaks finish-time ties by
-    (finish, client id) lexsort — same seed + config => identical
-    FLHistory.
+    (finish, client id) — ``EventQueue``'s heap order, identical to the
+    original lexsort — so same seed + config => identical FLHistory.
     """
 
     buffer_k: int | None = None  # override; None -> cfg.scheduler.buffer_k
@@ -729,6 +844,17 @@ class AsyncScheduler:
     ):
         from repro.fl.engine import FLHistory
 
+        if cfg.execution.resolved_host_population(data.n_clients) or not hasattr(
+            data, "x_train"
+        ):
+            from repro.fl.population import run_host_async
+
+            return run_host_async(
+                data, cfg, init_fn=init_fn, loss_fn=loss_fn, acc_fn=acc_fn,
+                comm=comm, progress=progress, pipeline=pipeline,
+                client_delay=client_delay, recorder=recorder,
+                buffer_k=self.buffer_k,
+            )
         su = _setup_run(data, cfg, init_fn, loss_fn, acc_fn, comm, pipeline, client_delay)
         comm, clock_fn = su.comm, su.clock
         # fail fast on a sync-built pipeline: the barrier aggregators average
@@ -778,10 +904,13 @@ class AsyncScheduler:
         prof = recorder.profiler if recorder is not None else None
         emit = recorder.log if recorder is not None else print
 
-        # --- host event queue over the M slots ---
+        # --- host event queue over the M slots (finish-time heap) ---
         slot_client = slot_client0.copy()
         client_pms = np.full((c,), su.pms0, np.int32)
-        finish = clock_fn.durations(client_pms)[slot_client]  # (M,)
+        queue = EventQueue(m)
+        d0 = clock_fn.durations(client_pms[slot_client0], cids=slot_client0)
+        for s in range(m):
+            queue.push(s, d0[s], int(slot_client0[s]))
         if recorder is not None:  # warm start: w(0) cut at simulated t=0
             recorder.on_async_dispatch(slot_client0, 0.0, client_pms)
         active = np.ones((m,), bool)
@@ -791,24 +920,27 @@ class AsyncScheduler:
         sim_clock = 0.0
         version = 0
 
+        n_edges = cfg.execution.edge_groups
+        edge_ids = edge_partition(c, n_edges) if n_edges >= 1 else None
+        layer_sizes = np.diff(clock_fn.params_prefix)
+        edge_hist: list[np.ndarray] = []
         accs, sel_hist, tx_hist, pms_hist = [], [], [], []
         times, wire_hist, clock_hist, stale_hist, flight_hist = [], [], [], [], []
         for t in range(cfg.rounds):
             n_active = int(active.sum())
             k = max(1, min(buffer_k, n_active))
             # earliest finishers land; ties break by client id (deterministic)
-            order = np.lexsort((slot_client, np.where(active, finish, np.inf)))
-            landers = order[:k]
+            landers = queue.pop_k(k)
             land = np.zeros((m,), bool)
             land[landers] = True
-            new_clock = float(finish[landers].max()) + comm.server_latency_s
+            land_finish = queue.finish[landers].copy()
+            new_clock = float(land_finish.max()) + comm.server_latency_s
             staleness = np.where(land, version - dispatch_version, 0).astype(np.int32)
             landed_clients = slot_client[landers]
             idle_now = ~in_flight_clients
             idle_now[landed_clients] = True
             force = bool(n_active - k == 0)
 
-            land_finish = finish[landers].copy()  # pre-update: queue's truth
             args = (
                 state,
                 jnp.asarray(t),
@@ -838,14 +970,31 @@ class AsyncScheduler:
             active = (active & ~land) | dispatched
             in_flight_clients[landed_clients] = False
             in_flight_clients[slot_client[dispatched]] = True
-            d_all = clock_fn.durations(client_pms)
-            finish = np.where(dispatched, new_clock + d_all[slot_client], finish)
+            # re-arm only the dispatched slots: subset-duration rows are
+            # bitwise the full-lane rows (elementwise model), so the event
+            # clock never materializes a (C,) vector per event
+            disp_slots = np.nonzero(dispatched)[0]
+            if disp_slots.size:
+                disp_cids = slot_client[disp_slots]
+                d_disp = clock_fn.durations(client_pms[disp_cids], cids=disp_cids)
+                for s, f, cid in zip(disp_slots, new_clock + d_disp, disp_cids):
+                    queue.push(int(s), float(f), int(cid))
             dispatch_version = np.where(dispatched, version + 1, dispatch_version)
 
             accs.append(out["acc"])
             sel_hist.append(np.asarray(out["selected"]))
             tx_hist.append(float(out["tx_params"]))
             pms_hist.append(out["pms"])
+            if n_edges >= 1:
+                # hop-2 bytes for this event's landers; the event clock
+                # itself stays flat (the edge forward leg is modeled in the
+                # sync barrier's round time only)
+                edge_hist.append(
+                    edge_hop_bytes(
+                        sel_hist[-1][None], np.asarray(out["pms"])[None],
+                        layer_sizes, edge_ids, n_edges,
+                    )[0]
+                )
             wire_hist.append(np.asarray(out["wire_per_client"], np.float64).sum())
             times.append(new_clock - sim_clock)
             clock_hist.append(new_clock)
@@ -888,6 +1037,7 @@ class AsyncScheduler:
             sim_clock=np.asarray(clock_hist),
             staleness_mean=np.asarray(stale_hist),
             in_flight=np.asarray(flight_hist, np.int64),
+            tx_edge_bytes=np.stack(edge_hist) if n_edges >= 1 else None,
         )
         if recorder is not None:
             recorder.close(h)

@@ -193,18 +193,32 @@ class RunRecorder:
     # -- lifecycle ---------------------------------------------------------
     def open_run(self, *, mode: str, cfg, data, comm, clock,
                  lanes: int | None = None, buffer_k: int | None = None,
-                 mesh=None):
+                 mesh=None, population_plane: dict | None = None):
         """Called by the scheduler before its first event. ``clock`` is the
         scheduler's ``ClientClock`` (span components come from it), ``comm``
         its ``CommModel``, ``lanes`` the cohort size K (sync) or slot count
         M (async), ``mesh`` the cohort device mesh when the round step is
-        sharded (repro.fl.shard) — None for single-device execution."""
+        sharded (repro.fl.shard) — None for single-device execution.
+        ``population_plane`` overrides the population-tier manifest block
+        (the host runners pass store backing details the config alone
+        doesn't know); by default it is derived from ``cfg.execution``."""
         if self._metrics is not None:
             raise ValueError(f"recorder already opened for a {self._mode!r} run")
         os.makedirs(self.out_dir, exist_ok=True)
         self._mode = mode
         self._clock = clock
         self._comm = comm
+        if population_plane is None:
+            exec_cfg = getattr(cfg, "execution", None)
+            population_plane = {
+                "host_population": bool(
+                    exec_cfg.resolved_host_population(data.n_clients)
+                ) if exec_cfg is not None else False,
+                "edge_groups": (
+                    int(exec_cfg.edge_groups) if exec_cfg is not None else 0
+                ),
+                "store_backing": None,
+            }
         snapshot = config_snapshot(cfg)
         chash = config_hash(snapshot)
         self._manifest = {
@@ -222,6 +236,10 @@ class RunRecorder:
                 "devices": int(mesh.size),
             },
             "seed": int(cfg.seed),
+            # population tier: host-resident population plane + edge topology
+            # (repro.fl.population); flat device-resident runs record the
+            # defaults so every manifest is comparable
+            "population_plane": population_plane,
             "config": snapshot,
             "config_hash": chash,
             "environment": environment_snapshot(),
@@ -288,10 +306,14 @@ class RunRecorder:
         self._t += 1
 
     def on_sync_chunk(self, *, t0: int, acc, sel, pms, wire, tx, times,
-                      update_norm, lanes: int):
+                      update_norm, lanes: int, host_gather_ms=None,
+                      staged_bytes=None):
         """Record one fused chunk from its stacked ``(n, C)`` out leaves —
         one vectorized pass over the chunk, no extra device sync (the
-        scheduler already holds the numpy arrays)."""
+        scheduler already holds the numpy arrays). ``host_gather_ms`` /
+        ``staged_bytes`` are the host-population runners' per-round staging
+        costs ((n,) sequences); the columns appear only on host-plane
+        runs."""
         n = acc.shape[0]
         acc_mean = acc.mean(axis=1)
         acc_min = acc.min(axis=1)
@@ -327,6 +349,11 @@ class RunRecorder:
                 tb.instant("aggregate", PID_SERVER, 0, s1,
                            {"t": t, "clock_s": s1, "n_landed": int(n_sel[i]),
                             "staleness_mean": 0.0})
+            extra = {}
+            if host_gather_ms is not None:
+                extra["host_gather_ms"] = float(host_gather_ms[i])
+            if staged_bytes is not None:
+                extra["staged_bytes"] = float(staged_bytes[i])
             self._row(
                 t=int(t0 + i),
                 acc_mean=float(acc_mean[i]),
@@ -341,6 +368,7 @@ class RunRecorder:
                 staleness_mean=0.0,
                 in_flight=int(lanes),
                 buffer_k=None,
+                **extra,
             )
             self._sim_clock = s1
         if tb is not None:

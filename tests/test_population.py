@@ -1,0 +1,480 @@
+"""Population-tier tests: host-resident population plane (repro.fl.population),
+heap event queue, lazy client clock, sharded lazy data generator, and
+hierarchical edge aggregation.
+
+The load-bearing guarantee is bit-identity: forcing the host plane
+(``host_population=1``) must reproduce the committed golden trajectories
+byte for byte — the cohort jit replays the device round step's exact phase
+composition and rng splits on staged rows, and whole-population evaluation
+(``eval_chunk=0``) bakes the test slabs in as jit constants exactly like
+the device env (XLA folds constant mask-sum denominators into
+reciprocal-multiplies, so args-vs-constants is a 1-ulp difference — the
+host plane closes over them for exactness).
+"""
+
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import HOST_POPULATION_THRESHOLD, ExecutionConfig
+from repro.core.metrics import CommModel
+from repro.data import make_federated_classification
+from repro.data.synthetic import ShardedFederatedData, make_sharded_population
+from repro.fl import FLConfig, run_federated
+from repro.fl.population import PopulationStore, run_host_async, run_host_sync
+from repro.fl.sched import ClientClock, EventQueue
+
+from test_fl_api import _GOLDEN  # the 4 committed golden trajectories
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dev dependency (see tests/test_property.py)
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    return make_federated_classification(
+        n_clients=8, n_classes=4, n_features=20,
+        samples_per_client_range=(60, 90), dirichlet_alpha=50.0,
+        client_shift=0.05, class_sep=5.0, seed=1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# PopulationStore: gather/scatter identity, copies, memmap backing
+# ---------------------------------------------------------------------------
+
+
+def _demo_store(c=32, backing_dir=None, seed=0):
+    rng = np.random.default_rng(seed)
+    store = PopulationStore(c, backing_dir=backing_dir)
+    store.add_lane("accuracy", rng.random(c).astype(np.float32))
+    store.add_lane("pms", rng.integers(1, 4, c).astype(np.int32))
+    template = [
+        (np.zeros((5, 3), np.float32), np.zeros((3,), np.float32)),
+        (np.zeros((3, 2), np.float32), np.zeros((2,), np.float32)),
+    ]
+    store.add_tree("local", template, init="zeros")
+    for leaf in jax.tree.leaves(store.trees["local"]):
+        leaf[...] = rng.normal(size=leaf.shape).astype(np.float32)
+    return store
+
+
+def _snapshot(store):
+    return (
+        {k: v.copy() for k, v in store.lanes.items()},
+        {k: jax.tree.map(np.array, t) for k, t in store.trees.items()},
+    )
+
+
+def _assert_store_equal(store, lanes, trees):
+    for k, v in lanes.items():
+        np.testing.assert_array_equal(store.lanes[k], v)
+    for k, t in trees.items():
+        for got, want in zip(jax.tree.leaves(store.trees[k]), jax.tree.leaves(t)):
+            np.testing.assert_array_equal(got, want)
+
+
+def _roundtrip(store, idx):
+    lanes, trees = _snapshot(store)
+    names = [*store.lanes, *store.trees]
+    store.scatter(idx, store.gather(idx, names))
+    _assert_store_equal(store, lanes, trees)
+
+
+def test_scatter_gather_is_identity_seeded():
+    # the always-on property pass (hypothesis variant below when available):
+    # scatter(idx, gather(idx)) must leave the store bitwise unchanged for
+    # arbitrary index multisets, duplicates and empties included
+    store = _demo_store()
+    rng = np.random.default_rng(7)
+    for trial in range(25):
+        n = int(rng.integers(0, store.n_clients + 1))
+        idx = rng.integers(0, store.n_clients, n)  # duplicates welcome
+        _roundtrip(store, idx)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        idx=st.lists(st.integers(min_value=0, max_value=15), max_size=40),
+        seed=st.integers(min_value=0, max_value=5),
+    )
+    def test_scatter_gather_is_identity_hypothesis(idx, seed):
+        store = _demo_store(c=16, seed=seed)
+        _roundtrip(store, np.asarray(idx, np.int64))
+
+
+def test_gather_returns_mutation_safe_copies():
+    store = _demo_store()
+    lanes, trees = _snapshot(store)
+    got = store.gather(np.arange(4), ["accuracy", "local"])
+    got["accuracy"][:] = -1.0
+    for leaf in jax.tree.leaves(got["local"]):
+        leaf[:] = -1.0
+    _assert_store_equal(store, lanes, trees)
+
+
+def test_lane_leading_dim_validated():
+    store = PopulationStore(8)
+    with pytest.raises(ValueError, match="leading dim"):
+        store.add_lane("accuracy", np.zeros((4,)))
+    with pytest.raises(KeyError):
+        store.gather(np.arange(2), ["missing"])
+
+
+def test_build_allocates_only_needed_trees():
+    g0 = [(np.ones((4, 2), np.float32), np.ones((2,), np.float32))]
+    lanes = {"accuracy": np.zeros((6,), np.float32)}
+    assert PopulationStore.build(6, lanes).trees == {}
+    s = PopulationStore.build(6, lanes, g0=g0, stateful=True, lossy=True)
+    assert set(s.trees) == {"local", "residual"}
+    # broadcast vs zero init
+    np.testing.assert_array_equal(s.trees["local"][0][0][3], g0[0][0])
+    assert not s.trees["residual"][0][0].any()
+    assert s.nbytes() > 6 * 4
+
+
+def test_memmap_backing_roundtrip(tmp_path):
+    backing = str(tmp_path / "pop")
+    store = _demo_store(backing_dir=backing)
+    assert all(
+        isinstance(leaf, np.memmap) for leaf in jax.tree.leaves(store.trees["local"])
+    )
+    idx = np.asarray([3, 0, 9])
+    rows = store.gather(idx, ["local"])["local"]
+    bumped = jax.tree.map(lambda r: r + 1.0, rows)
+    store.scatter(idx, {"local": bumped})
+    store.flush()
+    # the backing .npy files hold the scattered rows (reloadable cold)
+    disk = np.load(os.path.join(backing, "local_0.npy"), mmap_mode="r")
+    np.testing.assert_array_equal(disk[idx], bumped[0][0])
+    _roundtrip(store, idx)  # identity holds on the memmap path too
+
+
+def test_memmap_run_matches_ram_run(small_ds, tmp_path):
+    # a full stateful+lossy host run on memmap backing is bit-identical to
+    # the RAM-backed one, and leaves reloadable slabs behind
+    cfg = FLConfig(strategy="oort", personalization="ft", fraction=0.5,
+                   rounds=3, epochs=1, codec="int8", host_population=1)
+    stats: dict = {}
+    h_ram = run_host_sync(small_ds, cfg, stats=stats)
+    h_mm = run_host_sync(small_ds, cfg, backing_dir=str(tmp_path / "pop"))
+    for a, b in zip(h_ram, h_mm):
+        if a is not None:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    names = os.listdir(str(tmp_path / "pop"))
+    assert any(n.startswith("local_") for n in names)
+    assert any(n.startswith("residual_") for n in names)
+    assert {len(v) for v in stats.values()} == {cfg.rounds}
+    assert set(stats) == {"round_ms", "host_gather_ms", "staged_bytes"}
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: host plane vs the committed golden trajectories
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(_GOLDEN))
+def test_host_population_bit_identical_to_goldens(small_ds, name):
+    gold = _GOLDEN[name]
+    h = run_federated(
+        small_ds, FLConfig(rounds=5, epochs=1, host_population=1, **gold["cfg"])
+    )
+    got_acc = np.asarray(h.accuracy_mean, np.float32)
+    want_acc = np.frombuffer(bytes.fromhex(gold["acc_hex"]), np.dtype("<f4"))
+    np.testing.assert_array_equal(got_acc, want_acc)
+    got_sel = ["".join("1" if b else "0" for b in row) for row in np.asarray(h.selected)]
+    assert got_sel == gold["selected"]
+    assert h.tx_edge_bytes is None  # flat aggregation: no edge hop
+
+
+def test_eval_chunk_streaming_matches_whole_population(small_ds):
+    # eval rows are vmap-independent, so chunk size never changes which
+    # computation a row gets — but streamed windows pass the test slabs as
+    # jit *arguments* while eval_chunk=0 bakes them in as constants, and
+    # XLA folds a constant mask-sum denominator into a reciprocal-multiply:
+    # the documented 1-ulp divergence. Contract: chunked runs agree with
+    # each other bitwise (same codegen) and with the whole-population
+    # reduction to float32 ulp tolerance.
+    base = dict(rounds=4, epochs=1, host_population=1)
+    h0 = run_federated(small_ds, FLConfig(**base))
+    chunked = [
+        run_federated(small_ds, FLConfig(eval_chunk=chunk, **base))
+        for chunk in (3, 8)
+    ]
+    np.testing.assert_array_equal(
+        np.asarray(chunked[0].accuracy_per_client),
+        np.asarray(chunked[1].accuracy_per_client),
+    )
+    for hc in chunked:
+        np.testing.assert_allclose(
+            np.asarray(h0.accuracy_per_client),
+            np.asarray(hc.accuracy_per_client), rtol=1e-6, atol=1e-7,
+        )
+        np.testing.assert_array_equal(h0.selected, hc.selected)
+        np.testing.assert_array_equal(h0.pms, hc.pms)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical edge aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_edge_single_group_bit_identical_with_hop_accounting(small_ds):
+    # E=1 short-circuits to the exact flat aggregation expression: the
+    # golden trajectory must survive untouched, with the edge->server hop
+    # now accounted on top (client uplink accounting unchanged)
+    gold = _GOLDEN["acsp-fl+dld+float32"]
+    flat = run_federated(small_ds, FLConfig(rounds=5, epochs=1, host_population=1))
+    h = run_federated(
+        small_ds, FLConfig(rounds=5, epochs=1, host_population=1, edge_groups=1)
+    )
+    want_acc = np.frombuffer(bytes.fromhex(gold["acc_hex"]), np.dtype("<f4"))
+    np.testing.assert_array_equal(np.asarray(h.accuracy_mean, np.float32), want_acc)
+    assert h.tx_edge_bytes is not None and h.tx_edge_bytes.shape == (5, 1)
+    assert (h.tx_edge_bytes > 0).all()
+    np.testing.assert_array_equal(h.tx_wire_bytes, flat.tx_wire_bytes)
+    # the extra hop only ever slows the simulated round down
+    assert (h.round_time >= flat.round_time - 1e-12).all()
+
+
+def test_edge_multi_group_close_and_accounted(small_ds):
+    # E>1 changes the reduction tree (edge partial sums) — trajectory holds
+    # to float32 reassociation tolerance, and every hop is accounted
+    flat = run_federated(small_ds, FLConfig(rounds=4, epochs=1, host_population=1))
+    h = run_federated(
+        small_ds, FLConfig(rounds=4, epochs=1, host_population=1, edge_groups=3)
+    )
+    assert h.tx_edge_bytes.shape == (4, 3)
+    assert h.tx_edge_bytes.sum() > 0
+    np.testing.assert_allclose(
+        np.asarray(h.accuracy_mean), np.asarray(flat.accuracy_mean), atol=2e-5
+    )
+    assert np.isfinite(h.round_time).all()
+
+
+# ---------------------------------------------------------------------------
+# heap-backed EventQueue vs the lexsort reference
+# ---------------------------------------------------------------------------
+
+
+def _lexsort_pop_k(finish, clients, live, k):
+    """The replaced implementation: full lexsort over every slot per event."""
+    order = np.lexsort((clients, np.where(live, finish, np.inf)))
+    take = order[:k]
+    assert live[take].all()
+    return take
+
+
+def test_event_queue_matches_lexsort_on_random_sequences():
+    rng = np.random.default_rng(0)
+    for trial in range(8):
+        m = int(rng.integers(2, 13))
+        q = EventQueue(m)
+        finish = np.zeros(m)
+        clients = np.zeros(m, np.int64)
+        live = np.zeros(m, bool)
+        next_client = 0
+        now = 0.0
+        for slot in range(m):
+            clients[slot], next_client = next_client, next_client + 1
+            finish[slot] = now + float(rng.exponential()) + 1e-9
+            live[slot] = True
+            q.push(slot, finish[slot], int(clients[slot]))
+        for _ in range(60):
+            k = int(rng.integers(1, live.sum() + 1))
+            want = _lexsort_pop_k(finish, clients, live, k)
+            got = q.pop_k(k)
+            np.testing.assert_array_equal(got, want)
+            np.testing.assert_array_equal(q.finish[got], finish[got])
+            now = float(finish[got].max())
+            live[got] = False
+            n_rearm = int(rng.integers(0, len(got) + 1))
+            for slot in got[:n_rearm]:
+                clients[slot], next_client = next_client, next_client + 1
+                finish[slot] = now + float(rng.exponential()) + 1e-9
+                live[slot] = True
+                q.push(int(slot), finish[slot], int(clients[slot]))
+            if not live.any():
+                break
+
+
+def test_event_queue_stale_entries_skipped():
+    q = EventQueue(2)
+    q.push(0, 5.0, client=10)   # superseded below
+    q.push(1, 2.0, client=11)
+    q.push(0, 1.0, client=12)   # re-arm slot 0 earlier: old entry goes stale
+    np.testing.assert_array_equal(q.pop_k(2), [0, 1])
+    assert q.finish[0] == 1.0
+
+
+def test_event_queue_finish_client_tiebreak():
+    q = EventQueue(3)
+    q.push(0, 1.0, client=30)
+    q.push(1, 1.0, client=10)   # same finish: lower client id pops first
+    q.push(2, 1.0, client=20)
+    np.testing.assert_array_equal(q.pop_k(3), [1, 2, 0])
+
+
+# ---------------------------------------------------------------------------
+# lazy ClientClock delay lane
+# ---------------------------------------------------------------------------
+
+
+def _clock(c, sigma, seed=3, delay=None):
+    prefix = np.concatenate([[0], np.cumsum([40, 30, 20])]).astype(np.float64)
+    return ClientClock(
+        comm=CommModel(), n_samples=np.full(c, 32.0), epochs=2,
+        params_prefix=prefix, wire_prefix=prefix * 4.0,
+        heterogeneity=sigma, delay_seed=seed, n_clients=c, _delay=delay,
+    )
+
+
+def test_clock_delay_is_lazy_and_stream_stable():
+    clock = _clock(16, sigma=0.7)
+    assert clock._delay is None and not clock.uniform
+    want = np.random.default_rng(3 + 4242).lognormal(0.0, 0.7, 16)
+    np.testing.assert_array_equal(clock.delay, want)  # same stream as ever
+
+
+def test_uniform_clock_never_materializes_the_lane():
+    clock = _clock(10**6, sigma=0.0)
+    assert clock.uniform and clock._delay is None  # checked without sampling
+    d = clock.durations(np.full(5, 2), cids=np.arange(5))
+    assert d.shape == (5,) and clock._delay is None  # O(|subset|) per event
+    np.testing.assert_array_equal(clock.delay, np.ones(10**6))
+
+
+def test_clock_subset_rows_bitwise_equal_full_lane():
+    clock = _clock(64, sigma=1.1)
+    pms = np.random.default_rng(0).integers(0, 4, 64)
+    cids = np.asarray([5, 63, 5, 17, 0])
+    np.testing.assert_array_equal(
+        clock.durations(pms[cids], cids=cids), clock.durations(pms)[cids]
+    )
+    rx_s, tr_s, tot_s = clock.component_times(pms[cids], cids=cids)
+    rx, tr, tot = clock.component_times(pms)
+    for sub, full in ((rx_s, rx), (tr_s, tr), (tot_s, tot)):
+        np.testing.assert_array_equal(sub, full[cids])
+
+
+def test_clock_explicit_delay_lane_still_respected():
+    delay = np.full(8, 3.0)
+    clock = _clock(8, sigma=0.0, delay=delay)
+    assert not clock.uniform
+    np.testing.assert_array_equal(clock.delay, delay)
+    assert dataclasses.replace(clock, _delay=None).uniform
+
+
+# ---------------------------------------------------------------------------
+# lazy sharded population generator
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_shard_matches_materialized_rows():
+    pop = make_sharded_population(
+        n_clients=12, n_classes=3, n_features=8,
+        samples_per_client_range=(10, 16), seed=3,
+    )
+    full = pop.materialize()
+    idx = np.asarray([7, 2, 2, 11, 0])  # duplicates regenerate identically
+    x_tr, y_tr, m_tr, x_te, y_te, m_te = pop.shard(idx)
+    np.testing.assert_array_equal(x_tr, full.x_train[idx])
+    np.testing.assert_array_equal(y_tr, full.y_train[idx])
+    np.testing.assert_array_equal(m_tr, full.m_train[idx])
+    np.testing.assert_array_equal(x_te, full.x_test[idx])
+    np.testing.assert_array_equal(y_te, full.y_test[idx])
+    np.testing.assert_array_equal(m_te, full.m_test[idx])
+
+
+def test_sharded_meta_is_cheap_at_large_c():
+    c = 200_000
+    pop = make_sharded_population(
+        n_clients=c, n_classes=4, n_features=16,
+        samples_per_client_range=(24, 32), seed=0,
+    )
+    meta_bytes = (
+        pop.counts.nbytes + pop.props.nbytes + pop.tr_counts.nbytes
+        + pop.te_counts.nbytes + pop.means.nbytes
+    )
+    assert meta_bytes < 100 * c  # a few hundred bytes/client, no data slabs
+    assert not hasattr(pop, "x_train")
+    assert pop.shard(np.asarray([0, c - 1]))[0].shape[0] == 2
+
+
+def test_sharded_data_auto_routes_to_host_plane():
+    # no eager x_train slab -> the sync scheduler must delegate to the host
+    # plane even below the auto threshold
+    pop = make_sharded_population(
+        n_clients=16, n_classes=3, n_features=8,
+        samples_per_client_range=(10, 14), seed=0,
+    )
+    assert isinstance(pop, ShardedFederatedData)
+    h = run_federated(
+        pop,
+        FLConfig(strategy="fedavg", personalization="none", fraction=0.5,
+                 rounds=3, epochs=1, cohort_size=4),
+    )
+    assert h.accuracy_mean.shape == (3,)
+    assert np.isfinite(h.accuracy_mean).all()
+    assert (h.in_flight == 4).all()
+
+
+# ---------------------------------------------------------------------------
+# async host plane vs the device-resident async scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_async_host_plane_matches_device(small_ds):
+    # stateful (ft) + lossy (int8): exercises the local AND residual trees
+    # through dispatch snapshots, landing scatters, and the heap clock
+    base = dict(strategy="oort", personalization="ft", fraction=0.5,
+                codec="int8", rounds=5, epochs=1, scheduler="async",
+                buffer_k=3, max_concurrency=4, heterogeneity=0.8)
+    h_dev = run_federated(small_ds, FLConfig(host_population=-1, **base))
+    h_host = run_federated(small_ds, FLConfig(host_population=1, **base))
+    for field, a, b in zip(h_dev._fields, h_dev, h_host):
+        if a is None:
+            assert b is None
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"async field {field!r} diverged"
+        )
+
+
+def test_async_host_rejects_sync_aggregator(small_ds):
+    from repro.fl.api import pipeline_from_config
+
+    cfg = FLConfig(scheduler="async", rounds=2, epochs=1, host_population=1)
+    sync_pipe = pipeline_from_config(
+        FLConfig(rounds=2, epochs=1)  # sync-mode pipeline: FedAvg-family agg
+    )
+    with pytest.raises(ValueError, match="dispatch snapshots"):
+        run_host_async(small_ds, cfg, pipeline=sync_pipe)
+
+
+# ---------------------------------------------------------------------------
+# placement resolution
+# ---------------------------------------------------------------------------
+
+
+def test_resolved_host_population_placement():
+    auto = ExecutionConfig()
+    assert not auto.resolved_host_population(100)
+    assert auto.resolved_host_population(HOST_POPULATION_THRESHOLD)
+    assert ExecutionConfig(host_population=1).resolved_host_population(2)
+    assert not ExecutionConfig(host_population=-1).resolved_host_population(10**7)
+    # the sharded executor owns its placement: auto never overrides it
+    assert not ExecutionConfig(cohort_devices=2).resolved_host_population(10**7)
+    with pytest.raises(ValueError, match="cohort_devices"):
+        ExecutionConfig(host_population=1, cohort_devices=2)
+    with pytest.raises(ValueError, match="host_population"):
+        ExecutionConfig(host_population=5)

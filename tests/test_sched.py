@@ -149,7 +149,7 @@ def test_client_clock_prefix_matches_mask_matmul(small_ds):
     # durations scale with the delay lane and include both directions + flops
     d = clock.durations(np.full(8, 4))
     assert (d > 0).all()
-    clock2 = dataclasses.replace(clock, delay=np.full(8, 3.0))
+    clock2 = dataclasses.replace(clock, _delay=np.full(8, 3.0))
     np.testing.assert_allclose(clock2.durations(np.full(8, 4)), 3.0 * d, rtol=1e-12)
 
 
