@@ -25,11 +25,16 @@
 # `validate-bench-pop` re-checks the BENCH_pop.json envelope (step-time
 # sublinearity held, zero population-sized device slabs, both aggregation
 # hops accounted in the edge-topology row).
+# The fault smoke (benchmarks/fault_bench.py, also in bench-smoke) runs the
+# failure-semantics grid — 30% dropout + deadline across both schedulers —
+# with its <=2x-rounds-to-target convergence gate and the async in-flight
+# invariant, and `validate-bench-fault` re-checks the BENCH_fault.json
+# envelope (gate held, retries bounded, concurrency never exceeded).
 # `make test-all` also covers the `multidevice` tests tier-1 skips.
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all bench-smoke bench validate-trace validate-bench-serve validate-bench-shard validate-bench-pop ci
+.PHONY: test test-all bench-smoke bench validate-trace validate-bench-serve validate-bench-shard validate-bench-pop validate-bench-fault ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -56,4 +61,7 @@ validate-bench-shard:
 validate-bench-pop:
 	$(PY) -c "import json; e = json.load(open('BENCH_pop.json')); assert e['schema_version'] >= 2 and e['bench'] == 'pop' and e['run_id'], 'bad envelope'; s = e['summary']; g = s['gates']; assert s['rows'] and g['sublinear_ok'] and g['c_slab_ok'] and g['watermark_ok'], 'pop gates not held'; assert all(r['staged_kb'] > 0 and r['step_ms'] > 0 for r in s['rows']), 'bad row'; ed = s['edge']; assert ed['edge_groups'] >= 2 and ed['hop1_client_edge_mb'] > 0 and ed['hop2_edge_server_mb'] > 0, 'edge hops unaccounted'; print('BENCH_pop.json ok:', e['run_id'])"
 
-ci: test-all bench-smoke validate-trace validate-bench-serve validate-bench-shard validate-bench-pop
+validate-bench-fault:
+	$(PY) -c "import json; e = json.load(open('BENCH_fault.json')); assert e['schema_version'] >= 2 and e['bench'] == 'fault' and e['run_id'], 'bad envelope'; s = e['summary']; assert s['rows'] and s['gate_all_pass'], 'fault convergence gate not held'; assert s['dropout_rate'] >= 0.3 and s['max_retries'] >= 0, 'bad sweep params'; assert all(r['gate_2x_pass'] and (r['mode'] != 'async' or r['max_in_flight'] <= 8) for r in s['rows']), 'bad row'; print('BENCH_fault.json ok:', e['run_id'])"
+
+ci: test-all bench-smoke validate-trace validate-bench-serve validate-bench-shard validate-bench-pop validate-bench-fault

@@ -1,0 +1,142 @@
+"""Failure-semantics grid — convergence under deterministic fault injection.
+
+For every (scheduler, solution) cell the suite runs a fault-free baseline
+and a faulty twin with 30% per-round client dropout (crash-before-upload)
+plus a round deadline, and reports rounds-to-target for both.  The headline
+robustness gate is the ISSUE's: with ``dropout_rate=0.3`` the run must
+still reach the fault-free target within <= 2x the fault-free round count
+(partial aggregation degrades K_effective instead of stalling the round).
+Async cells additionally exercise the retry/backoff path and hard-assert
+the in-flight invariant: retries never push concurrency past
+``max_concurrency``.
+
+Faults are seeded and cohort-order independent (repro.fl.faults), so every
+cell is reproducible bit-for-bit; the fault-free twins are bit-identical
+to runs of the same config without a FaultConfig at all.
+
+Smoke mode (REPRO_BENCH_SMOKE=1, via ``benchmarks.run --smoke``) shrinks
+rounds and the dataset; run standalone with
+``PYTHONPATH=src python -m benchmarks.fault_bench [--smoke]``.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+from benchmarks.common import ROUNDS, write_bench_json, write_csv
+from benchmarks.selection_bench import rounds_to_target
+from repro.data import make_har_dataset
+from repro.fl import FLConfig, run_federated
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+DROPOUT = 0.3
+# generous deadline: dropout is the dominant fault, the deadline only
+# sheds pathological stragglers (heterogeneity keeps clocks near-uniform)
+DEADLINE_S = 120.0
+
+SOLUTIONS = {
+    "fedavg": dict(strategy="fedavg", personalization="none", fraction=1.0),
+    "acsp-fl-dld": dict(strategy="acsp-fl", personalization="dld", decay=0.005),
+}
+
+ASYNC_KW = dict(buffer_k=4, max_concurrency=8, max_retries=2)
+
+
+def _cell(ds, mode: str, spec: dict, rounds: int, dropout: float) -> dict:
+    kw = dict(spec)
+    if mode == "async":
+        kw.update(ASYNC_KW)
+    if dropout > 0.0:
+        kw.update(dropout_rate=dropout, deadline_s=DEADLINE_S)
+    cfg = FLConfig(rounds=rounds, epochs=2, seed=0, scheduler=mode, **kw)
+    h = run_federated(ds, cfg)
+    if mode == "async":
+        max_flight = int(h.in_flight.max())
+        assert max_flight <= ASYNC_KW["max_concurrency"], (
+            f"in-flight {max_flight} exceeded max_concurrency "
+            f"{ASYNC_KW['max_concurrency']} (retry re-dispatch leak)"
+        )
+    rej = h.rejected_updates
+    return {
+        "history": h,
+        "final_accuracy": float(h.accuracy_mean[-1]),
+        "rounds": rounds,
+        "wire_mb": float(h.tx_bytes_cum[-1] / 1e6),
+        "rejected_total": int(0 if rej is None else np.asarray(rej).sum()),
+        "max_in_flight": int(h.in_flight.max()),
+    }
+
+
+def run():
+    base_rounds = 6 if SMOKE else ROUNDS
+    scale = 0.25 if SMOKE else 1.0
+    ds = make_har_dataset("uci-har", seed=0, scale=scale)
+    rows = []
+    records = []
+    all_pass = True
+    for mode in ("sync", "async"):
+        rounds_free = base_rounds if mode == "sync" else 2 * base_rounds
+        for sol, spec in SOLUTIONS.items():
+            free = _cell(ds, mode, spec, rounds_free, 0.0)
+            # the faulty twin gets the 2x budget the gate allows
+            fault = _cell(ds, mode, spec, 2 * rounds_free, DROPOUT)
+            # target: 95% of the fault-free run's best accuracy — what the
+            # healthy system demonstrably reaches in its round budget
+            target = 0.95 * float(free["history"].accuracy_mean.max())
+            r_free = rounds_to_target(free["history"].accuracy_mean, target)
+            r_fault = rounds_to_target(fault["history"].accuracy_mean, target)
+            gate = r_free >= 0 and 0 <= r_fault <= 2 * max(r_free, 1)
+            all_pass = all_pass and gate
+            rows.append([
+                mode, sol, f"{target:.4f}", r_free, r_fault,
+                f"{free['final_accuracy']:.4f}", f"{fault['final_accuracy']:.4f}",
+                fault["rejected_total"], "pass" if gate else "FAIL",
+            ])
+            records.append({
+                "mode": mode, "solution": sol,
+                "dropout_rate": DROPOUT, "deadline_s": DEADLINE_S,
+                "target_accuracy": target,
+                "rounds_to_target_free": r_free,
+                "rounds_to_target_fault": r_fault,
+                "final_accuracy_free": free["final_accuracy"],
+                "final_accuracy_fault": fault["final_accuracy"],
+                "wire_mb_free": free["wire_mb"],
+                "wire_mb_fault": fault["wire_mb"],
+                "rejected_total": fault["rejected_total"],
+                "max_in_flight": fault["max_in_flight"],
+                "gate_2x_pass": bool(gate),
+            })
+            print(
+                f"  {mode:5s} {sol:11s} target={target:.4f}  "
+                f"rounds free={r_free:3d} fault={r_fault:3d}  "
+                f"acc free={free['final_accuracy']:.4f} "
+                f"fault={fault['final_accuracy']:.4f}  "
+                f"{'pass' if gate else 'FAIL'}"
+            )
+    print(f"  -> 30% dropout <=2x-rounds gate: "
+          f"{'ALL PASS' if all_pass else 'FAILED'}")
+    write_bench_json("fault", {
+        "smoke": SMOKE,
+        "dropout_rate": DROPOUT,
+        "deadline_s": DEADLINE_S,
+        "max_retries": ASYNC_KW["max_retries"],
+        "gate_all_pass": all_pass,
+        "rows": records,
+    })
+    return write_csv(
+        "fault_bench",
+        ["mode", "solution", "target_acc", "rounds_free", "rounds_fault",
+         "final_acc_free", "final_acc_fault", "rejected_total", "gate"],
+        rows,
+    )
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv[1:]:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        SMOKE = True
+    run()

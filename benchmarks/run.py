@@ -29,6 +29,7 @@ def main() -> None:
         client_distribution,
         codec_bench,
         comm_overhead,
+        fault_bench,
         kernel_bench,
         loop_bench,
         obs_smoke,
@@ -53,6 +54,7 @@ def main() -> None:
         ("codec_bench (comm subsystem)", codec_bench.run),
         ("selection_bench (strategy x codec grid)", selection_bench.run),
         ("async_bench (sync vs async scheduler grid)", async_bench.run),
+        ("fault_bench (dropout/deadline robustness, resume-safe grid)", fault_bench.run),
         ("scale_bench (cohort O(K) vs dense O(C) rounds)", scale_bench.run),
         ("loop_bench (round-fused executor vs per-round dispatch)", loop_bench.run),
         ("shard_bench (cohort-sharded step, D-device strong scaling)", shard_bench.run),
@@ -66,8 +68,8 @@ def main() -> None:
             s for s in suites
             if s[0].split(" ")[0]
             in ("kernel_bench", "codec_bench", "selection_bench", "async_bench",
-                "scale_bench", "loop_bench", "shard_bench", "serve_bench",
-                "pop_bench", "obs_smoke")
+                "fault_bench", "scale_bench", "loop_bench", "shard_bench",
+                "serve_bench", "pop_bench", "obs_smoke")
         ]
     t00 = time.time()
     for name, fn in suites:

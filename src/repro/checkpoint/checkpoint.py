@@ -126,6 +126,26 @@ def load_pytree(template, directory: str, name: str = "ckpt"):
         return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(template), leaves)
 
 
+def save_host_arrays(arrays: dict, directory: str, name: str) -> str:
+    """Save a flat dict of host numpy arrays verbatim (one ``.npz``).
+
+    The schedulers' checkpoint path uses this for host-side run state and
+    accumulated history lanes: unlike ``load_pytree_auto``, loading never
+    routes through ``jnp`` — float64 accounting lanes (simulated round
+    times, wire bytes) round-trip bitwise even without x64 mode.
+    """
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"{name}.npz")
+    np.savez(path, **{k: np.asarray(v) for k, v in arrays.items()})
+    return path
+
+
+def load_host_arrays(directory: str, name: str) -> dict:
+    """Load a ``save_host_arrays`` dict back as plain numpy arrays."""
+    with np.load(os.path.join(directory, f"{name}.npz")) as data:
+        return {k: data[k].copy() for k in data.files}
+
+
 def save_fl_state(state_dict: dict, directory: str, round_idx: int) -> str:
     """Save a server-state dict (params trees + scalars) for round ``t``."""
     name = f"round_{round_idx:05d}"

@@ -503,6 +503,82 @@ class SchedulerConfig:
             )
 
 
+CORRUPTION_KINDS = ("nan", "inf", "scale")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Failure semantics for both schedulers (repro.fl.faults).
+
+    All knobs default OFF: a default ``FaultConfig`` injects nothing,
+    imposes no deadline, and the fault-free trajectory stays bit-identical
+    to the pre-fault schedulers (golden-guarded). The one always-on piece
+    of failure handling — the finite-delta guard that zero-masks NaN/Inf
+    client updates before aggregation — lives in the round steps
+    themselves and is independent of this config.
+
+    ``dropout_rate`` is the per-round probability a dispatched client
+    crashes before upload (its work is lost; it pays no wire and is masked
+    out of aggregation). ``deadline_s`` bounds the simulated round: under
+    the sync barrier, clients whose completion time exceeds it are dropped
+    from aggregation (K_effective < K) and the round costs at most the
+    deadline; under the async scheduler it is the per-slot timeout after
+    which a dispatch is retried. ``corrupt_rate`` is the per-round
+    probability a surviving client's update is corrupted (NaN / Inf /
+    scaled by ``corrupt_scale`` — kind drawn per event); corrupted updates
+    pay wire but are rejected by the finite guard. ``slow_rate`` /
+    ``slow_factor`` make transient stragglers: affected dispatches take
+    ``slow_factor``x their nominal duration that round (re-rolled per
+    round, so an async retry can succeed). ``max_retries`` caps async
+    re-dispatches per slot occupancy, with exponential backoff starting at
+    ``backoff_s``. ``max_update_norm`` extends the finite guard to reject
+    norm-exploded (but finite) deltas; 0 keeps the finite-only check.
+    ``fault_seed`` decouples the fault stream from the training seed.
+    """
+
+    dropout_rate: float = 0.0   # P(crash before upload) per dispatch-round
+    deadline_s: float = 0.0     # sync round deadline / async slot timeout;
+                                # 0 -> no deadline
+    corrupt_rate: float = 0.0   # P(update corrupted) per surviving dispatch
+    max_retries: int = 2        # async: re-dispatches per slot before freeing
+    slow_rate: float = 0.0      # P(transient slowdown) per dispatch-round
+    slow_factor: float = 4.0    # duration multiplier for slowed dispatches
+    corrupt_scale: float = 1e6  # multiplier for the 'scale' corruption kind
+    backoff_s: float = 1.0      # async retry backoff base (doubles per retry)
+    max_update_norm: float = 0.0  # guard ceiling on finite deltas; 0 -> off
+    fault_seed: int = 0         # folded with cfg.seed into the fault stream
+
+    def __post_init__(self):
+        for field in ("dropout_rate", "corrupt_rate", "slow_rate"):
+            v = getattr(self, field)
+            if not 0.0 <= v < 1.0:
+                raise ValueError(f"{field} must be in [0, 1), got {v!r}")
+        for field in ("deadline_s", "backoff_s", "max_update_norm"):
+            if getattr(self, field) < 0.0:
+                raise ValueError(
+                    f"{field} must be >= 0, got {getattr(self, field)!r}"
+                )
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries!r}"
+            )
+        if self.slow_factor < 1.0:
+            raise ValueError(
+                f"slow_factor must be >= 1, got {self.slow_factor!r}"
+            )
+
+    @property
+    def enabled(self) -> bool:
+        """Whether any fault-injection path is active (the schedulers build
+        their fault-aware step variants only when this is true)."""
+        return (
+            self.dropout_rate > 0.0
+            or self.deadline_s > 0.0
+            or self.corrupt_rate > 0.0
+            or self.slow_rate > 0.0
+        )
+
+
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
     """Server loop + local SGD hyperparameters (Algorithms 1 & 2)."""

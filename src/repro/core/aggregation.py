@@ -191,6 +191,33 @@ def staleness_weighted_merge(
     return out
 
 
+def finite_update_guard(
+    select_mask: jnp.ndarray,
+    update_norm: jnp.ndarray,
+    max_norm: float = 0.0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Validate client updates before any aggregator sees them.
+
+    A lane passes iff its transmitted ``update_norm`` is finite (and, when
+    ``max_norm > 0``, no larger than ``max_norm``). The update norm is
+    computed by the transmit phase over exactly the shared (post-codec)
+    pieces each client uploads, so any NaN/Inf anywhere in a client's
+    delta — and any norm explosion past the cap — surfaces here.
+
+    Returns ``(ok, n_rejected)``: the ``(lanes,)`` bool pass mask and the
+    int32 count of lanes that were *selected* but failed. Callers AND
+    ``ok`` into the aggregation selection mask (zero weight — the masked
+    partial path then degrades gracefully) and revert the rejected lanes'
+    local/residual state. On all-finite rounds ``ok`` is all-True and the
+    guarded expressions are bit-identical to the unguarded ones.
+    """
+    ok = jnp.isfinite(update_norm)
+    if max_norm > 0.0:
+        ok = ok & (update_norm <= max_norm)
+    n_rejected = jnp.sum(select_mask & ~ok).astype(jnp.int32)
+    return ok, n_rejected
+
+
 def transmitted_parameters(select_mask: jnp.ndarray, share_mask: jnp.ndarray, layer_sizes: jnp.ndarray) -> jnp.ndarray:
     """Analytic one-way transmitted parameter count for a round.
 

@@ -6,6 +6,7 @@ distributed runtime over a TPU mesh (repro.fl.cross_silo)."""
 from repro.fl.api import (
     CodecConfig,
     ExecutionConfig,
+    FaultConfig,
     FLConfig,
     PersonalizationConfig,
     RoundPipeline,
@@ -16,6 +17,7 @@ from repro.fl.api import (
     build_round_step,
     pipeline_from_config,
 )
+from repro.fl.faults import FaultPlan, compile_fault_plan
 from repro.fl.engine import FLHistory, make_round_step, run_federated
 from repro.fl.sched import AsyncScheduler, SyncScheduler, make_scheduler
 from repro.fl.shard import build_sharded_round_step
@@ -28,6 +30,9 @@ __all__ = [
     "SchedulerConfig",
     "ExecutionConfig",
     "TrainConfig",
+    "FaultConfig",
+    "FaultPlan",
+    "compile_fault_plan",
     "FLHistory",
     "RoundPipeline",
     "pipeline_from_config",

@@ -49,12 +49,13 @@ import jax.numpy as jnp
 from repro.configs.base import (
     CodecConfig,
     ExecutionConfig,
+    FaultConfig,
     PersonalizationConfig,
     SchedulerConfig,
     SelectionConfig,
     TrainConfig,
 )
-from repro.core.aggregation import transmitted_parameters
+from repro.core.aggregation import finite_update_guard, transmitted_parameters
 from repro.core.layersharing import layer_param_sizes, layer_share_mask
 from repro.data.synthetic import FederatedDataset
 from repro.fl import phases
@@ -68,6 +69,7 @@ __all__ = [
     "CodecConfig",
     "SchedulerConfig",
     "ExecutionConfig",
+    "FaultConfig",
     "TrainConfig",
     "RoundPipeline",
     "RoundState",
@@ -110,6 +112,10 @@ _FLAT_KEYS = {
     "host_population": ("execution", "host_population"),
     "eval_chunk": ("execution", "eval_chunk"),
     "edge_groups": ("execution", "edge_groups"),
+    "dropout_rate": ("faults", "dropout_rate"),
+    "deadline_s": ("faults", "deadline_s"),
+    "corrupt_rate": ("faults", "corrupt_rate"),
+    "max_retries": ("faults", "max_retries"),
 }
 
 _GROUP_TYPES = {
@@ -119,18 +125,19 @@ _GROUP_TYPES = {
     "train": TrainConfig,
     "scheduler": SchedulerConfig,
     "execution": ExecutionConfig,
+    "faults": FaultConfig,
 }
 
 
 @dataclasses.dataclass(frozen=True, init=False)
 class FLConfig:
-    """Federated experiment config: six nested validated sub-configs.
+    """Federated experiment config: seven nested validated sub-configs.
 
     Accepts either the nested objects (``selection=SelectionConfig(...)``)
     or the seed's flat kwargs (``strategy="oort", fraction=0.5, rounds=30,
-    codec="int8", cohort_size=64``) — but not both forms for the same
-    group. The seed's flat attributes (``cfg.strategy``, ``cfg.rounds``,
-    ...) remain readable.
+    codec="int8", cohort_size=64, dropout_rate=0.3``) — but not both forms
+    for the same group. The seed's flat attributes (``cfg.strategy``,
+    ``cfg.rounds``, ...) remain readable.
     """
 
     selection: SelectionConfig
@@ -139,9 +146,11 @@ class FLConfig:
     train: TrainConfig
     scheduler: SchedulerConfig
     execution: ExecutionConfig
+    faults: FaultConfig
 
     def __init__(self, selection=None, personalization=None, codec=None,
-                 train=None, scheduler=None, execution=None, **flat):
+                 train=None, scheduler=None, execution=None, faults=None,
+                 **flat):
         # string conveniences on the group params themselves: the seed's
         # FLConfig(personalization="dld", codec="int8") spelled the mode/spec
         # directly, so route strings into the flat namespace
@@ -163,7 +172,7 @@ class FLConfig:
             )
         given = {"selection": selection, "personalization": personalization,
                  "codec": codec, "train": train, "scheduler": scheduler,
-                 "execution": execution}
+                 "execution": execution, "faults": faults}
         grouped: dict[str, dict[str, Any]] = {g: {} for g in _GROUP_TYPES}
         for key, value in flat.items():
             group, attr = _FLAT_KEYS[key]
@@ -267,6 +276,22 @@ class FLConfig:
     @property
     def edge_groups(self) -> int:
         return self.execution.edge_groups
+
+    @property
+    def dropout_rate(self) -> float:
+        return self.faults.dropout_rate
+
+    @property
+    def deadline_s(self) -> float:
+        return self.faults.deadline_s
+
+    @property
+    def corrupt_rate(self) -> float:
+        return self.faults.corrupt_rate
+
+    @property
+    def max_retries(self) -> int:
+        return self.faults.max_retries
 
     def strategy_obj(self):
         return self.selection.strategy_obj()
@@ -391,10 +416,22 @@ def build_env(
     )
 
 
+def _tree_where(mask: jnp.ndarray, new, old):
+    """Per-lane select over ``(lanes, ...)`` trees; ``None`` passes through."""
+    if new is None:
+        return None
+    return jax.tree.map(
+        lambda n, o: jnp.where(mask.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+        new,
+        old,
+    )
+
+
 def build_round_step(
     env: phases.RoundEnv,
     pipeline: RoundPipeline,
     execution: ExecutionConfig | None = None,
+    faults: FaultConfig | None = None,
 ):
     """Compose a RoundPipeline into the jitted cohort-gathered round step.
 
@@ -420,16 +457,39 @@ def build_round_step(
     ``repro.fl.shard.build_sharded_round_step``: the same step with the
     compute phases shard_mapped over a ``cohort`` device mesh (K/D lanes
     per device, aggregation as shard-local partial sums + one psum).
+
+    Failure semantics: every step carries the always-on finite-delta guard
+    (``repro.core.aggregation.finite_update_guard``) — cohort lanes whose
+    transmitted ``update_norm`` is non-finite are zero-masked out of
+    aggregation, their local/residual state reverted, and counted in the
+    ``out["rejected"]`` leaf. When ``faults`` is an *enabled*
+    ``FaultConfig`` the returned step instead maps
+    ``(state, t, alive (C,) bool, corrupt (C,) int8) -> (state, out)``:
+    ``alive`` (crash/deadline survivors, computed host-side from the
+    round's ``repro.fl.faults.compile_fault_plan``) is intersected into
+    the selection before cohort resolution, and ``corrupt`` kinds rewrite
+    the trained params post-trainer so the guard rejects them. Fault-off
+    steps contain no fault ops at all — bit-identity with the committed
+    goldens is untouched.
     """
     execution = execution or ExecutionConfig()
+    faulty = faults is not None and faults.enabled
     if execution.cohort_devices != 0:
+        if faulty:
+            raise ValueError(
+                "fault injection composes with the cohort runtime and host "
+                "population plane but not with cohort_devices sharding; set "
+                "cohort_devices=0 or disable FaultConfig"
+            )
         from repro.fl.shard import build_sharded_round_step
 
         return build_sharded_round_step(env, pipeline, execution)
     cohort_k = execution.resolved_cohort(env.n_clients)
     stateful = pipeline.personalizer.stateful
+    max_norm = float(faults.max_update_norm) if faulty else 0.0
+    corrupt_scale = float(faults.corrupt_scale) if faulty else 0.0
 
-    def round_step(state: RoundState, t: jnp.ndarray):
+    def _round_body(state: RoundState, t: jnp.ndarray, alive, corrupt):
         g = state.global_params
         n_layers = len(g)
         share = layer_share_mask(n_layers, state.pms)  # (C, L)
@@ -441,8 +501,12 @@ def build_round_step(
             r_codec = None
 
         # --- gather: selection mask -> fixed-size cohort (K,) ---
-        idx = cohort_indices(state.select, cohort_k)
-        cmask = jnp.take(state.select, idx)
+        # crashed / past-deadline clients (fault mode) never enter the
+        # cohort: they trained nothing the server sees, pay no wire, and
+        # their lanes backfill from the remaining selected clients
+        select_in = state.select if alive is None else state.select & alive
+        idx = cohort_indices(select_in, cohort_k)
+        cmask = jnp.take(select_in, idx)
         # executed = selected AND inside the cohort bound; when the strategy
         # selects more than K clients the overflow neither trains nor pays
         # wire (at K = C executed == select exactly)
@@ -478,6 +542,16 @@ def build_round_step(
         cctx = cctx._replace(train_model=pipeline.personalizer.train_model(cctx, cenv))
         # --- local training on K lanes (invalid lanes discarded below) ---
         cctx = pipeline.trainer.fit(cctx, cenv)
+        if corrupt is not None:
+            # corrupt the trained params BEFORE transmit so the uploaded
+            # update_norm reflects the garbage and the finite guard below
+            # is what rejects it — corrupt clients still pay wire
+            from repro.fl.faults import apply_corruption
+
+            kinds_k = jnp.where(cmask, jnp.take(corrupt, idx), 0)
+            cctx = cctx._replace(
+                trained=apply_corruption(cctx.trained, kinds_k, corrupt_scale)
+            )
         if stateful:
             cctx = cctx._replace(
                 new_local=jax.tree.map(
@@ -489,7 +563,26 @@ def build_round_step(
                 )
             )
         # --- wire codec: compress each cohort lane's shared delta (uplink) ---
+        local_before = cctx.local_params if stateful else None
+        res_before = cctx.residual
         cctx = pipeline.transmit.transmit(cctx, cenv)
+        # --- finite-delta guard (always on): lanes whose transmitted norm
+        # is non-finite (or past max_update_norm in fault mode) are masked
+        # out of aggregation and their local/residual/norm state reverted —
+        # one bad client can no longer poison the global model ---
+        prev_norm = (
+            state.update_norm
+            if state.update_norm is not None
+            else jnp.zeros(state.select.shape, jnp.float32)
+        )
+        ok, n_rejected = finite_update_guard(cmask, cctx.update_norm, max_norm)
+        cctx = cctx._replace(
+            select=cmask & ok,
+            residual=_tree_where(ok, cctx.residual, res_before),
+            update_norm=jnp.where(ok, cctx.update_norm, jnp.take(prev_norm, idx)),
+        )
+        if stateful:
+            cctx = cctx._replace(new_local=_tree_where(ok, cctx.new_local, local_before))
         # --- aggregation of shared pieces (Eq. 1, masked/partial), K lanes ---
         cctx = pipeline.aggregator.aggregate(cctx, cenv)
 
@@ -498,11 +591,6 @@ def build_round_step(
             tree_scatter(state.local_params, idx, cctx.new_local) if stateful else None
         )
         new_residual = tree_scatter(state.residual, idx, cctx.residual)
-        prev_norm = (
-            state.update_norm
-            if state.update_norm is not None
-            else jnp.zeros(state.select.shape, jnp.float32)
-        )
         update_norm = prev_norm.at[idx].set(cctx.update_norm)
         wire_prospective, wire_paid = pipeline.transmit.wire_costs(
             g, share, executed
@@ -566,10 +654,22 @@ def build_round_step(
             # last-known compressed-delta norm per client, already carried
             # in the round state — an extra out leaf, no extra compute
             "update_norm": update_norm,
+            # finite-guard rejections this round (selected lanes whose
+            # transmitted update failed validation)
+            "rejected": n_rejected,
         }
         return new_state, out
 
-    return round_step
+    def round_step(state: RoundState, t: jnp.ndarray):
+        return _round_body(state, t, None, None)
+
+    if not faulty:
+        return round_step
+
+    def fault_round_step(state: RoundState, t: jnp.ndarray, alive, corrupt):
+        return _round_body(state, t, alive, corrupt)
+
+    return fault_round_step
 
 
 def build_chunk_step(round_step, length: int):

@@ -109,6 +109,13 @@ class FLHistory(NamedTuple):
                                    # (hop 1) stays in tx_bytes_cum /
                                    # tx_wire_bytes, so flat accounting is
                                    # unchanged by the extra tier.
+    rejected_updates: np.ndarray | None = None
+                                   # (T,) client updates zero-masked by the
+                                   # finite-delta guard (NaN/Inf or norm
+                                   # explosion past faults.max_update_norm)
+                                   # before aggregation; None only on
+                                   # history producers that predate the
+                                   # guard (identically 0 on healthy runs).
 
 
 def make_round_step(
@@ -141,6 +148,9 @@ def run_federated(
     pipeline: RoundPipeline | None = None,
     client_delay: np.ndarray | None = None,
     recorder=None,
+    checkpoint_every: int = 0,
+    resume_from: str | None = None,
+    checkpoint_dir: str | None = None,
 ) -> FLHistory:
     """Run ``cfg.rounds`` federated rounds (sync) or aggregation events
     (async) under the configured scheduler; returns host-side history.
@@ -156,6 +166,16 @@ def run_federated(
     history. Observation is pure host-side — a recorded run's device
     trajectory (and the committed goldens) is bit-identical to an
     unrecorded one — and ``recorder=None`` (default) costs nothing.
+
+    ``checkpoint_every=n`` snapshots the full resumable run state (round
+    state with its rng chain, host accounting history, and — on the host
+    population plane — the ``PopulationStore`` lanes) into
+    ``checkpoint_dir`` every n rounds through ``repro.checkpoint``;
+    ``resume_from=dir`` restarts from the latest snapshot there and
+    continues to ``cfg.rounds``, bit-identical to the uninterrupted run.
+    ``resume_from`` doubles as the write directory when ``checkpoint_dir``
+    is unset, so an interrupted run resumes AND keeps checkpointing with
+    one flag.
     """
     from repro.fl.sched import make_scheduler
 
@@ -170,4 +190,7 @@ def run_federated(
         pipeline=pipeline,
         client_delay=client_delay,
         recorder=recorder,
+        checkpoint_every=checkpoint_every,
+        checkpoint_dir=checkpoint_dir,
+        resume_from=resume_from,
     )

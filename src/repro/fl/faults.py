@@ -1,0 +1,113 @@
+"""Deterministic fault injection for the FL schedulers.
+
+A :class:`~repro.configs.base.FaultConfig` compiles, per round, into a
+:class:`FaultPlan` of full population-width ``(C,)`` lanes:
+
+- ``crash``   (bool)    — client crashes before upload this round;
+- ``slow``    (float64) — multiplier applied to the client's simulated
+  ``ClientClock`` duration (1.0 = nominal, ``slow_factor`` = straggler);
+- ``corrupt`` (int8)    — update corruption kind per ``CORRUPTION_KINDS``:
+  0 = none, 1 = NaN, 2 = Inf, 3 = scaled by ``corrupt_scale``.
+
+Determinism contract (property-tested in tests/test_faults.py): the plan
+is a pure function of ``(fault config, run seed, round index, client id)``.
+Every lane draws from its *own* ``SeedSequence`` child stream, so lane
+``i`` of any fault type is the ``i``-th draw of that stream — identical
+regardless of cohort composition, cohort order, population size prefix,
+or whether the run executes on the device-resident or host-population
+plane. Schedulers on both planes call this same function, which is what
+makes the device/host fault trajectories agree.
+
+The plan is host-side numpy: fault handling happens in the schedulers'
+per-round / per-event host code (masking selection, scaling durations,
+arming retries), and only the corruption kinds of the active cohort /
+landing slots cross to the device, where
+:func:`apply_corruption` rewrites the trained parameters *after* the
+trainer and *before* the transmit phase — so the transmitted
+``update_norm`` reflects the corruption and the always-on finite guard
+(:func:`repro.core.aggregation.finite_update_guard`) is what rejects it.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CORRUPTION_KINDS, FaultConfig
+
+__all__ = [
+    "CORRUPTION_KINDS",
+    "FaultPlan",
+    "compile_fault_plan",
+    "apply_corruption",
+]
+
+# Domain-separation tag so fault draws never collide with model init /
+# selection / codec streams derived from the same run seed.
+FAULT_TAG = 0xFA017
+
+
+class FaultPlan(NamedTuple):
+    """Per-round fault lanes over the full population (host numpy)."""
+
+    crash: np.ndarray  # (C,) bool   — crash-before-upload
+    slow: np.ndarray  # (C,) float64 — duration multiplier (>= 1.0)
+    corrupt: np.ndarray  # (C,) int8  — CORRUPTION_KINDS index, 0 = none
+
+
+def _lane_rng(seed: int, fault_seed: int, t: int, child: int) -> np.random.Generator:
+    ss = np.random.SeedSequence([FAULT_TAG, int(seed), int(fault_seed), int(t)])
+    return np.random.default_rng(ss.spawn(4)[child])
+
+
+def compile_fault_plan(
+    faults: FaultConfig, seed: int, t: int, n_clients: int
+) -> FaultPlan:
+    """Compile the seeded fault plan for round ``t`` into ``(C,)`` lanes.
+
+    Each fault type draws from its own spawned child stream, so lane ``i``
+    depends only on ``(faults, seed, t, i)`` — plans are prefix-stable in
+    ``n_clients`` and independent of cohort order/composition/placement.
+    """
+    c = int(n_clients)
+    if faults.dropout_rate > 0.0:
+        crash = _lane_rng(seed, faults.fault_seed, t, 0).random(c) < faults.dropout_rate
+    else:
+        crash = np.zeros((c,), dtype=bool)
+    if faults.slow_rate > 0.0:
+        slow_hit = _lane_rng(seed, faults.fault_seed, t, 1).random(c) < faults.slow_rate
+        slow = np.where(slow_hit, float(faults.slow_factor), 1.0)
+    else:
+        slow = np.ones((c,), dtype=np.float64)
+    if faults.corrupt_rate > 0.0:
+        hit = _lane_rng(seed, faults.fault_seed, t, 2).random(c) < faults.corrupt_rate
+        # kinds draw from their own child stream: sharing the hit stream
+        # would offset lane i's kind draw by c and break prefix stability
+        kind = _lane_rng(seed, faults.fault_seed, t, 3).integers(
+            1, len(CORRUPTION_KINDS) + 1, size=c
+        )
+        corrupt = np.where(hit, kind, 0).astype(np.int8)
+    else:
+        corrupt = np.zeros((c,), dtype=np.int8)
+    return FaultPlan(crash=crash, slow=slow, corrupt=corrupt)
+
+
+def apply_corruption(trees, kinds: jnp.ndarray, scale: float):
+    """Rewrite ``(lanes, ...)`` parameter trees per the corruption kinds.
+
+    ``kinds`` is an ``(lanes,)`` int lane: 0 leaves the lane untouched,
+    1 fills it with NaN, 2 with +Inf, 3 multiplies it by ``scale``.
+    Traced-safe (plain ``jnp.where``); kind-0 lanes are bit-identical to
+    the input, which keeps fault-free paths exactly on the goldens.
+    """
+
+    def leaf_fn(x):
+        k = kinds.reshape((-1,) + (1,) * (x.ndim - 1))
+        y = jnp.where(k == 1, jnp.asarray(jnp.nan, x.dtype), x)
+        y = jnp.where(k == 2, jnp.asarray(jnp.inf, x.dtype), y)
+        return jnp.where(k == 3, x * jnp.asarray(scale, x.dtype), y)
+
+    return jax.tree.map(leaf_fn, trees)

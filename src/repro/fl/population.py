@@ -51,7 +51,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import transmitted_parameters
+from repro.checkpoint.checkpoint import (
+    load_fl_state,
+    load_host_arrays,
+    load_pytree,
+    save_fl_state,
+    save_host_arrays,
+    save_pytree,
+)
+from repro.core.aggregation import finite_update_guard, transmitted_parameters
 from repro.core.layersharing import layer_param_sizes, layer_share_mask
 from repro.core.metrics import (
     BYTES_PER_PARAM,
@@ -60,8 +68,15 @@ from repro.core.metrics import (
     edge_partition,
 )
 from repro.fl import phases
-from repro.fl.api import FLConfig, RoundPipeline, pipeline_from_config
-from repro.fl.sched import ClientClock, EventQueue, _progress_rows
+from repro.fl.api import FLConfig, RoundPipeline, _tree_where, pipeline_from_config
+from repro.fl.faults import apply_corruption, compile_fault_plan
+from repro.fl.sched import (
+    ClientClock,
+    EventQueue,
+    _progress_rows,
+    _sync_fault_inputs,
+    resolve_checkpoint_dir,
+)
 from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
 from repro.obs.profile import phase_timer
 from repro.obs.record import format_async_progress, format_sync_progress
@@ -273,6 +288,14 @@ class _HostSetup:
         }
 
 
+def _restore_rows(dst, src):
+    """Copy a loaded leaf back into a live store leaf in place — memmap
+    leaves stay memmaps (the restored rows page straight to the backing
+    files on ``flush``)."""
+    dst[...] = np.asarray(src)
+    return dst
+
+
 def _population_plane_manifest(cfg: FLConfig, store: PopulationStore) -> dict:
     return {
         "host_population": True,
@@ -289,17 +312,28 @@ def _population_plane_manifest(cfg: FLConfig, store: PopulationStore) -> dict:
 
 
 def _build_cohort_step(pipeline: RoundPipeline, n_layers: int, k: int,
-                       population: int, loss_fn, acc_fn):
+                       population: int, loss_fn, acc_fn, faults=None):
     """The staged-cohort compute step: the device round step's
     personalize -> fit -> transmit -> aggregate segment, replayed on the
     gathered ``(K, ...)`` rows with the same rng-lane splits. Returns the
     merged global, the cohort's new local/residual/update-norm rows, the
-    carried rng, and the selection key the population step consumes."""
+    finite-guard rejection count, the carried rng, and the selection key
+    the population step consumes.
+
+    Mirrors ``api.build_round_step``'s failure semantics exactly: the
+    finite-delta guard is always on (same ops in the same order, so
+    healthy rows stay bit-identical to the device-resident path), and an
+    enabled ``faults`` adds one trailing ``corrupt_k (K,) int32`` argument
+    whose kinds rewrite the trained params post-trainer."""
     stateful = pipeline.personalizer.stateful
     lossy = pipeline.transmit.lossy
+    faulty = faults is not None and faults.enabled
+    max_norm = float(faults.max_update_norm) if faulty else 0.0
+    corrupt_scale = float(faults.corrupt_scale) if faulty else 0.0
 
-    def cohort_step(g, rng, t, idx, cmask, pms_k, participation_k,
-                    local_k, residual_k, data_k, n_samples_k, delay_k):
+    def _cohort_body(g, rng, t, idx, cmask, pms_k, participation_k,
+                     local_k, residual_k, data_k, n_samples_k, delay_k,
+                     prev_un_k, corrupt_k):
         share_k = layer_share_mask(n_layers, pms_k)
         if lossy:
             rng, r_fit, r_sel, r_codec = jax.random.split(rng, 4)
@@ -329,6 +363,14 @@ def _build_cohort_step(pipeline: RoundPipeline, n_layers: int, k: int,
         )
         cctx = cctx._replace(train_model=pipeline.personalizer.train_model(cctx, cenv))
         cctx = pipeline.trainer.fit(cctx, cenv)
+        if corrupt_k is not None:
+            # corrupt the trained params BEFORE transmit so the uploaded
+            # update_norm reflects the garbage and the finite guard below
+            # is what rejects it — corrupt clients still pay wire
+            kinds_k = jnp.where(cmask, corrupt_k, 0)
+            cctx = cctx._replace(
+                trained=apply_corruption(cctx.trained, kinds_k, corrupt_scale)
+            )
         if stateful:
             cctx = cctx._replace(
                 new_local=jax.tree.map(
@@ -339,12 +381,41 @@ def _build_cohort_step(pipeline: RoundPipeline, n_layers: int, k: int,
                     pipeline.personalizer.local_fallback(cctx, cenv),
                 )
             )
+        local_before = cctx.local_params if stateful else None
+        res_before = cctx.residual
         cctx = pipeline.transmit.transmit(cctx, cenv)
+        # finite-delta guard (always on) — same expressions as the device
+        # round step, so all-finite rounds are bit-identical to it
+        ok, n_rejected = finite_update_guard(cmask, cctx.update_norm, max_norm)
+        cctx = cctx._replace(
+            select=cmask & ok,
+            residual=_tree_where(ok, cctx.residual, res_before),
+            update_norm=jnp.where(ok, cctx.update_norm, prev_un_k),
+        )
+        if stateful:
+            cctx = cctx._replace(new_local=_tree_where(ok, cctx.new_local, local_before))
         cctx = pipeline.aggregator.aggregate(cctx, cenv)
         return (cctx.new_global, cctx.new_local, cctx.residual,
-                cctx.update_norm, rng, r_sel)
+                cctx.update_norm, n_rejected, rng, r_sel)
 
-    return jax.jit(cohort_step)
+    def cohort_step(g, rng, t, idx, cmask, pms_k, participation_k,
+                    local_k, residual_k, data_k, n_samples_k, delay_k,
+                    prev_un_k):
+        return _cohort_body(g, rng, t, idx, cmask, pms_k, participation_k,
+                            local_k, residual_k, data_k, n_samples_k, delay_k,
+                            prev_un_k, None)
+
+    if not faulty:
+        return jax.jit(cohort_step)
+
+    def fault_cohort_step(g, rng, t, idx, cmask, pms_k, participation_k,
+                          local_k, residual_k, data_k, n_samples_k, delay_k,
+                          prev_un_k, corrupt_k):
+        return _cohort_body(g, rng, t, idx, cmask, pms_k, participation_k,
+                            local_k, residual_k, data_k, n_samples_k, delay_k,
+                            prev_un_k, corrupt_k)
+
+    return jax.jit(fault_cohort_step)
 
 
 def _build_eval_step(pipeline: RoundPipeline, n_layers: int, population: int,
@@ -512,6 +583,9 @@ def run_host_sync(
     recorder=None,
     backing_dir: str | None = None,
     stats: dict | None = None,
+    checkpoint_every: int = 0,
+    checkpoint_dir: str | None = None,
+    resume_from: str | None = None,
 ):
     """The synchronous barrier loop with a host-resident population plane.
 
@@ -522,11 +596,27 @@ def run_host_sync(
     accounting are identical to ``SyncScheduler.run``; ``stats`` (optional
     dict) additionally collects per-round ``round_ms`` / ``host_gather_ms``
     / ``staged_bytes`` for the population benchmark.
+
+    Failure semantics and checkpoint/resume mirror ``SyncScheduler.run``:
+    an enabled ``cfg.faults`` masks crashed / past-deadline clients out of
+    the round before cohort resolution and deadline-caps the simulated
+    round time; ``checkpoint_every``/``resume_from`` snapshot and restore
+    the full run — global model, rng chain, every ``PopulationStore`` lane
+    and tree (memmap-backed included), and the accumulated history — so a
+    resumed run is bit-identical to an uninterrupted one.
     """
     from repro.fl.engine import FLHistory
 
     su = _HostSetup(data, cfg, init_fn, loss_fn, acc_fn, comm, pipeline, client_delay)
     comm, clock = su.comm, su.clock
+    faults = cfg.faults
+    faulty = faults.enabled
+    if faulty and cfg.execution.edge_groups >= 1:
+        raise ValueError(
+            "fault injection with an edge_groups topology is not "
+            "supported yet; set edge_groups=0 or disable FaultConfig"
+        )
+    ckpt_dir = resolve_checkpoint_dir(checkpoint_every, checkpoint_dir, resume_from)
     c = data.n_clients
     k = cfg.execution.resolved_cohort(c)
     eval_every = cfg.execution.eval_every
@@ -548,7 +638,8 @@ def run_host_sync(
     g = su.g0
     rng = su.r_loop
     cohort_step = _build_cohort_step(
-        su.pipeline, su.n_layers, k, c, loss_fn, acc_fn
+        su.pipeline, su.n_layers, k, c, loss_fn, acc_fn,
+        faults=faults if faulty else None,
     )
     pop_step = _build_pop_step(su.pipeline, su.n_layers, c, su.lw, su.sizes)
     eval_steps: dict = {}
@@ -564,12 +655,52 @@ def run_host_sync(
 
     accs, sel_hist, tx_hist, pms_hist, times, wire_hist = [], [], [], [], [], []
     edge_hist: list[np.ndarray] = []
-    for t in range(cfg.rounds):
+    rejected_hist: list[int] = []
+    start = 0
+    if resume_from is not None:
+        # latest snapshot: global model + rng via repro.checkpoint, the
+        # store's heavy trees restored row-for-row in place (memmap leaves
+        # stay memmaps), every lane + the history lanes verbatim
+        trees, meta = load_fl_state({"g": g, "rng": rng}, resume_from)
+        g = jax.tree.map(jnp.asarray, trees["g"])
+        rng = jnp.asarray(trees["rng"])
+        start = int(meta["round"])
+        if store.trees:
+            loaded = load_pytree(store.trees, resume_from, f"store_{start:05d}")
+            jax.tree.map(_restore_rows, store.trees, loaded)
+        host = load_host_arrays(resume_from, f"hist_{start:05d}")
+        for name in store.lanes:
+            store.lanes[name][...] = host[f"lane_{name}"]
+        store.flush()
+        accs = [row for row in host["acc"]]
+        sel_hist = [row for row in host["selected"]]
+        tx_hist = [float(x) for x in host["tx_params"]]
+        pms_hist = [row for row in host["pms"]]
+        times = [float(x) for x in host["round_time"]]
+        wire_hist = [float(x) for x in host["wire"]]
+        rejected_hist = [int(x) for x in host["rejected"]]
+        if "tx_edge_bytes" in host:
+            edge_hist = [host["tx_edge_bytes"]]
+    for t in range(start, cfg.rounds):
         t_round0 = time.perf_counter()
         if prof is not None:
             prof.begin_chunk(t, 1)
         # --- cohort resolution on the host lanes (== cohort_indices) ---
         select = store.lanes["select"]
+        if faulty:
+            # crash + deadline survivors resolved host-side, intersected
+            # into the selection before cohort resolution — exactly the
+            # device scheduler's alive-mask semantics
+            sel_pre = select.copy()
+            plan, alive_np, dur_t = _sync_fault_inputs(
+                faults, cfg.seed, t, clock, store.lanes["pms"]
+            )
+            if not (sel_pre & alive_np).any():
+                # a storm killed every selected client: the server
+                # re-dispatches until someone answers — run the round
+                # fault-free rather than aggregate nothing
+                alive_np = np.ones_like(alive_np)
+            select = select & alive_np
         idx = np.argsort(~select, kind="stable")[:k].astype(np.int32)
         cmask = select[idx]
         executed = np.zeros((c,), bool)
@@ -577,21 +708,31 @@ def run_host_sync(
         store.lanes["participation"][idx] += cmask
         # --- stage the cohort: store rows + data shard -> device args ---
         t_gather0 = time.perf_counter()
-        gathered = store.gather(idx, ["pms", "participation", *tree_names])
+        gathered = store.gather(
+            idx, ["pms", "participation", "update_norm", *tree_names]
+        )
         data_k = _data_shard(data, idx)
         local_k = gathered.get("local")
         residual_k = gathered.get("residual")
         staged_bytes = float(
             sum(a.nbytes for a in data_k)
             + gathered["pms"].nbytes + gathered["participation"].nbytes
+            + gathered["update_norm"].nbytes
             + sum(_tree_nbytes(gathered[n]) for n in tree_names)
         )
         gather_ms = (time.perf_counter() - t_gather0) * 1e3
+        step_args = (
+            g, rng, jnp.asarray(t), idx, cmask, gathered["pms"],
+            gathered["participation"], local_k, residual_k, data_k,
+            su.n_samples32[idx], su.delay_env[idx], gathered["update_norm"],
+        )
+        if faulty:
+            step_args = step_args + (
+                jnp.asarray(plan.corrupt[idx].astype(np.int32)),
+            )
         with phase_timer(prof, "dispatch"):
-            g, new_local_k, new_residual_k, un_k, rng, r_sel = cohort_step(
-                g, rng, jnp.asarray(t), idx, cmask, gathered["pms"],
-                gathered["participation"], local_k, residual_k, data_k,
-                su.n_samples32[idx], su.delay_env[idx],
+            g, new_local_k, new_residual_k, un_k, rej_d, rng, r_sel = (
+                cohort_step(*step_args)
             )
         # --- scatter the cohort's results back into the store ---
         with phase_timer(prof, "device_get"):
@@ -638,6 +779,17 @@ def run_host_sync(
                 rx_bytes=per_client_params[None] * float(BYTES_PER_PARAM),
                 delay=delay_acct,
             )
+        n_dropped = None
+        if faulty:
+            # the server waits on everyone it dispatched, but only up to
+            # the deadline: round time = slowest dispatched client at its
+            # fault-slowed duration, deadline-capped
+            wait = dur_t[sel_pre]
+            rt_t = float(wait.max()) if wait.size else 0.0
+            if faults.deadline_s > 0.0:
+                rt_t = min(rt_t, faults.deadline_s)
+            rt = np.asarray([rt_t + comm.server_latency_s], np.float64)
+            n_dropped = int((sel_pre & ~alive_np).sum())
         acc_row = store.lanes["accuracy"].copy()
         accs.append(acc_row)
         sel_hist.append(executed)
@@ -645,6 +797,7 @@ def run_host_sync(
         tx_hist.append(tx_row)
         wire_hist.append(float(wire_row.sum()))
         times.append(float(rt[0]))
+        rejected_hist.append(int(jax.device_get(rej_d)))
         if stats is not None:
             stats.setdefault("round_ms", []).append(
                 (time.perf_counter() - t_round0) * 1e3
@@ -657,12 +810,45 @@ def run_host_sync(
                 wire=wire_row[None], tx=np.asarray([tx_row]), times=rt,
                 update_norm=store.lanes["update_norm"][None], lanes=k,
                 host_gather_ms=[gather_ms], staged_bytes=[staged_bytes],
+                rejected=np.asarray([rejected_hist[-1]], np.int64),
+                dropped=(
+                    np.asarray([n_dropped], np.int64)
+                    if n_dropped is not None
+                    else None
+                ),
             )
         if progress:
             for i in _progress_rows(t, 1, 1, cfg.rounds):
                 emit(format_sync_progress(
                     t, float(acc_row.mean()), int(executed.sum())
                 ))
+        r = t + 1
+        if ckpt_dir and checkpoint_every and r % checkpoint_every == 0:
+            # full resume state: model + rng via repro.checkpoint, the
+            # store's trees path-keyed (memmap leaves flushed first), every
+            # lane + accumulated history verbatim
+            store.flush()
+            save_fl_state(
+                {"g": jax.device_get(g), "rng": jax.device_get(rng)},
+                ckpt_dir, r,
+            )
+            if store.trees:
+                save_pytree(store.trees, ckpt_dir, f"store_{r:05d}")
+            hist_arrays = {
+                f"lane_{name}": v for name, v in store.lanes.items()
+            }
+            hist_arrays.update({
+                "acc": np.stack(accs),
+                "selected": np.stack(sel_hist),
+                "tx_params": np.asarray(tx_hist),
+                "pms": np.stack(pms_hist),
+                "round_time": np.asarray(times),
+                "wire": np.asarray(wire_hist),
+                "rejected": np.asarray(rejected_hist, np.int64),
+            })
+            if edge_hist:
+                hist_arrays["tx_edge_bytes"] = np.concatenate(edge_hist)
+            save_host_arrays(hist_arrays, ckpt_dir, f"hist_{r:05d}")
 
     store.flush()
     times_np = np.asarray(times)
@@ -681,6 +867,7 @@ def run_host_sync(
         staleness_mean=np.zeros_like(times_np),
         in_flight=np.full(times_np.shape, k, np.int64),
         tx_edge_bytes=np.concatenate(edge_hist) if n_edges >= 1 else None,
+        rejected_updates=np.asarray(rejected_hist, np.int64),
     )
     if recorder is not None:
         recorder.close(h)
@@ -693,16 +880,26 @@ def run_host_sync(
 
 
 def _build_async_host_step(pipeline: RoundPipeline, n_layers: int, m: int,
-                           population: int, loss_fn, acc_fn, sizes: np.ndarray):
+                           population: int, loss_fn, acc_fn, sizes: np.ndarray,
+                           faults=None):
     """The slot-lane compute step of ``sched.build_async_step``, on staged
     ``(M, ...)`` rows: every slot trains its client from the slot snapshot,
-    landing deltas ride the codec and merge with staleness weights."""
+    landing deltas ride the codec and merge with staleness weights.
+
+    Carries the same always-on finite-delta guard (and, with an enabled
+    ``faults``, the same trailing ``corrupt_m (M,) int32`` argument) as the
+    device async step — same ops in the same order, so all-finite events
+    stay bit-identical to the device-resident path."""
     stateful = pipeline.personalizer.stateful
     lossy = pipeline.transmit.lossy
     sizes_j = jnp.asarray(sizes, jnp.int32)
+    faulty = faults is not None and faults.enabled
+    max_norm = float(faults.max_update_norm) if faulty else 0.0
+    corrupt_scale = float(faults.corrupt_scale) if faulty else 0.0
 
-    def step(g, slot_params, rng, t, cids, slot_pms, land, staleness,
-             local_m, residual_m, participation_m, data_m, n_samples_m, delay_m):
+    def _step_body(g, slot_params, rng, t, cids, slot_pms, land, staleness,
+                   local_m, residual_m, participation_m, data_m, n_samples_m,
+                   delay_m, prev_un_m, corrupt_m):
         share_m = layer_share_mask(n_layers, slot_pms)
         if lossy:
             rng, r_fit, r_sel, r_codec = jax.random.split(rng, 4)
@@ -734,6 +931,14 @@ def _build_async_host_step(pipeline: RoundPipeline, n_layers: int, m: int,
         )
         cctx = cctx._replace(train_model=pipeline.personalizer.train_model(cctx, menv))
         cctx = pipeline.trainer.fit(cctx, menv)
+        if corrupt_m is not None:
+            # corrupt the trained params BEFORE transmit so the uploaded
+            # update_norm carries the garbage — the finite guard below is
+            # what rejects it (corrupt slots still land and pay wire)
+            kinds_m = jnp.where(land, corrupt_m, 0)
+            cctx = cctx._replace(
+                trained=apply_corruption(cctx.trained, kinds_m, corrupt_scale)
+            )
         if stateful:
             cctx = cctx._replace(
                 new_local=jax.tree.map(
@@ -744,7 +949,20 @@ def _build_async_host_step(pipeline: RoundPipeline, n_layers: int, m: int,
                     pipeline.personalizer.local_fallback(cctx, menv),
                 )
             )
+        local_before = cctx.local_params if stateful else None
+        res_before = cctx.residual
         cctx = pipeline.transmit.transmit(cctx, menv)
+        # finite-delta guard (always on) — same expressions as the device
+        # async step, so all-finite events are bit-identical to it
+        ok, n_rejected = finite_update_guard(land, cctx.update_norm, max_norm)
+        cctx = cctx._replace(
+            select=land & ok,
+            update_norm=jnp.where(ok, cctx.update_norm, prev_un_m),
+        )
+        if res_before is not None:
+            cctx = cctx._replace(residual=_tree_where(ok, cctx.residual, res_before))
+        if stateful:
+            cctx = cctx._replace(new_local=_tree_where(ok, cctx.new_local, local_before))
         cctx = pipeline.aggregator.aggregate(cctx, menv)
         land_f = land.astype(jnp.float32)
         n_land = jnp.maximum(jnp.sum(land_f), 1.0)
@@ -757,9 +975,26 @@ def _build_async_host_step(pipeline: RoundPipeline, n_layers: int, m: int,
                 cctx.wire_paid, tx,
                 jnp.sum(land_f * staleness.astype(jnp.float32)) / n_land,
                 jnp.sum(land_f * merge_w) / n_land,
-                rng, r_sel)
+                n_rejected, rng, r_sel)
 
-    return jax.jit(step)
+    def step(g, slot_params, rng, t, cids, slot_pms, land, staleness,
+             local_m, residual_m, participation_m, data_m, n_samples_m,
+             delay_m, prev_un_m):
+        return _step_body(g, slot_params, rng, t, cids, slot_pms, land,
+                          staleness, local_m, residual_m, participation_m,
+                          data_m, n_samples_m, delay_m, prev_un_m, None)
+
+    if not faulty:
+        return jax.jit(step)
+
+    def fault_step(g, slot_params, rng, t, cids, slot_pms, land, staleness,
+                   local_m, residual_m, participation_m, data_m, n_samples_m,
+                   delay_m, prev_un_m, corrupt_m):
+        return _step_body(g, slot_params, rng, t, cids, slot_pms, land,
+                          staleness, local_m, residual_m, participation_m,
+                          data_m, n_samples_m, delay_m, prev_un_m, corrupt_m)
+
+    return jax.jit(fault_step)
 
 
 def _build_async_pop_step(pipeline: RoundPipeline, n_layers: int,
@@ -838,6 +1073,9 @@ def run_host_async(
     buffer_k: int | None = None,
     backing_dir: str | None = None,
     stats: dict | None = None,
+    checkpoint_every: int = 0,
+    checkpoint_dir: str | None = None,
+    resume_from: str | None = None,
 ):
     """FedBuff-style buffered execution with a host-resident population
     plane: the M dispatch slots stage their clients' rows per event, only
@@ -846,11 +1084,27 @@ def run_host_async(
     the heap-backed ``EventQueue`` samples completion times lazily over
     the dispatched subset — no O(C) work per event beyond the population
     selection pass itself.
+
+    Failure semantics and checkpoint/resume mirror ``AsyncScheduler.run``:
+    an enabled ``cfg.faults`` arms each dispatch with crash/timeout codes
+    and corruption kinds from the deterministic fault plan, failed slots
+    re-dispatch with exponential backoff up to ``max_retries`` then free
+    their slot; ``checkpoint_every``/``resume_from`` snapshot and restore
+    the full run (model, rng, slot plane, event queue, every
+    ``PopulationStore`` lane and tree, history) bit-identically.
     """
     from repro.fl.engine import FLHistory
 
     su = _HostSetup(data, cfg, init_fn, loss_fn, acc_fn, comm, pipeline, client_delay)
     comm, clock = su.comm, su.clock
+    faults = cfg.faults
+    faulty = faults.enabled
+    if faulty and cfg.execution.edge_groups >= 1:
+        raise ValueError(
+            "fault injection with an edge_groups topology is not "
+            "supported yet; set edge_groups=0 or disable FaultConfig"
+        )
+    ckpt_dir = resolve_checkpoint_dir(checkpoint_every, checkpoint_dir, resume_from)
     if isinstance(
         su.pipeline.aggregator,
         (phases.FedAvgAggregator, phases.MaskedPartialAggregator),
@@ -885,11 +1139,28 @@ def run_host_async(
         lambda gl: jnp.broadcast_to(gl, (m,) + gl.shape), su.g0
     )
     step = _build_async_host_step(
-        su.pipeline, su.n_layers, m, c, loss_fn, acc_fn, su.sizes
+        su.pipeline, su.n_layers, m, c, loss_fn, acc_fn, su.sizes,
+        faults=faults if faulty else None,
     )
     pop_step = _build_async_pop_step(su.pipeline, su.n_layers, c, su.lw)
     slot_update = _build_slot_update(su.pipeline)
     eval_steps: dict = {}
+    deadline = float(faults.deadline_s)
+
+    def _arm_faults(cids_arr, durations, at_version):
+        """Fault-arm a dispatch batch (same semantics as the device
+        scheduler): fault-slowed notice times, failure codes (0 ok /
+        1 crash / 2 deadline timeout), and corruption kinds, all drawn
+        from the plan at the dispatching model version."""
+        plan = compile_fault_plan(faults, cfg.seed, at_version, c)
+        cids_arr = np.asarray(cids_arr)
+        dur = durations * plan.slow[cids_arr]
+        code = np.where(plan.crash[cids_arr], 1, 0).astype(np.int8)
+        if deadline > 0.0:
+            code = np.where((code == 0) & (dur > deadline), 2, code)
+            dur = np.where(code != 0, np.minimum(dur, deadline), dur)
+        kind = np.where(code == 0, plan.corrupt[cids_arr], 0).astype(np.int32)
+        return dur, code, kind
 
     resolved_buffer_k = buffer_k or cfg.scheduler.buffer_k or max(1, c // 2)
     if recorder is not None:
@@ -906,7 +1177,12 @@ def run_host_async(
     slot_pms = np.full((m,), su.pms0, np.int32)
     client_pms = store.lanes["client_pms"]
     queue = EventQueue(m)
+    slot_fail = np.zeros((m,), np.int8)
+    slot_kind = np.zeros((m,), np.int32)
+    retries = np.zeros((m,), np.int64)
     d0 = clock.durations(client_pms[slot_client], cids=slot_client)
+    if faulty:  # warm-start dispatches draw from the version-0 plan
+        d0, slot_fail, slot_kind = _arm_faults(slot_client, d0, 0)
     for s in range(m):
         queue.push(s, d0[s], int(slot_client[s]))
     if recorder is not None:
@@ -921,20 +1197,114 @@ def run_host_async(
     accs, sel_hist, tx_hist, pms_hist = [], [], [], []
     times, wire_hist, clock_hist, stale_hist, flight_hist = [], [], [], [], []
     edge_hist: list[np.ndarray] = []
-    for t in range(cfg.rounds):
+    rejected_hist: list[int] = []
+    pend_retried = pend_timeout = pend_dropped = 0
+    start_t = 0
+    if resume_from is not None:
+        # latest snapshot: model/rng/slot snapshots via repro.checkpoint,
+        # store trees restored row-for-row in place, lanes + slot plane +
+        # history verbatim, and the event queue rebuilt by re-pushing the
+        # in-flight slots at their saved finish times
+        trees, meta = load_fl_state(
+            {"g": g, "rng": rng, "slot_params": slot_params}, resume_from
+        )
+        g = jax.tree.map(jnp.asarray, trees["g"])
+        rng = jnp.asarray(trees["rng"])
+        slot_params = jax.tree.map(jnp.asarray, trees["slot_params"])
+        start_t = int(meta["round"])
+        sim_clock = float(meta["sim_clock"])
+        version = int(meta["version"])
+        if store.trees:
+            loaded = load_pytree(store.trees, resume_from, f"store_{start_t:05d}")
+            jax.tree.map(_restore_rows, store.trees, loaded)
+        host = load_host_arrays(resume_from, f"hist_{start_t:05d}")
+        for name in store.lanes:
+            store.lanes[name][...] = host[f"lane_{name}"]
+        store.flush()
+        slot_client = host["slot_client"].astype(np.int32)
+        slot_pms = host["slot_pms"].astype(np.int32)
+        active = host["active"].astype(bool)
+        in_flight_clients = host["in_flight_clients"].astype(bool)
+        dispatch_version = host["dispatch_version"].astype(np.int64)
+        slot_fail = host["slot_fail"].astype(np.int8)
+        slot_kind = host["slot_kind"].astype(np.int32)
+        retries = host["retries"].astype(np.int64)
+        queue = EventQueue(m)
+        for s in range(m):
+            if active[s]:
+                queue.push(s, float(host["queue_finish"][s]), int(slot_client[s]))
+        accs = [row for row in host["acc"]]
+        sel_hist = [row for row in host["selected"]]
+        tx_hist = [float(x) for x in host["tx_params"]]
+        pms_hist = [row for row in host["pms"]]
+        times = [float(x) for x in host["round_time"]]
+        wire_hist = [float(x) for x in host["wire"]]
+        clock_hist = [float(x) for x in host["sim_clock_hist"]]
+        stale_hist = [float(x) for x in host["staleness"]]
+        flight_hist = [int(x) for x in host["in_flight_hist"]]
+        rejected_hist = [int(x) for x in host["rejected"]]
+        if "tx_edge_bytes" in host:
+            edge_hist = [row for row in host["tx_edge_bytes"]]
+    t = start_t
+    while t < cfg.rounds:
         t_round0 = time.perf_counter()
         n_active = int(active.sum())
+        if n_active == 0:
+            # the whole population dropped out (every slot's retries
+            # exhausted): degrade gracefully — end the run with the
+            # history accumulated so far instead of deadlocking
+            break
         k_ev = max(1, min(resolved_buffer_k, n_active))
         landers = queue.pop_k(k_ev)
-        land = np.zeros((m,), bool)
-        land[landers] = True
-        land_finish = queue.finish[landers].copy()
-        new_clock = float(land_finish.max()) + comm.server_latency_s
+        if faulty:
+            codes = slot_fail[landers]
+            ok_l = landers[codes == 0]
+            bad = landers[codes != 0]
+            pend_timeout += int((codes == 2).sum())
+            # capture notice times BEFORE retry pushes overwrite them
+            notice_max = float(queue.finish[landers].max())
+            can_retry = retries[bad] < faults.max_retries
+            retry_slots = bad[can_retry]
+            drop_slots = bad[~can_retry]
+            for s in retry_slots:
+                # exponential-backoff re-dispatch of the SAME client on the
+                # same slot and snapshot, with fresh fault draws at the
+                # current model version
+                retries[s] += 1
+                cid = int(slot_client[s])
+                backoff = faults.backoff_s * (2.0 ** float(retries[s] - 1))
+                d_r, code_r, kind_r = _arm_faults(
+                    [cid], clock.durations(client_pms[[cid]], cids=[cid]),
+                    version,
+                )
+                slot_fail[s] = code_r[0]
+                slot_kind[s] = kind_r[0]
+                queue.push(s, float(queue.finish[s]) + backoff + float(d_r[0]), cid)
+            pend_retried += int(retry_slots.size)
+            if drop_slots.size:
+                # retries exhausted: free the slot and the client — the
+                # step's idle-assignment path backfills from selection
+                pend_dropped += int(drop_slots.size)
+                active[drop_slots] = False
+                in_flight_clients[slot_client[drop_slots]] = False
+            if ok_l.size == 0 and drop_slots.size == 0:
+                continue  # pure-retry event: no aggregation happens
+            landers = ok_l
+            land = np.zeros((m,), bool)
+            land[landers] = True
+            land_finish = queue.finish[landers].copy()
+            new_clock = notice_max + comm.server_latency_s
+            force = bool(int((active & ~land).sum()) == 0)
+        else:
+            land = np.zeros((m,), bool)
+            land[landers] = True
+            land_finish = queue.finish[landers].copy()
+            new_clock = float(land_finish.max()) + comm.server_latency_s
+            force = bool(n_active - k_ev == 0)
         staleness = np.where(land, version - dispatch_version, 0).astype(np.int32)
         landed_clients = slot_client[landers]
         idle_now = ~in_flight_clients
         idle_now[landed_clients] = True
-        force = bool(n_active - k_ev == 0)
         if prof is not None:
             prof.begin_chunk(t, 1)
 
@@ -950,14 +1320,17 @@ def run_host_async(
             + sum(_tree_nbytes(gathered[n]) for n in tree_names)
         )
         gather_ms = (time.perf_counter() - t_gather0) * 1e3
+        step_args = (
+            g, slot_params, rng, jnp.asarray(t), slot_client, slot_pms,
+            land, staleness, gathered.get("local"), gathered.get("residual"),
+            part_m, data_m, su.n_samples32[slot_client],
+            su.delay_env[slot_client], store.lanes["update_norm"][slot_client],
+        )
+        if faulty:
+            step_args = step_args + (jnp.asarray(slot_kind),)
         with phase_timer(prof, "dispatch"):
             (g, new_local_m, new_residual_m, un_m, wire_m, tx_d,
-             stale_mean_d, merge_mean_d, rng, r_sel) = step(
-                g, slot_params, rng, jnp.asarray(t), slot_client, slot_pms,
-                land, staleness, gathered.get("local"), gathered.get("residual"),
-                part_m, data_m, su.n_samples32[slot_client],
-                su.delay_env[slot_client],
-            )
+             stale_mean_d, merge_mean_d, rej_d, rng, r_sel) = step(*step_args)
         # --- scatter landing rows only (others provably unchanged) ---
         with phase_timer(prof, "device_get"):
             back: dict[str, Any] = {}
@@ -1008,6 +1381,14 @@ def run_host_async(
         if disp_slots.size:
             disp_cids = new_slot_client[disp_slots]
             d_disp = clock.durations(client_pms[disp_cids], cids=disp_cids)
+            if faulty:
+                # fresh fault draws at the version these slots train from
+                d_disp, code_d, kind_d = _arm_faults(
+                    disp_cids, d_disp, version + 1
+                )
+                slot_fail[disp_slots] = code_d
+                slot_kind[disp_slots] = kind_d
+                retries[disp_slots] = 0
             for s, f, cid in zip(disp_slots, new_clock + d_disp, disp_cids):
                 queue.push(int(s), float(f), int(cid))
         dispatch_version = np.where(dispatched, version + 1, dispatch_version)
@@ -1022,6 +1403,7 @@ def run_host_async(
         clock_hist.append(new_clock)
         stale_hist.append(float(jax.device_get(stale_mean_d)))
         flight_hist.append(int(in_flight_clients.sum()))
+        rejected_hist.append(int(jax.device_get(rej_d)))
         if n_edges >= 1:
             edge_hist.append(
                 edge_hop_bytes(
@@ -1035,6 +1417,12 @@ def run_host_async(
             stats.setdefault("host_gather_ms", []).append(gather_ms)
             stats.setdefault("staged_bytes", []).append(staged_bytes)
         if recorder is not None:
+            fault_kw = {}
+            if faulty:
+                fault_kw = dict(
+                    retried=pend_retried, timed_out=pend_timeout,
+                    dropped=pend_dropped,
+                )
             recorder.on_async_event(
                 t=t, acc=accs[-1], sel=land_c, tx=tx_hist[-1], pms=pms_pre,
                 wire=wire_hist[-1], dt=times[-1], new_clock=new_clock,
@@ -1043,11 +1431,13 @@ def run_host_async(
                 merge_discount=float(jax.device_get(merge_mean_d)),
                 landed_clients=landed_clients, landed_finish=land_finish,
                 landed_staleness=staleness[landers],
+                rejected=rejected_hist[-1], **fault_kw,
             )
             if dispatched.any():
                 recorder.on_async_dispatch(
                     new_slot_client[dispatched], new_clock, client_pms
                 )
+        pend_retried = pend_timeout = pend_dropped = 0
         sim_clock = new_clock
         version += 1
         if progress and (t % 10 == 0 or t == cfg.rounds - 1):
@@ -1055,6 +1445,51 @@ def run_host_async(
                 t, float(accs[-1].mean()), int(land.sum()),
                 new_clock, stale_hist[-1],
             ))
+        t += 1
+        if ckpt_dir and checkpoint_every and t % checkpoint_every == 0:
+            # full resume state: model/rng/slot snapshots via
+            # repro.checkpoint, store trees path-keyed, lanes + slot plane
+            # + event queue + accumulated history verbatim
+            store.flush()
+            save_fl_state(
+                {
+                    "g": jax.device_get(g),
+                    "rng": jax.device_get(rng),
+                    "slot_params": jax.device_get(slot_params),
+                    "sim_clock": float(sim_clock),
+                    "version": int(version),
+                },
+                ckpt_dir, t,
+            )
+            if store.trees:
+                save_pytree(store.trees, ckpt_dir, f"store_{t:05d}")
+            host_arrays = {
+                f"lane_{name}": v for name, v in store.lanes.items()
+            }
+            host_arrays.update({
+                "slot_client": slot_client,
+                "slot_pms": slot_pms,
+                "active": active,
+                "in_flight_clients": in_flight_clients,
+                "dispatch_version": dispatch_version,
+                "slot_fail": slot_fail,
+                "slot_kind": slot_kind,
+                "retries": retries,
+                "queue_finish": np.asarray(queue.finish, np.float64),
+                "acc": np.stack(accs),
+                "selected": np.stack(sel_hist),
+                "tx_params": np.asarray(tx_hist),
+                "pms": np.stack(pms_hist),
+                "round_time": np.asarray(times),
+                "wire": np.asarray(wire_hist),
+                "sim_clock_hist": np.asarray(clock_hist),
+                "staleness": np.asarray(stale_hist),
+                "in_flight_hist": np.asarray(flight_hist, np.int64),
+                "rejected": np.asarray(rejected_hist, np.int64),
+            })
+            if edge_hist:
+                host_arrays["tx_edge_bytes"] = np.stack(edge_hist)
+            save_host_arrays(host_arrays, ckpt_dir, f"hist_{t:05d}")
 
     store.flush()
     acc_pc = np.stack(accs)
@@ -1072,6 +1507,7 @@ def run_host_async(
         staleness_mean=np.asarray(stale_hist),
         in_flight=np.asarray(flight_hist, np.int64),
         tx_edge_bytes=np.stack(edge_hist) if n_edges >= 1 else None,
+        rejected_updates=np.asarray(rejected_hist, np.int64),
     )
     if recorder is not None:
         recorder.close(h)

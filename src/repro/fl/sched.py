@@ -66,8 +66,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.checkpoint import (
+    load_fl_state,
+    load_host_arrays,
+    save_fl_state,
+    save_host_arrays,
+)
 from repro.comm import Codec, tree_wire_bytes
-from repro.core.aggregation import transmitted_parameters
+from repro.core.aggregation import finite_update_guard, transmitted_parameters
 from repro.core.layersharing import layer_param_sizes, layer_share_mask
 from repro.core.metrics import (
     BYTES_PER_PARAM,
@@ -87,6 +93,7 @@ from repro.fl.api import (
     pipeline_from_config,
 )
 from repro.fl.cohort import tree_scatter, tree_take
+from repro.fl.faults import compile_fault_plan
 from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
 from repro.obs.profile import phase_timer
 from repro.obs.record import format_async_progress, format_sync_progress
@@ -363,6 +370,41 @@ def _setup_run(
 
 
 # ---------------------------------------------------------------------------
+# checkpoint/resume plumbing shared by the schedulers and host runners
+# ---------------------------------------------------------------------------
+
+
+def resolve_checkpoint_dir(
+    checkpoint_every: int,
+    checkpoint_dir: str | None,
+    resume_from: str | None,
+) -> str | None:
+    """Where snapshots go: ``checkpoint_dir``, falling back to
+    ``resume_from`` (resuming keeps appending snapshots to the same run
+    directory). ``checkpoint_every > 0`` with nowhere to write is an
+    error — silently not checkpointing would defeat the point."""
+    directory = checkpoint_dir or resume_from
+    if checkpoint_every and not directory:
+        raise ValueError(
+            "checkpoint_every > 0 needs checkpoint_dir= (or resume_from=, "
+            "which doubles as the save directory)"
+        )
+    return directory
+
+
+def _sync_fault_inputs(faults, seed: int, t: int, clock: ClientClock, pms_host):
+    """Host-side fault resolution for one sync round: the round's compiled
+    plan, the (C,) survivor mask (not crashed AND inside the deadline at
+    the fault-slowed duration), and the slowed durations themselves."""
+    plan = compile_fault_plan(faults, seed, t, pms_host.shape[0])
+    dur = clock.durations(pms_host) * plan.slow
+    alive = ~plan.crash
+    if faults.deadline_s > 0.0:
+        alive = alive & (dur <= faults.deadline_s)
+    return plan, alive, dur
+
+
+# ---------------------------------------------------------------------------
 # SyncScheduler — Algorithm 1's barrier loop (bit-identical to the seed)
 # ---------------------------------------------------------------------------
 
@@ -419,6 +461,9 @@ class SyncScheduler:
         pipeline: RoundPipeline | None = None,
         client_delay: np.ndarray | None = None,
         recorder=None,
+        checkpoint_every: int = 0,
+        checkpoint_dir: str | None = None,
+        resume_from: str | None = None,
     ):
         from repro.fl.engine import FLHistory
 
@@ -434,7 +479,17 @@ class SyncScheduler:
                 data, cfg, init_fn=init_fn, loss_fn=loss_fn, acc_fn=acc_fn,
                 comm=comm, progress=progress, pipeline=pipeline,
                 client_delay=client_delay, recorder=recorder,
+                checkpoint_every=checkpoint_every,
+                checkpoint_dir=checkpoint_dir, resume_from=resume_from,
             )
+        faults = cfg.faults
+        faulty = faults.enabled
+        if faulty and cfg.execution.edge_groups >= 1:
+            raise ValueError(
+                "fault injection with an edge_groups topology is not "
+                "supported yet; set edge_groups=0 or disable FaultConfig"
+            )
+        ckpt_dir = resolve_checkpoint_dir(checkpoint_every, checkpoint_dir, resume_from)
         su = _setup_run(data, cfg, init_fn, loss_fn, acc_fn, comm, pipeline, client_delay)
         comm, clock = su.comm, su.clock
         state = RoundState(
@@ -449,8 +504,13 @@ class SyncScheduler:
             loss=jnp.zeros((data.n_clients,), jnp.float32),
             update_norm=jnp.zeros((data.n_clients,), jnp.float32),
         )
-        round_step = build_round_step(su.env, su.pipeline, cfg.execution)
-        chunk = cfg.execution.resolved_chunk(cfg.rounds)
+        round_step = build_round_step(
+            su.env, su.pipeline, cfg.execution, faults=faults if faulty else None
+        )
+        # fault mode needs the host in the loop every round (the compiled
+        # plan feeds the step's alive/corrupt lanes), so the fused chunk
+        # collapses to per-round dispatch
+        chunk = 1 if faulty else cfg.execution.resolved_chunk(cfg.rounds)
         # scan_chunk=1 dispatches the plain jitted round step — the exact
         # pre-fusion compilation, not a length-1 scan: XLA may fuse a
         # lax.cond branch (eval_every thinning) differently inside a scan
@@ -476,18 +536,60 @@ class SyncScheduler:
         layer_sizes = np.diff(clock.params_prefix)
         edge_hist: list[np.ndarray] = []
         accs, sel_hist, tx_hist, pms_hist, times, wire_hist = [], [], [], [], [], []
-        for t0 in range(0, cfg.rounds, chunk):
+        rejected_hist: list[np.ndarray] = []
+        start = 0
+        if resume_from is not None:
+            # latest snapshot: RoundState through repro.checkpoint (rng
+            # included), accumulated history lanes verbatim — the resumed
+            # loop continues bitwise where the interrupted run stopped
+            trees, meta = load_fl_state({"state": state}, resume_from)
+            state = jax.tree.map(jnp.asarray, trees["state"])
+            start = int(meta["round"])
+            hist = load_host_arrays(resume_from, f"hist_{start:05d}")
+            accs = [hist["acc"]]
+            sel_hist = [hist["selected"]]
+            tx_hist = [hist["tx_params"]]
+            pms_hist = [hist["pms"]]
+            times = [hist["round_time"]]
+            wire_hist = [hist["wire"]]
+            rejected_hist = [hist["rejected"]]
+            if "tx_edge_bytes" in hist:
+                edge_hist = [hist["tx_edge_bytes"]]
+        for t0 in range(start, cfg.rounds, chunk):
             n = min(chunk, cfg.rounds - t0)
             if prof is not None:
                 prof.begin_chunk(t0, n)
             if per_round is not None:
+                if faulty:
+                    # the fault plan is resolved host-side each round: crash
+                    # + deadline survivors feed the step's alive mask, the
+                    # corruption kinds ride along, and the slowed durations
+                    # drive the deadline-capped round-time accounting below
+                    pms_host = np.asarray(jax.device_get(state.pms))
+                    sel_pre = np.asarray(jax.device_get(state.select))
+                    plan, alive_np, dur_t = _sync_fault_inputs(
+                        faults, cfg.seed, t0, clock, pms_host
+                    )
+                    if not (sel_pre & alive_np).any():
+                        # a storm killed every selected client: the server
+                        # re-dispatches until someone answers — run the
+                        # round fault-free rather than aggregate nothing
+                        alive_np = np.ones_like(alive_np)
+                    extra = (
+                        jnp.asarray(alive_np),
+                        jnp.asarray(plan.corrupt.astype(np.int32)),
+                    )
+                else:
+                    extra = ()
                 if prof is not None and not isinstance(per_round, jax.stages.Compiled):
                     # AOT-split so compile time is attributed, not folded
                     # into the first dispatch (same executable bit-for-bit)
                     with prof.phase("compile"):
-                        per_round = per_round.lower(state, jnp.asarray(t0)).compile()
+                        per_round = per_round.lower(
+                            state, jnp.asarray(t0), *extra
+                        ).compile()
                 with phase_timer(prof, "dispatch"):
-                    state, out = per_round(state, jnp.asarray(t0))
+                    state, out = per_round(state, jnp.asarray(t0), *extra)
                 with phase_timer(prof, "device_get"):
                     outs = jax.device_get(out)
                 outs = {k: np.asarray(v)[None] for k, v in outs.items()}
@@ -533,6 +635,23 @@ class SyncScheduler:
                     # None on the homogeneous default: no delay lane to pay
                     delay=delay,
                 )
+            n_dropped = None
+            if faulty:
+                # the server waits on everyone it dispatched, but only up
+                # to the deadline: round time = slowest *dispatched* client
+                # at its fault-slowed duration, deadline-capped
+                wait = dur_t[sel_pre]
+                rt_t = float(wait.max()) if wait.size else 0.0
+                if faults.deadline_s > 0.0:
+                    rt_t = min(rt_t, faults.deadline_s)
+                rt = np.asarray([rt_t + comm.server_latency_s], np.float64)
+                n_dropped = int((sel_pre & ~alive_np).sum())
+            rej = (
+                np.asarray(outs["rejected"], np.int64)
+                if "rejected" in outs
+                else np.zeros((n,), np.int64)  # sharded step: no guard leaf
+            )
+            rejected_hist.append(rej)
             times.append(rt)
             accs.append(acc)
             sel_hist.append(sel)
@@ -546,12 +665,40 @@ class SyncScheduler:
                     t0=t0, acc=acc, sel=sel, pms=pms, wire=wire,
                     tx=tx_hist[-1], times=rt,
                     update_norm=np.asarray(outs["update_norm"]), lanes=lanes,
+                    rejected=rej,
+                    dropped=(
+                        np.asarray([n_dropped], np.int64)
+                        if n_dropped is not None
+                        else None
+                    ),
                 )
             if progress:
                 for i in _progress_rows(t0, n, chunk, cfg.rounds):
                     emit(format_sync_progress(
                         t0 + i, float(acc[i].mean()), int(sel[i].sum())
                     ))
+            r = t0 + n
+            if (
+                ckpt_dir
+                and checkpoint_every
+                and r // checkpoint_every > t0 // checkpoint_every
+            ):
+                # snapshot at the first chunk boundary past each multiple
+                # of checkpoint_every: RoundState (rng chain included) via
+                # repro.checkpoint + the accumulated history lanes verbatim
+                save_fl_state({"state": jax.device_get(state)}, ckpt_dir, r)
+                hist_arrays = {
+                    "acc": np.concatenate(accs),
+                    "selected": np.concatenate(sel_hist),
+                    "tx_params": np.concatenate(tx_hist),
+                    "pms": np.concatenate(pms_hist),
+                    "round_time": np.concatenate(times),
+                    "wire": np.concatenate(wire_hist),
+                    "rejected": np.concatenate(rejected_hist),
+                }
+                if edge_hist:
+                    hist_arrays["tx_edge_bytes"] = np.concatenate(edge_hist)
+                save_host_arrays(hist_arrays, ckpt_dir, f"hist_{r:05d}")
 
         acc_pc = np.concatenate(accs)
         wire = np.concatenate(wire_hist)
@@ -569,6 +716,7 @@ class SyncScheduler:
             staleness_mean=np.zeros_like(times),
             in_flight=np.full(times.shape, lanes, np.int64),
             tx_edge_bytes=np.concatenate(edge_hist) if n_edges >= 1 else None,
+            rejected_updates=np.concatenate(rejected_hist),
         )
         if recorder is not None:
             recorder.close(h)
@@ -611,7 +759,7 @@ def _lane(mask: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
     return mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
 
 
-def build_async_step(env: phases.RoundEnv, pipeline: RoundPipeline):
+def build_async_step(env: phases.RoundEnv, pipeline: RoundPipeline, faults=None):
     """Compose a RoundPipeline into the jitted buffered-aggregation step.
 
     The step maps ``(AsyncState, t, land, staleness, active, idle_now,
@@ -627,12 +775,24 @@ def build_async_step(env: phases.RoundEnv, pipeline: RoundPipeline):
     guards the event queue against draining: when nothing else is in
     flight and the selector wants none of the idle clients, the landing
     slots re-dispatch their own clients.
+
+    Every step carries the always-on finite-delta guard: landing slots
+    whose transmitted ``update_norm`` is non-finite are masked out of the
+    buffered merge, their local/residual state reverted, and counted in
+    ``out["rejected"]``. When ``faults`` is an enabled ``FaultConfig`` the
+    returned step takes one extra ``corrupt (M,) int32`` argument — the
+    landing slots' corruption kinds (compiled host-side at dispatch),
+    applied to the trained params before transmit so the guard is what
+    rejects them; fault-off steps compile with no fault ops at all.
     """
 
     c = env.n_clients
     stateful = pipeline.personalizer.stateful
+    faulty = faults is not None and faults.enabled
+    max_norm = float(faults.max_update_norm) if faulty else 0.0
+    corrupt_scale = float(faults.corrupt_scale) if faulty else 0.0
 
-    def async_step(
+    def _async_body(
         state: AsyncState,
         t: jnp.ndarray,
         land: jnp.ndarray,        # (M,) bool — slots whose updates land now
@@ -640,6 +800,7 @@ def build_async_step(env: phases.RoundEnv, pipeline: RoundPipeline):
         active: jnp.ndarray,      # (M,) bool — slot holds an in-flight client
         idle_now: jnp.ndarray,    # (C,) bool — clients idle after landing
         force: jnp.ndarray,       # () bool — re-dispatch landers if no one else
+        corrupt,                  # (M,) int32 corruption kinds or None
     ):
         g = state.global_params
         n_layers = len(g)
@@ -685,6 +846,16 @@ def build_async_step(env: phases.RoundEnv, pipeline: RoundPipeline):
         # --- each slot lane trains from its own dispatch snapshot ---
         cctx = cctx._replace(train_model=pipeline.personalizer.train_model(cctx, menv))
         cctx = pipeline.trainer.fit(cctx, menv)
+        if corrupt is not None:
+            # corrupt the trained params BEFORE transmit so the uploaded
+            # update_norm carries the garbage — the finite guard below is
+            # what rejects it (corrupt slots still land and pay wire)
+            from repro.fl.faults import apply_corruption
+
+            kinds_m = jnp.where(land, corrupt, 0)
+            cctx = cctx._replace(
+                trained=apply_corruption(cctx.trained, kinds_m, corrupt_scale)
+            )
         if stateful:
             cctx = cctx._replace(
                 new_local=jax.tree.map(
@@ -694,7 +865,32 @@ def build_async_step(env: phases.RoundEnv, pipeline: RoundPipeline):
                 )
             )
         # --- wire codec: landing slots' deltas vs their snapshots ---
+        local_before = cctx.local_params if stateful else None
+        res_before = cctx.residual
         cctx = pipeline.transmit.transmit(cctx, menv)
+        # --- finite-delta guard (always on): non-finite / norm-exploded
+        # landings are masked out of the merge and their state reverted ---
+        ok, n_rejected = finite_update_guard(land, cctx.update_norm, max_norm)
+        cctx = cctx._replace(
+            select=land & ok,
+            update_norm=jnp.where(ok, cctx.update_norm, jnp.take(state.update_norm, cids)),
+        )
+        if res_before is not None:
+            cctx = cctx._replace(
+                residual=jax.tree.map(
+                    lambda new, old: jnp.where(_lane(ok, new), new, old),
+                    cctx.residual,
+                    res_before,
+                )
+            )
+        if stateful:
+            cctx = cctx._replace(
+                new_local=jax.tree.map(
+                    lambda new, old: jnp.where(_lane(ok, new), new, old),
+                    cctx.new_local,
+                    local_before,
+                )
+            )
         # --- staleness-weighted buffered merge into the current model ---
         cctx = pipeline.aggregator.aggregate(cctx, menv)
 
@@ -800,10 +996,22 @@ def build_async_step(env: phases.RoundEnv, pipeline: RoundPipeline):
             "client_pms": new_client_pms,
             "staleness_mean": jnp.sum(land_f * staleness.astype(jnp.float32)) / n_land,
             "merge_discount_mean": jnp.sum(land_f * merge_w) / n_land,
+            # finite-guard rejections this event (landed slots whose
+            # transmitted update failed validation)
+            "rejected": n_rejected,
         }
         return new_state, out
 
-    return async_step
+    def async_step(state, t, land, staleness, active, idle_now, force):
+        return _async_body(state, t, land, staleness, active, idle_now, force, None)
+
+    if not faulty:
+        return async_step
+
+    def fault_async_step(state, t, land, staleness, active, idle_now, force, corrupt):
+        return _async_body(state, t, land, staleness, active, idle_now, force, corrupt)
+
+    return fault_async_step
 
 
 @dataclasses.dataclass
@@ -841,6 +1049,9 @@ class AsyncScheduler:
         pipeline: RoundPipeline | None = None,
         client_delay: np.ndarray | None = None,
         recorder=None,
+        checkpoint_every: int = 0,
+        checkpoint_dir: str | None = None,
+        resume_from: str | None = None,
     ):
         from repro.fl.engine import FLHistory
 
@@ -854,7 +1065,17 @@ class AsyncScheduler:
                 comm=comm, progress=progress, pipeline=pipeline,
                 client_delay=client_delay, recorder=recorder,
                 buffer_k=self.buffer_k,
+                checkpoint_every=checkpoint_every,
+                checkpoint_dir=checkpoint_dir, resume_from=resume_from,
             )
+        faults = cfg.faults
+        faulty = faults.enabled
+        if faulty and cfg.execution.edge_groups >= 1:
+            raise ValueError(
+                "fault injection with an edge_groups topology is not "
+                "supported yet; set edge_groups=0 or disable FaultConfig"
+            )
+        ckpt_dir = resolve_checkpoint_dir(checkpoint_every, checkpoint_dir, resume_from)
         su = _setup_run(data, cfg, init_fn, loss_fn, acc_fn, comm, pipeline, client_delay)
         comm, clock_fn = su.comm, su.clock
         # fail fast on a sync-built pipeline: the barrier aggregators average
@@ -896,8 +1117,30 @@ class AsyncScheduler:
             residual=su.residual0,
             participation=jnp.zeros((c,), jnp.int32),
         )
-        step = jax.jit(build_async_step(su.env, su.pipeline))
+        step = jax.jit(
+            build_async_step(su.env, su.pipeline, faults=faults if faulty else None)
+        )
         buffer_k = self.buffer_k or cfg.scheduler.buffer_k or max(1, c // 2)
+        deadline = float(faults.deadline_s)
+
+        def _arm_faults(cids_arr, durations, at_version):
+            """Fault-arm a dispatch batch: fault-slowed notice times,
+            failure codes (0 ok / 1 crash / 2 deadline timeout), and
+            corruption kinds — drawn from the plan at the dispatching
+            model version, so the whole schedule is a pure function of
+            (cfg, seed). Failed dispatches are noticed at
+            ``min(duration, deadline)`` (an upload that never comes is
+            only detectable by the deadline; without one, the crash
+            surfaces when the upload attempt fails at its finish time)."""
+            plan = compile_fault_plan(faults, cfg.seed, at_version, c)
+            cids_arr = np.asarray(cids_arr)
+            dur = durations * plan.slow[cids_arr]
+            code = np.where(plan.crash[cids_arr], 1, 0).astype(np.int8)
+            if deadline > 0.0:
+                code = np.where((code == 0) & (dur > deadline), 2, code)
+                dur = np.where(code != 0, np.minimum(dur, deadline), dur)
+            kind = np.where(code == 0, plan.corrupt[cids_arr], 0).astype(np.int32)
+            return dur, code, kind
         if recorder is not None:
             recorder.open_run(mode="async", cfg=cfg, data=data, comm=comm,
                               clock=clock_fn, lanes=m, buffer_k=buffer_k)
@@ -908,7 +1151,12 @@ class AsyncScheduler:
         slot_client = slot_client0.copy()
         client_pms = np.full((c,), su.pms0, np.int32)
         queue = EventQueue(m)
+        slot_fail = np.zeros((m,), np.int8)
+        slot_kind = np.zeros((m,), np.int32)
+        retries = np.zeros((m,), np.int64)
         d0 = clock_fn.durations(client_pms[slot_client0], cids=slot_client0)
+        if faulty:  # warm-start dispatches draw from the version-0 plan
+            d0, slot_fail, slot_kind = _arm_faults(slot_client0, d0, 0)
         for s in range(m):
             queue.push(s, d0[s], int(slot_client0[s]))
         if recorder is not None:  # warm start: w(0) cut at simulated t=0
@@ -926,20 +1174,106 @@ class AsyncScheduler:
         edge_hist: list[np.ndarray] = []
         accs, sel_hist, tx_hist, pms_hist = [], [], [], []
         times, wire_hist, clock_hist, stale_hist, flight_hist = [], [], [], [], []
-        for t in range(cfg.rounds):
+        rejected_hist: list[int] = []
+        pend_retried = pend_timeout = pend_dropped = 0
+        start_t = 0
+        if resume_from is not None:
+            # latest snapshot: AsyncState through repro.checkpoint, every
+            # host lane verbatim, and the event queue rebuilt by re-pushing
+            # the in-flight slots at their saved finish times (heap order
+            # is a total order over live entries, so replay is exact)
+            trees, meta = load_fl_state({"state": state}, resume_from)
+            state = jax.tree.map(jnp.asarray, trees["state"])
+            start_t = int(meta["round"])
+            sim_clock = float(meta["sim_clock"])
+            version = int(meta["version"])
+            host = load_host_arrays(resume_from, f"hist_{start_t:05d}")
+            slot_client = host["slot_client"].astype(np.int32)
+            client_pms = host["client_pms"].astype(np.int32)
+            active = host["active"].astype(bool)
+            in_flight_clients = host["in_flight_clients"].astype(bool)
+            dispatch_version = host["dispatch_version"].astype(np.int64)
+            slot_fail = host["slot_fail"].astype(np.int8)
+            slot_kind = host["slot_kind"].astype(np.int32)
+            retries = host["retries"].astype(np.int64)
+            queue = EventQueue(m)
+            for s in range(m):
+                if active[s]:
+                    queue.push(s, float(host["queue_finish"][s]), int(slot_client[s]))
+            accs = [row for row in host["acc"]]
+            sel_hist = [row for row in host["selected"]]
+            tx_hist = [float(x) for x in host["tx_params"]]
+            pms_hist = [row for row in host["pms"]]
+            times = [float(x) for x in host["round_time"]]
+            wire_hist = [float(x) for x in host["wire"]]
+            clock_hist = [float(x) for x in host["sim_clock_hist"]]
+            stale_hist = [float(x) for x in host["staleness"]]
+            flight_hist = [int(x) for x in host["in_flight_hist"]]
+            rejected_hist = [int(x) for x in host["rejected"]]
+            if "tx_edge_bytes" in host:
+                edge_hist = [row for row in host["tx_edge_bytes"]]
+        t = start_t
+        while t < cfg.rounds:
             n_active = int(active.sum())
+            if n_active == 0:
+                # the whole population dropped out (every slot's retries
+                # exhausted): degrade gracefully — end the run with the
+                # history accumulated so far instead of deadlocking
+                break
             k = max(1, min(buffer_k, n_active))
             # earliest finishers land; ties break by client id (deterministic)
             landers = queue.pop_k(k)
-            land = np.zeros((m,), bool)
-            land[landers] = True
-            land_finish = queue.finish[landers].copy()
-            new_clock = float(land_finish.max()) + comm.server_latency_s
+            if faulty:
+                codes = slot_fail[landers]
+                ok_l = landers[codes == 0]
+                bad = landers[codes != 0]
+                pend_timeout += int((codes == 2).sum())
+                # capture notice times BEFORE retry pushes overwrite them
+                notice_max = float(queue.finish[landers].max())
+                can_retry = retries[bad] < faults.max_retries
+                retry_slots = bad[can_retry]
+                drop_slots = bad[~can_retry]
+                for s in retry_slots:
+                    # exponential-backoff re-dispatch of the SAME client on
+                    # the same slot and snapshot: the failure is noticed at
+                    # the popped finish time, the retry starts after the
+                    # backoff, with fresh fault draws at the current model
+                    # version (transient slowness / crashes clear on retry)
+                    retries[s] += 1
+                    cid = int(slot_client[s])
+                    backoff = faults.backoff_s * (2.0 ** float(retries[s] - 1))
+                    d_r, code_r, kind_r = _arm_faults(
+                        [cid], clock_fn.durations(client_pms[[cid]], cids=[cid]),
+                        version,
+                    )
+                    slot_fail[s] = code_r[0]
+                    slot_kind[s] = kind_r[0]
+                    queue.push(s, float(queue.finish[s]) + backoff + float(d_r[0]), cid)
+                pend_retried += int(retry_slots.size)
+                if drop_slots.size:
+                    # retries exhausted: free the slot and the client — the
+                    # step's idle-assignment path backfills from selection
+                    pend_dropped += int(drop_slots.size)
+                    active[drop_slots] = False
+                    in_flight_clients[slot_client[drop_slots]] = False
+                if ok_l.size == 0 and drop_slots.size == 0:
+                    continue  # pure-retry event: no aggregation happens
+                landers = ok_l
+                land = np.zeros((m,), bool)
+                land[landers] = True
+                land_finish = queue.finish[landers].copy()
+                new_clock = notice_max + comm.server_latency_s
+                force = bool(int((active & ~land).sum()) == 0)
+            else:
+                land = np.zeros((m,), bool)
+                land[landers] = True
+                land_finish = queue.finish[landers].copy()
+                new_clock = float(land_finish.max()) + comm.server_latency_s
+                force = bool(n_active - k == 0)
             staleness = np.where(land, version - dispatch_version, 0).astype(np.int32)
             landed_clients = slot_client[landers]
             idle_now = ~in_flight_clients
             idle_now[landed_clients] = True
-            force = bool(n_active - k == 0)
 
             args = (
                 state,
@@ -950,6 +1284,8 @@ class AsyncScheduler:
                 jnp.asarray(idle_now),
                 jnp.asarray(force),
             )
+            if faulty:
+                args = args + (jnp.asarray(slot_kind),)
             if prof is not None:
                 prof.begin_chunk(t, 1)
                 if not isinstance(step, jax.stages.Compiled):
@@ -977,6 +1313,14 @@ class AsyncScheduler:
             if disp_slots.size:
                 disp_cids = slot_client[disp_slots]
                 d_disp = clock_fn.durations(client_pms[disp_cids], cids=disp_cids)
+                if faulty:
+                    # fresh fault draws at the version these slots train from
+                    d_disp, code_d, kind_d = _arm_faults(
+                        disp_cids, d_disp, version + 1
+                    )
+                    slot_fail[disp_slots] = code_d
+                    slot_kind[disp_slots] = kind_d
+                    retries[disp_slots] = 0
                 for s, f, cid in zip(disp_slots, new_clock + d_disp, disp_cids):
                     queue.push(int(s), float(f), int(cid))
             dispatch_version = np.where(dispatched, version + 1, dispatch_version)
@@ -1000,7 +1344,14 @@ class AsyncScheduler:
             clock_hist.append(new_clock)
             stale_hist.append(float(out["staleness_mean"]))
             flight_hist.append(int(in_flight_clients.sum()))
+            rejected_hist.append(int(out["rejected"]) if "rejected" in out else 0)
             if recorder is not None:
+                fault_kw = {}
+                if faulty:
+                    fault_kw = dict(
+                        retried=pend_retried, timed_out=pend_timeout,
+                        dropped=pend_dropped,
+                    )
                 recorder.on_async_event(
                     t=t, acc=np.asarray(out["acc"]), sel=sel_hist[-1],
                     tx=tx_hist[-1], pms=pms_hist[-1], wire=wire_hist[-1],
@@ -1010,11 +1361,13 @@ class AsyncScheduler:
                     merge_discount=float(out["merge_discount_mean"]),
                     landed_clients=landed_clients, landed_finish=land_finish,
                     landed_staleness=staleness[landers],
+                    rejected=rejected_hist[-1], **fault_kw,
                 )
                 if dispatched.any():  # re-dispatches cut at the new clock
                     recorder.on_async_dispatch(
                         slot_client[dispatched], new_clock, client_pms
                     )
+            pend_retried = pend_timeout = pend_dropped = 0
             sim_clock = new_clock
             version += 1
             if progress and (t % 10 == 0 or t == cfg.rounds - 1):
@@ -1022,6 +1375,42 @@ class AsyncScheduler:
                     t, float(np.mean(out["acc"])), int(land.sum()),
                     new_clock, stale_hist[-1],
                 ))
+            t += 1
+            if ckpt_dir and checkpoint_every and t % checkpoint_every == 0:
+                # full resume state: AsyncState + scalars via repro.checkpoint,
+                # the host dispatch plane + accumulated history verbatim
+                save_fl_state(
+                    {
+                        "state": jax.device_get(state),
+                        "sim_clock": float(sim_clock),
+                        "version": int(version),
+                    },
+                    ckpt_dir, t,
+                )
+                host_arrays = {
+                    "slot_client": slot_client,
+                    "client_pms": client_pms,
+                    "active": active,
+                    "in_flight_clients": in_flight_clients,
+                    "dispatch_version": dispatch_version,
+                    "slot_fail": slot_fail,
+                    "slot_kind": slot_kind,
+                    "retries": retries,
+                    "queue_finish": np.asarray(queue.finish, np.float64),
+                    "acc": np.stack(accs),
+                    "selected": np.stack(sel_hist),
+                    "tx_params": np.asarray(tx_hist),
+                    "pms": np.stack(pms_hist),
+                    "round_time": np.asarray(times),
+                    "wire": np.asarray(wire_hist),
+                    "sim_clock_hist": np.asarray(clock_hist),
+                    "staleness": np.asarray(stale_hist),
+                    "in_flight_hist": np.asarray(flight_hist, np.int64),
+                    "rejected": np.asarray(rejected_hist, np.int64),
+                }
+                if n_edges >= 1:
+                    host_arrays["tx_edge_bytes"] = np.stack(edge_hist)
+                save_host_arrays(host_arrays, ckpt_dir, f"hist_{t:05d}")
 
         acc_pc = np.stack(accs)
         wire = np.asarray(wire_hist)
@@ -1038,6 +1427,7 @@ class AsyncScheduler:
             staleness_mean=np.asarray(stale_hist),
             in_flight=np.asarray(flight_hist, np.int64),
             tx_edge_bytes=np.stack(edge_hist) if n_edges >= 1 else None,
+            rejected_updates=np.asarray(rejected_hist, np.int64),
         )
         if recorder is not None:
             recorder.close(h)

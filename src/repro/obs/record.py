@@ -307,13 +307,16 @@ class RunRecorder:
 
     def on_sync_chunk(self, *, t0: int, acc, sel, pms, wire, tx, times,
                       update_norm, lanes: int, host_gather_ms=None,
-                      staged_bytes=None):
+                      staged_bytes=None, rejected=None, dropped=None):
         """Record one fused chunk from its stacked ``(n, C)`` out leaves —
         one vectorized pass over the chunk, no extra device sync (the
         scheduler already holds the numpy arrays). ``host_gather_ms`` /
         ``staged_bytes`` are the host-population runners' per-round staging
         costs ((n,) sequences); the columns appear only on host-plane
-        runs."""
+        runs. ``rejected`` ((n,) finite-guard rejections) and ``dropped``
+        ((n,) crash/deadline dropouts, fault-mode only) follow the same
+        optional-column pattern, with nonzero rounds additionally marked
+        as fault instants on the trace."""
         n = acc.shape[0]
         acc_mean = acc.mean(axis=1)
         acc_min = acc.min(axis=1)
@@ -354,6 +357,15 @@ class RunRecorder:
                 extra["host_gather_ms"] = float(host_gather_ms[i])
             if staged_bytes is not None:
                 extra["staged_bytes"] = float(staged_bytes[i])
+            if rejected is not None:
+                extra["rejected"] = int(np.asarray(rejected)[i])
+            if dropped is not None:
+                extra["dropped"] = int(np.asarray(dropped)[i])
+            if tb is not None and (extra.get("rejected") or extra.get("dropped")):
+                tb.instant("fault", PID_SERVER, 0, s1,
+                           {"t": int(t0 + i),
+                            "rejected": extra.get("rejected", 0),
+                            "dropped": extra.get("dropped", 0)})
             self._row(
                 t=int(t0 + i),
                 acc_mean=float(acc_mean[i]),
@@ -393,14 +405,25 @@ class RunRecorder:
                        dt: float, new_clock: float, staleness_mean: float,
                        in_flight: int, buffer_k: int, update_norm,
                        merge_discount: float | None,
-                       landed_clients, landed_finish, landed_staleness):
+                       landed_clients, landed_finish, landed_staleness,
+                       rejected=None, retried=None, timed_out=None,
+                       dropped=None):
         """Record one buffered-aggregation event: the landing clients'
         dispatch->train->upload spans (ending at the exact finish times the
-        event queue popped), the aggregation instant, and the metric row."""
+        event queue popped), the aggregation instant, and the metric row.
+        ``rejected`` (finite-guard rejections this event) and the
+        fault-mode counters ``retried``/``timed_out``/``dropped`` (slot
+        failures noticed since the previous event) are optional columns;
+        nonzero fault counts also land as fault instants on the trace."""
         sel = np.asarray(sel, bool)
         n_landed = int(sel.sum())
         un = np.asarray(update_norm, np.float64)
         un_mean = float((un * sel).sum() / max(n_landed, 1))
+        fault_cols = {}
+        for key, val in (("rejected", rejected), ("retried", retried),
+                         ("timed_out", timed_out), ("dropped", dropped)):
+            if val is not None:
+                fault_cols[key] = int(val)
         tb = self._trace
         if tb is not None:
             for c, f, st in zip(
@@ -427,6 +450,9 @@ class RunRecorder:
                  "landed": [int(c) for c in np.asarray(landed_clients)],
                  "finish_s": [float(f) for f in np.asarray(landed_finish)]},
             )
+            if any(fault_cols.values()):
+                tb.instant("fault", PID_SERVER, 0, float(new_clock),
+                           {"t": int(t), **fault_cols})
         self._row(
             t=int(t),
             acc_mean=float(np.mean(acc)),
@@ -444,5 +470,6 @@ class RunRecorder:
             merge_discount_mean=(
                 None if merge_discount is None else float(merge_discount)
             ),
+            **fault_cols,
         )
         self._sim_clock = float(new_clock)

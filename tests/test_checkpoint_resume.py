@@ -1,0 +1,136 @@
+"""Checkpoint/resume: a run interrupted at round t and resumed from its
+snapshot must be bitwise-identical to the uninterrupted run — on every
+FLHistory lane, across both schedulers, both population placements, the
+stateful-FT and lossy-int8 golden configs, and the memmap-backed
+``PopulationStore``."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.data import make_federated_classification
+from repro.fl import FLConfig, run_federated
+from repro.fl.population import run_host_sync
+from repro.fl.sched import resolve_checkpoint_dir
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    return make_federated_classification(
+        n_clients=8, n_classes=4, n_features=20,
+        samples_per_client_range=(60, 90), dirichlet_alpha=50.0,
+        client_shift=0.05, class_sep=5.0, seed=1,
+    )
+
+
+# the four committed golden configs (tests/test_fl_api.py::_GOLDEN)
+_GOLDEN_CFGS = {
+    "acsp-fl+dld+float32": dict(),
+    "fedavg+none+float32": dict(strategy="fedavg", personalization="none",
+                                fraction=1.0),
+    "oort+ft+float32": dict(strategy="oort", personalization="ft",
+                            fraction=0.5),
+    "acsp-fl+dld+int8": dict(codec="int8"),
+}
+
+
+def _assert_history_equal(h_full, h_res):
+    for field in h_full._fields:
+        a, b = getattr(h_full, field), getattr(h_res, field)
+        if a is None and b is None:
+            continue
+        assert a is not None and b is not None, field
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=field)
+
+
+def _interrupt_and_resume(ds, cfg_kw, ckpt_dir, stop_at=2, rounds=5):
+    """Run to ``stop_at`` with checkpointing, then resume to ``rounds``."""
+    run_federated(ds, FLConfig(rounds=stop_at, epochs=1, **cfg_kw),
+                  checkpoint_every=stop_at, checkpoint_dir=ckpt_dir)
+    return run_federated(ds, FLConfig(rounds=rounds, epochs=1, **cfg_kw),
+                         resume_from=ckpt_dir)
+
+
+@pytest.mark.parametrize("name", sorted(_GOLDEN_CFGS))
+def test_sync_resume_bitwise_on_goldens(small_ds, tmp_path, name):
+    cfg_kw = _GOLDEN_CFGS[name]
+    h_full = run_federated(small_ds, FLConfig(rounds=5, epochs=1, **cfg_kw))
+    h_res = _interrupt_and_resume(small_ds, cfg_kw, str(tmp_path / "ckpt"))
+    _assert_history_equal(h_full, h_res)
+
+
+@pytest.mark.parametrize("name", ["oort+ft+float32", "acsp-fl+dld+int8"])
+def test_async_resume_bitwise(small_ds, tmp_path, name):
+    # stateful FT and lossy int8 under the event-driven scheduler: the
+    # snapshot must carry the EF residuals, slot plane, and event queue
+    cfg_kw = dict(_GOLDEN_CFGS[name], scheduler="async", buffer_k=2,
+                  max_concurrency=4)
+    h_full = run_federated(small_ds, FLConfig(rounds=5, epochs=1, **cfg_kw))
+    h_res = _interrupt_and_resume(small_ds, cfg_kw, str(tmp_path / "ckpt"))
+    _assert_history_equal(h_full, h_res)
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_host_population_resume_bitwise(small_ds, tmp_path, mode):
+    cfg_kw = dict(host_population=1)
+    if mode == "async":
+        cfg_kw.update(scheduler="async", buffer_k=2, max_concurrency=4)
+    h_full = run_federated(small_ds, FLConfig(rounds=5, epochs=1, **cfg_kw))
+    h_res = _interrupt_and_resume(small_ds, cfg_kw, str(tmp_path / "ckpt"))
+    _assert_history_equal(h_full, h_res)
+
+
+def test_memmap_store_resume_bitwise(small_ds, tmp_path):
+    # the interrupted and resumed runs each get their own memmap backing;
+    # the snapshot (not the stale backing files) must carry the state
+    cfg_kw = dict(strategy="oort", personalization="ft", fraction=0.5,
+                  codec="int8", host_population=1)
+    ckpt = str(tmp_path / "ckpt")
+    h_full = run_host_sync(
+        small_ds, FLConfig(rounds=5, epochs=1, **cfg_kw),
+        backing_dir=str(tmp_path / "pop_full"),
+    )
+    run_host_sync(
+        small_ds, FLConfig(rounds=2, epochs=1, **cfg_kw),
+        backing_dir=str(tmp_path / "pop_a"),
+        checkpoint_every=2, checkpoint_dir=ckpt,
+    )
+    h_res = run_host_sync(
+        small_ds, FLConfig(rounds=5, epochs=1, **cfg_kw),
+        backing_dir=str(tmp_path / "pop_b"), resume_from=ckpt,
+    )
+    _assert_history_equal(h_full, h_res)
+    # the resumed run's backing slabs were rehydrated and written through
+    assert any(n.startswith("local_") for n in os.listdir(str(tmp_path / "pop_b")))
+
+
+def test_resume_with_faults_bitwise(small_ds, tmp_path):
+    # fault plans are a pure function of (config, seed, round), so resuming
+    # mid-run replays the exact same crash/corruption schedule
+    cfg_kw = dict(dropout_rate=0.3, deadline_s=10.0, corrupt_rate=0.2)
+    h_full = run_federated(small_ds, FLConfig(rounds=5, epochs=1, **cfg_kw))
+    h_res = _interrupt_and_resume(small_ds, cfg_kw, str(tmp_path / "ckpt"))
+    _assert_history_equal(h_full, h_res)
+
+
+def test_resume_from_doubles_as_write_dir(small_ds, tmp_path):
+    # an interrupted run resumed with only resume_from keeps checkpointing
+    # into the same directory
+    d = str(tmp_path / "ckpt")
+    run_federated(small_ds, FLConfig(rounds=2, epochs=1),
+                  checkpoint_every=2, checkpoint_dir=d)
+    run_federated(small_ds, FLConfig(rounds=4, epochs=1),
+                  checkpoint_every=2, resume_from=d)
+    rounds = sorted(
+        fn for fn in os.listdir(d) if fn.endswith("_meta.json")
+    )
+    assert rounds == ["round_00002_meta.json", "round_00004_meta.json"]
+
+
+def test_checkpoint_every_requires_dir():
+    with pytest.raises(ValueError, match="checkpoint"):
+        resolve_checkpoint_dir(2, None, None)
+    assert resolve_checkpoint_dir(0, None, None) is None
+    assert resolve_checkpoint_dir(2, "/tmp/x", None) == "/tmp/x"
+    assert resolve_checkpoint_dir(2, None, "/tmp/y") == "/tmp/y"

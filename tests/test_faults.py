@@ -1,0 +1,253 @@
+"""Failure-semantics layer: deterministic fault plans, dropout/deadline
+partial aggregation, the always-on finite-delta guard, corruption
+rejection, async retry/backoff invariants, and device/host placement
+parity under faults.
+
+The hypothesis property test for the plan-determinism contract lives in
+tests/test_property.py (optional dev dependency); the tests here always
+run."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FaultConfig
+from repro.data import make_federated_classification
+from repro.fl import FLConfig, run_federated
+from repro.fl.faults import FaultPlan, apply_corruption, compile_fault_plan
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    return make_federated_classification(
+        n_clients=8, n_classes=4, n_features=20,
+        samples_per_client_range=(60, 90), dirichlet_alpha=50.0,
+        client_shift=0.05, class_sep=5.0, seed=1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# FaultConfig: defaults off, flat kwargs, validation
+# ---------------------------------------------------------------------------
+
+
+def test_fault_defaults_disabled():
+    f = FaultConfig()
+    assert not f.enabled
+    assert FLConfig().faults == f
+    # flat fault kwargs land in the nested group
+    cfg = FLConfig(dropout_rate=0.25, deadline_s=30.0, corrupt_rate=0.1,
+                   max_retries=5)
+    assert cfg.faults.enabled
+    assert cfg.faults.dropout_rate == 0.25
+    assert cfg.faults.deadline_s == 30.0
+    assert cfg.faults.corrupt_rate == 0.1
+    assert cfg.faults.max_retries == 5
+    # flat reads mirror the group
+    assert cfg.dropout_rate == 0.25 and cfg.deadline_s == 30.0
+
+
+def test_fault_config_validation():
+    with pytest.raises(ValueError):
+        FaultConfig(dropout_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultConfig(corrupt_rate=-0.1)
+    with pytest.raises(ValueError):
+        FaultConfig(max_retries=-1)
+
+
+# ---------------------------------------------------------------------------
+# fault plan: deterministic, prefix-stable, rate-respecting
+# ---------------------------------------------------------------------------
+
+
+def test_plan_deterministic_and_prefix_stable():
+    f = FaultConfig(dropout_rate=0.4, slow_rate=0.3, corrupt_rate=0.3)
+    p = compile_fault_plan(f, seed=7, t=3, n_clients=32)
+    q = compile_fault_plan(f, seed=7, t=3, n_clients=32)
+    for a, b in zip(p, q):
+        np.testing.assert_array_equal(a, b)
+    wide = compile_fault_plan(f, seed=7, t=3, n_clients=64)
+    np.testing.assert_array_equal(wide.crash[:32], p.crash)
+    np.testing.assert_array_equal(wide.slow[:32], p.slow)
+    np.testing.assert_array_equal(wide.corrupt[:32], p.corrupt)
+
+
+def test_plan_varies_by_round_and_seed():
+    f = FaultConfig(dropout_rate=0.5)
+    p0 = compile_fault_plan(f, seed=7, t=0, n_clients=256)
+    p1 = compile_fault_plan(f, seed=7, t=1, n_clients=256)
+    p_s = compile_fault_plan(f, seed=8, t=0, n_clients=256)
+    assert not np.array_equal(p0.crash, p1.crash)
+    assert not np.array_equal(p0.crash, p_s.crash)
+    f2 = dataclasses.replace(f, fault_seed=1)
+    p_f = compile_fault_plan(f2, seed=7, t=0, n_clients=256)
+    assert not np.array_equal(p0.crash, p_f.crash)
+
+
+def test_plan_disabled_lanes_are_identity():
+    p = compile_fault_plan(FaultConfig(), seed=0, t=0, n_clients=16)
+    assert isinstance(p, FaultPlan)
+    assert not p.crash.any()
+    assert (p.slow == 1.0).all()
+    assert (p.corrupt == 0).all()
+
+
+def test_apply_corruption_kinds():
+    import jax.numpy as jnp
+
+    x = {"w": jnp.ones((4, 3, 2))}
+    kinds = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    y = np.asarray(apply_corruption(x, kinds, scale=1e6)["w"])
+    np.testing.assert_array_equal(y[0], 1.0)  # kind 0: bit-identical
+    assert np.isnan(y[1]).all()
+    assert np.isposinf(y[2]).all()
+    np.testing.assert_array_equal(y[3], 1e6)
+
+
+# ---------------------------------------------------------------------------
+# fault-off runs are bit-identical to runs with no FaultConfig at all
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_explicit_disabled_faults_bit_identical(small_ds, mode):
+    kw = dict(rounds=3, epochs=1, seed=1, scheduler=mode)
+    if mode == "async":
+        kw.update(buffer_k=2, max_concurrency=4)
+    h0 = run_federated(small_ds, FLConfig(**kw))
+    h1 = run_federated(small_ds, FLConfig(faults=FaultConfig(), **kw))
+    np.testing.assert_array_equal(h0.accuracy_mean, h1.accuracy_mean)
+    np.testing.assert_array_equal(h0.selected, h1.selected)
+    np.testing.assert_array_equal(h0.round_time, h1.round_time)
+    assert (h0.rejected_updates == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# sync: dropout + deadline degrade to partial aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_sync_dropout_shrinks_effective_cohort(small_ds):
+    kw = dict(rounds=4, epochs=1, seed=1, strategy="fedavg",
+              personalization="none", fraction=1.0)
+    h_free = run_federated(small_ds, FLConfig(**kw))
+    h_drop = run_federated(small_ds, FLConfig(dropout_rate=0.4, **kw))
+    k_free = h_free.selected.sum(axis=1)
+    k_drop = h_drop.selected.sum(axis=1)
+    # crashed clients are masked out of aggregation: K_effective < K
+    assert (k_drop <= k_free).all() and (k_drop < k_free).any()
+    assert np.isfinite(h_drop.accuracy_mean).all()
+    # the surviving subset is exactly the plan's non-crashed lanes
+    for t in range(4):
+        plan = compile_fault_plan(FLConfig(dropout_rate=0.4, **kw).faults,
+                                  seed=1, t=t, n_clients=8)
+        assert not (h_drop.selected[t] & plan.crash).any()
+
+
+def test_sync_deadline_drops_stragglers(small_ds):
+    kw = dict(rounds=4, epochs=1, seed=1, strategy="fedavg",
+              personalization="none", fraction=1.0, heterogeneity=1.0)
+    h_free = run_federated(small_ds, FLConfig(**kw))
+    # a deadline at the median round time must cut someone and cap the round
+    deadline = float(np.median(h_free.round_time)) * 0.5
+    h = run_federated(small_ds, FLConfig(deadline_s=deadline, **kw))
+    assert (h.selected.sum(axis=1) < h_free.selected.sum(axis=1)).any()
+    # the barrier is capped: round time never exceeds deadline + server hop
+    slack = h_free.round_time.max() - h_free.round_time.min()
+    assert h.round_time.max() <= deadline + slack + 1.0
+
+
+def test_sync_all_dead_round_falls_back_to_fault_free(small_ds):
+    # at dropout_rate=0.99 / fault_seed=0 the sampled plan crashes all 8
+    # clients in rounds 0-2 (asserted below); the scheduler reruns such
+    # rounds fault-free rather than aggregating nothing
+    kw = dict(rounds=3, epochs=1, seed=1, strategy="fedavg",
+              personalization="none", fraction=1.0)
+    cfg = FLConfig(dropout_rate=0.99, **kw)
+    for t in range(3):
+        assert compile_fault_plan(cfg.faults, seed=1, t=t, n_clients=8).crash.all()
+    h = run_federated(small_ds, cfg)
+    h_free = run_federated(small_ds, FLConfig(**kw))
+    np.testing.assert_array_equal(h.accuracy_mean, h_free.accuracy_mean)
+
+
+# ---------------------------------------------------------------------------
+# corruption + the always-on finite guard
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_corruption_rejected_and_run_stays_finite(small_ds, mode):
+    kw = dict(rounds=4, epochs=1, seed=1, scheduler=mode)
+    if mode == "async":
+        kw.update(buffer_k=2, max_concurrency=4)
+    h = run_federated(small_ds, FLConfig(corrupt_rate=0.5, **kw))
+    assert h.rejected_updates is not None
+    assert h.rejected_updates.sum() > 0
+    # the guard zero-masks NaN/Inf deltas before any aggregator sees them
+    assert np.isfinite(h.accuracy_mean).all()
+    assert np.isfinite(h.accuracy_per_client).all()
+
+
+def test_finite_update_guard_unit():
+    import jax.numpy as jnp
+
+    from repro.core.aggregation import finite_update_guard
+
+    sel = jnp.asarray([True, True, True, False])
+    norms = jnp.asarray([1.0, np.nan, np.inf, np.nan])
+    ok, n = finite_update_guard(sel, norms)
+    np.testing.assert_array_equal(np.asarray(ok), [True, False, False, False])
+    assert int(n) == 2  # unselected lane 3 is not counted
+    # optional norm ceiling
+    ok2, n2 = finite_update_guard(sel, jnp.asarray([1.0, 50.0, 2.0, 1.0]),
+                                  max_norm=10.0)
+    np.testing.assert_array_equal(np.asarray(ok2), [True, False, True, True])
+    assert int(n2) == 1
+
+
+# ---------------------------------------------------------------------------
+# async: retry/backoff and the in-flight invariant
+# ---------------------------------------------------------------------------
+
+
+def test_async_faults_respect_max_concurrency(small_ds):
+    cfg = FLConfig(rounds=6, epochs=1, seed=1, scheduler="async",
+                   buffer_k=2, max_concurrency=4, dropout_rate=0.4,
+                   deadline_s=5.0, max_retries=2)
+    h = run_federated(small_ds, cfg)
+    assert int(h.in_flight.max()) <= 4
+    assert np.isfinite(h.accuracy_mean).all()
+
+
+def test_async_retries_capped(small_ds):
+    # max_retries=0: every failure is dropped immediately, run still finishes
+    cfg = FLConfig(rounds=4, epochs=1, seed=1, scheduler="async",
+                   buffer_k=2, max_concurrency=4, dropout_rate=0.5,
+                   max_retries=0)
+    h = run_federated(small_ds, cfg)
+    assert len(h.accuracy_mean) >= 1
+    assert np.isfinite(h.accuracy_mean).all()
+
+
+# ---------------------------------------------------------------------------
+# placement parity: device plane and host population plane agree under faults
+# ---------------------------------------------------------------------------
+
+
+def test_fault_trajectory_placement_independent(small_ds):
+    kw = dict(rounds=3, epochs=1, seed=1, dropout_rate=0.4, deadline_s=8.0)
+    h_dev = run_federated(small_ds, FLConfig(**kw))
+    h_host = run_federated(small_ds, FLConfig(host_population=1, **kw))
+    np.testing.assert_array_equal(h_dev.accuracy_mean, h_host.accuracy_mean)
+    np.testing.assert_array_equal(h_dev.selected, h_host.selected)
+    np.testing.assert_array_equal(h_dev.round_time, h_host.round_time)
+
+
+def test_faults_reject_cohort_sharding(small_ds):
+    cfg = FLConfig(rounds=2, epochs=1, seed=1, dropout_rate=0.3,
+                   cohort_size=4, cohort_devices=-1)
+    with pytest.raises(ValueError):
+        run_federated(small_ds, cfg)

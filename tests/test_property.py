@@ -141,6 +141,37 @@ def test_cohort_gather_scatter_roundtrip(c, k_frac, seed):
         np.testing.assert_array_equal(leaf[idx_np], (orig + 1)[idx_np])
 
 
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    fault_seed=st.integers(min_value=0, max_value=1000),
+    t=st.integers(min_value=0, max_value=200),
+    c=st.integers(min_value=1, max_value=64),
+    extra=st.integers(min_value=0, max_value=64),
+)
+def test_fault_plan_deterministic_and_prefix_stable(seed, fault_seed, t, c, extra):
+    """Fault-plan determinism contract (repro.fl.faults): the plan is a pure
+    function of (config, run seed, round, client id) — recompiling yields
+    identical lanes, and growing the population only appends lanes (prefix
+    stability), so cohort composition/order/placement cannot change any
+    client's fate."""
+    from repro.configs.base import FaultConfig
+    from repro.fl.faults import compile_fault_plan
+
+    faults = FaultConfig(dropout_rate=0.4, slow_rate=0.3, corrupt_rate=0.3,
+                         fault_seed=fault_seed)
+    p = compile_fault_plan(faults, seed, t, c)
+    p_again = compile_fault_plan(faults, seed, t, c)
+    for a, b in zip(p, p_again):
+        np.testing.assert_array_equal(a, b)
+    p_wide = compile_fault_plan(faults, seed, t, c + extra)
+    np.testing.assert_array_equal(p_wide.crash[:c], p.crash)
+    np.testing.assert_array_equal(p_wide.slow[:c], p.slow)
+    np.testing.assert_array_equal(p_wide.corrupt[:c], p.corrupt)
+    # a different round re-rolls every lane's fate independently
+    q = compile_fault_plan(faults, seed, t + 1, c)
+    assert q.crash.shape == p.crash.shape
+
+
 @given(seed=st.integers(min_value=0, max_value=2**16))
 def test_partial_aggregate_idempotent_on_identical_clients(seed):
     rng = np.random.default_rng(seed)
